@@ -1,0 +1,76 @@
+//! The paper's §V.B design case, end to end: every number the paper
+//! derives for the BERT-Base accelerator, recomputed and asserted.
+//!
+//! ```sh
+//! cargo run --release --example bert_design_case
+//! ```
+
+use cat::arch::ParallelMode;
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{
+    customize, eq3_mmsz, eq4_plio_aie, eq7_p_atb, factor1_mha, factor2_mha_bytes,
+    CustomizeOptions,
+};
+use cat::workload::{layer_workload, MmSite};
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    println!("== paper §V.B design case: BERT-Base on VCK5000 ==\n");
+
+    // --- load analysis ---
+    let wl = layer_workload(&model, 64, true);
+    println!("one EDPU iteration (MHA + FFN) requires:");
+    for mm in &wl.mms {
+        println!(
+            "  {:?}: {} x {}x{}x{} MM",
+            mm.site, mm.count, mm.m, mm.k, mm.n
+        );
+    }
+    let qkv = wl.mms_at(MmSite::QkvLb).unwrap();
+    let proj = wl.mms_at(MmSite::ProjLb).unwrap();
+    assert_eq!(qkv.count + proj.count, 4, "paper: 4x 256x768x768");
+    assert_eq!(wl.mms_at(MmSite::AtbPre).unwrap().count, 12);
+    assert_eq!(wl.mms_at(MmSite::AtbPost).unwrap().count, 12);
+
+    // --- Eq. 3 / Eq. 4 ---
+    let mmsz = eq3_mmsz(&hw, 1);
+    let plio = eq4_plio_aie(&hw, mmsz, 1);
+    println!("\nEq.3: MMSZ_AIE = {mmsz}   (paper: 64)");
+    println!("Eq.4: PLIO_AIE = {plio}   (paper: 4)");
+    assert_eq!((mmsz, plio), (64, 4));
+
+    // --- Eq. 7: P_ATB ---
+    let p_atb = eq7_p_atb(&model, mmsz, plio).unwrap();
+    println!("Eq.7: P_ATB    = {p_atb}   (paper: 4 — QKV LB outputs 256x256, one head needs 256x64)");
+    assert_eq!(p_atb, 4);
+
+    // --- Eq. 5: parallel mode ---
+    let f1 = factor1_mha(&model, &hw, mmsz, plio);
+    let f2 = factor2_mha_bytes(&model, mmsz, plio, p_atb);
+    println!(
+        "Eq.5: Factor1 = {f1:.2} (< PRG_MAX_Pipeline_Depth = {})",
+        hw.prg_max_pipeline_depth
+    );
+    println!(
+        "Eq.5: Factor2 = {:.4} MiB (< Total_Buffer = {:.1} MiB)   (paper: 7.5625 MiB)",
+        f2 as f64 / (1024.0 * 1024.0),
+        hw.onchip_sram_bytes as f64 / (1024.0 * 1024.0)
+    );
+    assert_eq!(f2, 7_929_856); // exactly 7.5625 MiB
+
+    // --- full plan ---
+    let plan = customize(&model, &hw, &CustomizeOptions::default())?;
+    assert_eq!(plan.mha.mode, ParallelMode::FullyPipelined);
+    println!("\n=> fully-pipelined parallelization mode (as the paper concludes)");
+    println!(
+        "=> {} AIEs deployed = 4 Large (256) + 4 ATB x (2 Small + 1 Standard) (96)",
+        plan.cores_deployed()
+    );
+    assert_eq!(plan.cores_deployed(), 352);
+    assert!((plan.deployment_rate() - 0.88).abs() < 1e-9);
+    println!("=> AIE deployment rate 88% (paper Table V)");
+
+    println!("\ndesign case checks ALL PASSED");
+    Ok(())
+}

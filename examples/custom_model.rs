@@ -1,0 +1,65 @@
+//! Deriving accelerators for models beyond the paper's two benchmarks —
+//! the "customized accelerator family" claim: every model gets its own
+//! plan, and the Eq. 5/6 decisions flip where they should.
+//!
+//! ```sh
+//! cargo run --release --example custom_model
+//! ```
+
+use cat::arch::ParallelMode;
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{customize, CustomizeOptions};
+use cat::sched::run_edpu;
+
+fn model(name: &str, heads: usize, e: usize, dff: usize, l: usize, layers: usize) -> ModelConfig {
+    ModelConfig { name: name.into(), heads, embed_dim: e, dff, seq_len: l, layers, bits: 8 }
+}
+
+fn main() -> anyhow::Result<()> {
+    let hw = HardwareConfig::vck5000();
+    let zoo = vec![
+        model("bert-tiny", 2, 128, 512, 128, 2),
+        model("bert-small", 8, 512, 2048, 256, 4),
+        ModelConfig::bert_base(),
+        model("bert-large", 16, 1024, 4096, 384, 24),
+        model("deit-small", 6, 384, 1536, 197, 12),
+        model("gpt2-medium-ctx1k", 16, 1024, 4096, 1024, 24),
+        model("long-seq-4k", 12, 768, 3072, 4096, 12),
+    ];
+
+    println!(
+        "{:<20} {:>5} {:>6} {:>6} {:>6} {:>16} {:>6} {:>9} {:>10}",
+        "model", "MMSZ", "PLIO", "P_ATB", "AIEs", "MHA mode", "dep%", "TOPS", "ms/item"
+    );
+    for m in zoo {
+        let plan = customize(&m, &hw, &CustomizeOptions::default())?;
+        let r = run_edpu(&plan, 8)?;
+        println!(
+            "{:<20} {:>5} {:>6} {:>6} {:>6} {:>16} {:>5.0}% {:>9.2} {:>10.3}",
+            m.name,
+            plan.mmsz,
+            plan.plio_aie,
+            plan.p_atb,
+            plan.cores_deployed(),
+            plan.mha.mode.to_string(),
+            plan.deployment_rate() * 100.0,
+            r.tops(),
+            r.latency_per_item_ns() / 1e6,
+        );
+        // the family property: every plan is feasible on the board
+        assert!(plan.cores_deployed() <= hw.total_aie);
+    }
+
+    // long sequences blow the on-chip attention cache -> Eq. 5 must flip
+    // the MHA stage out of fully-pipelined mode.
+    let long = model("long-seq-4k", 12, 768, 3072, 4096, 12);
+    let plan = customize(&long, &hw, &CustomizeOptions::default())?;
+    assert_ne!(plan.mha.mode, ParallelMode::FullyPipelined);
+    println!(
+        "\nlong-seq-4k: Factor2 = {:.1} MiB > {:.1} MiB on-chip => {} (Eq. 5 flips the mode)",
+        plan.factor2_mha_bytes as f64 / (1024.0 * 1024.0),
+        hw.onchip_sram_bytes as f64 / (1024.0 * 1024.0),
+        plan.mha.mode
+    );
+    Ok(())
+}

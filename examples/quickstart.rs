@@ -1,0 +1,51 @@
+//! Quickstart: derive a customized accelerator for BERT-Base on a
+//! VCK5000 and simulate one EDPU execution.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{customize, CustomizeOptions};
+use cat::metrics::summarize;
+use cat::sched::run_edpu;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The two inputs to the CAT framework: a Transformer configuration
+    //    and a Versal ACAP board description.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+
+    // 2. Customize: Eq. 3-8 decide the three customizable attributes and
+    //    allocate AIE MM PUs to PRGs.
+    let plan = customize(&model, &hw, &CustomizeOptions::default())?;
+    println!("derived accelerator for {} on {}:", model.name, hw.name);
+    println!("  MMSZ_AIE = {}, PLIO_AIE = {}", plan.mmsz, plan.plio_aie);
+    println!("  MHA mode {}, FFN mode {}", plan.mha.mode, plan.ffn.mode);
+    println!("  P_ATB = {}", plan.p_atb);
+    println!(
+        "  {} / {} AIEs deployed ({:.0}%)",
+        plan.cores_deployed(),
+        hw.total_aie,
+        plan.deployment_rate() * 100.0
+    );
+
+    // 3. Simulate an EDPU execution at batch 16 (near peak, Fig. 5).
+    let report = run_edpu(&plan, 16)?;
+    let s = summarize(&plan, &report);
+    println!("\nsimulated performance (batch 16):");
+    println!("  MHA    : {:.3} ms/item, {:.1} TOPS", s.mha_latency_ms, s.mha_tops);
+    println!("  FFN    : {:.3} ms/item, {:.1} TOPS", s.ffn_latency_ms, s.ffn_tops);
+    println!(
+        "  System : {:.3} ms/item, {:.1} TOPS, {:.1} W, {:.0} GOPS/W",
+        s.sys_latency_ms, s.sys_tops, s.power_w, s.gops_per_w
+    );
+    println!(
+        "  AIE eff. utilization: MHA {:.0}%, FFN {:.0}%, avg {:.0}%",
+        s.mha_eff_util * 100.0,
+        s.ffn_eff_util * 100.0,
+        s.avg_eff_util * 100.0
+    );
+    println!("\n(paper Table VI: 0.118 ms, 35.2 TOPS, 67.6 W, 521 GOPS/W)");
+    Ok(())
+}

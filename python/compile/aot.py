@@ -1,0 +1,215 @@
+"""AOT compile path: lower every L2/L1 computation to HLO **text**.
+
+Run once by ``make artifacts``; python never appears on the request path.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (written to ``--out-dir``, default ``../artifacts``):
+
+====================  =======================================================
+encoder_layer_pallas  one EDPU call, Pallas-tiled (the decomposition proof)
+encoder_layer_fused   identical arithmetic, plain jnp (fast serving path)
+mha_stage             MHA Stage alone (Pallas)       — EDPU two-stage claim:
+ffn_stage             FFN Stage alone (Pallas)         ffn(mha(x)) == layer(x)
+mm_pu_large|standard|small  one PU invocation per Fig. 4 spec
+mm_tile               a single MMSZ^3 AIE-core tile MM
+softmax_row           PL softmax module (attention-shaped)
+layernorm             PL LayerNorm module
+gelu                  PL GELU module
+====================  =======================================================
+
+plus ``manifest.json`` describing every artifact's parameters (name, dtype,
+shape, order) and outputs so the rust runtime can feed literals blindly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import mm_pu as mmk
+from .kernels import plops
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _entry(name, params, outputs, meta=None):
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "params": [
+            {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in params
+        ],
+        "outputs": [
+            {"shape": list(s), "dtype": d} for (s, d) in outputs
+        ],
+        "meta": meta or {},
+    }
+
+
+def lower_encoder(cfg: M.ModelConfig, *, kernels: bool):
+    """Lower one encoder layer; params positional in PARAM_ORDER."""
+    shapes = M.param_shapes(cfg)
+    lp, e = cfg.padded_seq_len, cfg.embed_dim
+
+    def fn(x_q, x_scale, *flat):
+        p = dict(zip(M.PARAM_ORDER, flat))
+        return M.encoder_layer(x_q, x_scale, p, cfg, kernels=kernels)
+
+    args = [_spec((lp, e), "int8"), _spec((), "float32")]
+    args += [_spec(*shapes[n]) for n in M.PARAM_ORDER]
+    lowered = jax.jit(fn).lower(*args)
+    params = [("x_q", (lp, e), "int8"), ("x_scale", (), "float32")]
+    params += [(n,) + tuple(shapes[n]) for n in M.PARAM_ORDER]
+    params = [(n, s, d) for (n, s, d) in params]
+    outputs = [((lp, e), "float32"), ((lp, e), "int8"), ((), "float32")]
+    return lowered, params, outputs
+
+
+def lower_mha_stage(cfg: M.ModelConfig):
+    shapes = M.param_shapes(cfg)
+    names = ("wqkv", "sqkv", "bqkv", "wproj", "sproj", "bproj",
+             "ln1_g", "ln1_b")
+    lp, e = cfg.padded_seq_len, cfg.embed_dim
+
+    def fn(x_q, x_scale, *flat):
+        p = dict(zip(names, flat))
+        return (M.mha_stage(x_q, x_scale, p, cfg, kernels=True),)
+
+    args = [_spec((lp, e), "int8"), _spec((), "float32")]
+    args += [_spec(*shapes[n]) for n in names]
+    lowered = jax.jit(fn).lower(*args)
+    params = [("x_q", (lp, e), "int8"), ("x_scale", (), "float32")]
+    params += [(n,) + tuple(shapes[n]) for n in names]
+    return lowered, params, [((lp, e), "float32")]
+
+
+def lower_ffn_stage(cfg: M.ModelConfig):
+    shapes = M.param_shapes(cfg)
+    names = ("w1", "s1", "b1", "w2", "s2", "b2", "ln2_g", "ln2_b")
+    lp, e = cfg.padded_seq_len, cfg.embed_dim
+
+    def fn(h1, *flat):
+        p = dict(zip(names, flat))
+        return (M.ffn_stage(h1, p, cfg, kernels=True),)
+
+    args = [_spec((lp, e), "float32")]
+    args += [_spec(*shapes[n]) for n in names]
+    lowered = jax.jit(fn).lower(*args)
+    params = [("h1", (lp, e), "float32")]
+    params += [(n,) + tuple(shapes[n]) for n in names]
+    return lowered, params, [((lp, e), "float32")]
+
+
+def lower_pu(spec: str, mmsz: int):
+    m, n, k = mmk.pu_invocation_shape(spec, mmsz)
+
+    def fn(a, b):
+        return (mmk.mm_pu(a, b, mmsz=mmsz),)
+
+    lowered = jax.jit(fn).lower(_spec((m, k), "int8"), _spec((k, n), "int8"))
+    params = [("a", (m, k), "int8"), ("b", (k, n), "int8")]
+    return lowered, params, [((m, n), "int32")], {"spec": spec, "m": m, "n": n, "k": k}
+
+
+def lower_mm_tile(mmsz: int):
+    def fn(a, b):
+        return (mmk.mm_pu(a, b, mmsz=mmsz),)
+
+    s = _spec((mmsz, mmsz), "int8")
+    lowered = jax.jit(fn).lower(s, s)
+    params = [("a", (mmsz, mmsz), "int8"), ("b", (mmsz, mmsz), "int8")]
+    return lowered, params, [((mmsz, mmsz), "int32")]
+
+
+def lower_plops(cfg: M.ModelConfig):
+    lp, e, d = cfg.padded_seq_len, cfg.embed_dim, cfg.dff
+    dh = cfg.head_dim
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    sm = jax.jit(lambda x: (plops.softmax_pl(x, scale=sm_scale),)).lower(
+        _spec((lp, lp), "float32"))
+    ln = jax.jit(lambda x, g, b: (plops.layernorm_pl(x, g, b),)).lower(
+        _spec((lp, e), "float32"), _spec((e,), "float32"), _spec((e,), "float32"))
+    ge = jax.jit(lambda x: (plops.gelu_pl(x),)).lower(_spec((lp, d), "float32"))
+    return {
+        "softmax_row": (sm, [("x", (lp, lp), "float32")],
+                        [((lp, lp), "float32")], {"scale": sm_scale}),
+        "layernorm": (ln, [("x", (lp, e), "float32"), ("g", (e,), "float32"),
+                           ("b", (e,), "float32")], [((lp, e), "float32")], {}),
+        "gelu": (ge, [("x", (lp, d), "float32")], [((lp, d), "float32")], {}),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--mmsz", type=int, default=mmk.MMSZ_AIE)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # BERT-Base and ViT-Base share (E, Dff, H) and the padded L (197->256),
+    # so one lowered module serves both; the manifest records logical L.
+    cfg = M.BERT_BASE
+    manifest = {"mmsz": args.mmsz, "models": {
+        "bert-base": {"heads": 12, "embed_dim": 768, "dff": 3072,
+                      "seq_len": 256, "padded_seq_len": 256, "layers": 12},
+        "vit-base": {"heads": 12, "embed_dim": 768, "dff": 3072,
+                     "seq_len": 197, "padded_seq_len": 256, "layers": 12},
+    }, "artifacts": []}
+
+    jobs = []
+    lowered, params, outs = lower_encoder(cfg, kernels=True)
+    jobs.append(("encoder_layer_pallas", lowered, params, outs, {}))
+    lowered, params, outs = lower_encoder(cfg, kernels=False)
+    jobs.append(("encoder_layer_fused", lowered, params, outs, {}))
+    lowered, params, outs = lower_mha_stage(cfg)
+    jobs.append(("mha_stage", lowered, params, outs, {}))
+    lowered, params, outs = lower_ffn_stage(cfg)
+    jobs.append(("ffn_stage", lowered, params, outs, {}))
+    for spec in mmk.PU_SPECS:
+        lowered, params, outs, meta = lower_pu(spec, args.mmsz)
+        jobs.append((f"mm_pu_{spec}", lowered, params, outs, meta))
+    lowered, params, outs = lower_mm_tile(args.mmsz)
+    jobs.append(("mm_tile", lowered, params, outs, {"mmsz": args.mmsz}))
+    for name, (lowered, params, outs, meta) in lower_plops(cfg).items():
+        jobs.append((name, lowered, params, outs, meta))
+
+    for name, lowered, params, outs, meta in jobs:
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(_entry(name, params, outs, meta))
+        print(f"  wrote {path}  ({len(text)/1024:.0f} KiB)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

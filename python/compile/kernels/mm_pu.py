@@ -1,0 +1,128 @@
+"""L1 — AIE MM PU tile kernel (Pallas).
+
+The paper's compute hot-spot is the AIE MM PU: a 2-D group of AIE cores,
+each computing an ``MMSZ_AIE^3`` int8 matrix-multiply out of its 32 KB
+window memory, fed by PLIO streams with double buffering (Eq. 3-4 of the
+paper).  On the TPU-style Pallas machine the same schedule is expressed as:
+
+* window tile (<= 1/4 of window memory per operand)  ->  ``BlockSpec``
+  ``(MMSZ, MMSZ)`` blocks resident in VMEM;
+* the PLIO / DMA HBM->window streaming order             ->  the Pallas grid
+  ``(M/MMSZ, N/MMSZ, K/MMSZ)`` with K innermost (the PU's accumulation
+  iteration);
+* the AIE vector processor's int8 MAC array          ->  the MXU via
+  ``jnp.dot(..., preferred_element_type=int32)``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same schedule to portable HLO,
+which is what the rust runtime loads.
+
+Correctness oracle: :mod:`compile.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge.  Satisfies Eq. 3 on both machines: 64*64 int8 = 4 KiB
+# <= M_Window/4 (32 KiB AIE window) and 64x64 is an MXU-native tile.
+MMSZ_AIE = 64
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One AIE-core step: multiply the resident window tiles, accumulate."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mmsz",))
+def mm_pu(a: jax.Array, b: jax.Array, *, mmsz: int = MMSZ_AIE) -> jax.Array:
+    """int8 x int8 -> int32 blocked matmul with the AIE MM PU schedule.
+
+    ``a``: int8 ``[M, K]``; ``b``: int8 ``[K, N]``.  ``M, K, N`` must be
+    multiples of ``mmsz`` (the paper pads — e.g. ViT's L=197 -> 256).
+    """
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, f"inner dims differ: {ka} vs {kb}"
+    assert m % mmsz == 0 and n % mmsz == 0 and ka % mmsz == 0, (
+        f"shapes ({m},{ka})x({kb},{n}) not multiples of MMSZ={mmsz}"
+    )
+    grid = (m // mmsz, n // mmsz, ka // mmsz)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mmsz, mmsz), lambda i, j, k: (i, k)),
+            pl.BlockSpec((mmsz, mmsz), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((mmsz, mmsz), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def _bmm_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.int32
+    )[None]
+
+
+@functools.partial(jax.jit, static_argnames=("mmsz",))
+def bmm_pu(a: jax.Array, b: jax.Array, *, mmsz: int = MMSZ_AIE) -> jax.Array:
+    """Batched (per attention head) int8 PU matmul.
+
+    ``a``: int8 ``[H, M, K]``; ``b``: int8 ``[H, K, N]`` -> int32
+    ``[H, M, N]``.  This is the ATB data path: the head dimension is folded
+    into the grid, exactly as the paper folds heads onto parallel ATBs.
+    """
+    h, m, ka = a.shape
+    hb, kb, n = b.shape
+    assert h == hb and ka == kb
+    assert m % mmsz == 0 and n % mmsz == 0 and ka % mmsz == 0
+    grid = (h, m // mmsz, n // mmsz, ka // mmsz)
+    return pl.pallas_call(
+        _bmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mmsz, mmsz), lambda b_, i, j, k: (b_, i, k)),
+            pl.BlockSpec((1, mmsz, mmsz), lambda b_, i, j, k: (b_, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, mmsz, mmsz), lambda b_, i, j, k: (b_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, m, n), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+# PU specification shapes (Fig. 4 of the paper): one PU invocation computes
+# this many MMSZ tiles per dimension.  Used by aot.py to emit one artifact
+# per PU spec so the rust tile-emulation path can drive them directly.
+PU_SPECS = {
+    # name: (tiles_m, tiles_n, tiles_k, cores, in_plio, out_plio)
+    "large": (4, 4, 4, 64, 8, 4),
+    "standard": (2, 2, 4, 16, 4, 1),
+    "small": (1, 1, 4, 4, 2, 1),
+}
+
+
+def pu_invocation_shape(spec: str, mmsz: int = MMSZ_AIE):
+    """(M, N, K) handled by one invocation of the named PU spec."""
+    tm, tn, tk, _, _, _ = PU_SPECS[spec]
+    return (tm * mmsz, tn * mmsz, tk * mmsz)

@@ -1,0 +1,112 @@
+"""L1 — PL-side operator kernels (Pallas).
+
+In the paper the memory-bound nonlinear operators (SoftMax, LayerNorm,
+GELU) run on the PL fabric as pipeline branches inserted into the MM
+backbone data flow (Observation 1/2).  Here each is a row-tiled Pallas
+kernel so it lowers into the same HLO module as the MM PU kernels — the
+software analogue of "inserted into the backbone pipeline".
+
+All operate in fp32 (the PL branch de-quantizes the AIE int32 results).
+``interpret=True`` for CPU-PJRT portability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per PL-module pipeline beat.  8 rows x 4 KiB-ish row is a BRAM-sized
+# burst; on TPU it is simply a VMEM-friendly block.
+ROW_BLOCK = 8
+
+
+def _pick_row_block(rows: int) -> int:
+    rb = ROW_BLOCK
+    while rows % rb:
+        rb //= 2
+    return max(rb, 1)
+
+
+def _softmax_kernel(x_ref, o_ref, *, scale: float):
+    v = x_ref[...].astype(jnp.float32) * scale
+    m = jnp.max(v, axis=-1, keepdims=True)
+    e = jnp.exp(v - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def softmax_pl(x: jax.Array, *, scale: float = 1.0) -> jax.Array:
+    """Row softmax of ``scale * x`` over the last axis.
+
+    ``x``: fp32 ``[..., R, C]`` flattened internally to ``[rows, C]``.
+    ``scale`` is the attention 1/sqrt(d_head) factor, static at trace time
+    (the PL module is configured per accelerator, not per request).
+    """
+    shape = x.shape
+    x2 = x.reshape((-1, shape[-1]))
+    rows, cols = x2.shape
+    rb = _pick_row_block(rows)
+    out = pl.pallas_call(
+        functools.partial(_softmax_kernel, scale=scale),
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x2)
+    return out.reshape(shape)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    v = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(v, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(v - mu), axis=-1, keepdims=True)
+    o_ref[...] = (v - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm_pl(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    """Row LayerNorm.  ``x``: fp32 ``[R, C]``; ``gamma``/``beta``: ``[C]``."""
+    rows, cols = x.shape
+    rb = _pick_row_block(rows)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu_kernel(x_ref, o_ref):
+    v = x_ref[...].astype(jnp.float32)
+    inner = _SQRT_2_OVER_PI * (v + 0.044715 * v * v * v)
+    o_ref[...] = 0.5 * v * (1.0 + jnp.tanh(inner))
+
+
+@jax.jit
+def gelu_pl(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU (the form FPGA/PL implementations use)."""
+    rows, cols = x.shape
+    rb = _pick_row_block(rows)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(rows // rb,),
+        in_specs=[pl.BlockSpec((rb, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for every L1 kernel and for the L2 model.
+
+These implement the *same arithmetic* as the Pallas kernels with plain
+jax.numpy — no tiling, no grids — so any disagreement is a kernel bug,
+not a quantization choice.  Integer paths must match exactly; float paths
+to ~1e-5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 matmul oracle."""
+    return jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+
+def bmm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched int8 matmul oracle: [H,M,K] x [H,K,N] -> int32 [H,M,N]."""
+    return jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def softmax_ref(x: jax.Array, *, scale: float = 1.0) -> jax.Array:
+    v = x.astype(jnp.float32) * scale
+    return jax.nn.softmax(v, axis=-1)
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    v = x.astype(jnp.float32)
+    mu = jnp.mean(v, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(v - mu), axis=-1, keepdims=True)
+    return (v - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    v = x.astype(jnp.float32)
+    c = 0.7978845608028654
+    return 0.5 * v * (1.0 + jnp.tanh(c * (v + 0.044715 * v * v * v)))
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers shared by model and oracle (int8 symmetric,
+# per-tensor scale — the "already quantified Int8 model" of the paper).
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: jax.Array, scale) -> jax.Array:
+    """fp32 -> int8 with symmetric per-tensor scale."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def calibrate_scale(x) -> float:
+    """Pick the per-tensor scale a deploy-time calibrator would pick."""
+    import numpy as np
+
+    return float(max(abs(np.asarray(x, dtype=np.float64)).max(), 1e-8) / 127.0)

@@ -1,0 +1,284 @@
+"""L2 — the Transformer encoder layer as the EDPU executes it.
+
+This is the compute graph the paper's EDPU implements: one call = one
+Encoder layer = MHA Stage then FFN Stage (Algorithm 1), with
+
+* every MM on the AIE MM PU int8 path (:func:`kernels.mm_pu.mm_pu` /
+  :func:`bmm_pu`),
+* every nonlinear operator (softmax / LayerNorm / GELU) on the PL branch
+  (:mod:`kernels.plops`),
+* int8 symmetric quantization: static per-tensor scales for weights,
+  dynamic per-tensor scales for activations (computed in-graph, so the
+  lowered HLO is self-contained).
+
+Two implementations of the same arithmetic:
+
+* ``encoder_layer`` — Pallas-kernelized (the decomposition proof; this is
+  what validates that the EDPU tiling computes the right numbers);
+* ``encoder_layer_fused`` — plain jnp (identical math, no grids; the fast
+  serving path the rust coordinator uses on CPU PJRT).
+
+Both are AOT-lowered by :mod:`compile.aot`; the rust runtime cross-checks
+them against each other and against the fp32 reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mm_pu as mmk
+from .kernels import plops
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Model configuration (Table IV of the paper)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer configuration information (paper Table III/IV)."""
+
+    name: str
+    heads: int
+    embed_dim: int
+    dff: int
+    seq_len: int       # logical L
+    layers: int
+    mmsz: int = mmk.MMSZ_AIE
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.heads
+
+    @property
+    def padded_seq_len(self) -> int:
+        """L padded up to a multiple of MMSZ (the paper pads ViT 197->256)."""
+        m = self.mmsz
+        return ((self.seq_len + m - 1) // m) * m
+
+
+BERT_BASE = ModelConfig("bert-base", 12, 768, 3072, 256, 12)
+VIT_BASE = ModelConfig("vit-base", 12, 768, 3072, 197, 12)
+
+# Canonical parameter order for one encoder layer.  aot.py records this in
+# the artifact manifest; the rust runtime feeds literals in this order.
+PARAM_ORDER = (
+    "wqkv", "sqkv", "bqkv",
+    "wproj", "sproj", "bproj",
+    "w1", "s1", "b1",
+    "w2", "s2", "b2",
+    "ln1_g", "ln1_b", "ln2_g", "ln2_b",
+)
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """name -> (shape, dtype) for one encoder layer's parameters."""
+    e, d = cfg.embed_dim, cfg.dff
+    i8, f32 = "int8", "float32"
+    return {
+        "wqkv": ((e, 3 * e), i8), "sqkv": ((), f32), "bqkv": ((3 * e,), f32),
+        "wproj": ((e, e), i8), "sproj": ((), f32), "bproj": ((e,), f32),
+        "w1": ((e, d), i8), "s1": ((), f32), "b1": ((d,), f32),
+        "w2": ((d, e), i8), "s2": ((), f32), "b2": ((e,), f32),
+        "ln1_g": ((e,), f32), "ln1_b": ((e,), f32),
+        "ln2_g": ((e,), f32), "ln2_b": ((e,), f32),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Random fp32 weights, int8-quantized with calibrated scales."""
+    e, d = cfg.embed_dim, cfg.dff
+    ks = jax.random.split(key, 4)
+
+    def qw(k, shape, fan_in):
+        w = jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+        s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / 127.0
+        return ref.quantize(w, s), s
+
+    wqkv, sqkv = qw(ks[0], (e, 3 * e), e)
+    wproj, sproj = qw(ks[1], (e, e), e)
+    w1, s1 = qw(ks[2], (e, d), e)
+    w2, s2 = qw(ks[3], (d, e), d)
+    z = jnp.zeros
+    return {
+        "wqkv": wqkv, "sqkv": sqkv, "bqkv": z((3 * e,), jnp.float32),
+        "wproj": wproj, "sproj": sproj, "bproj": z((e,), jnp.float32),
+        "w1": w1, "s1": s1, "b1": z((d,), jnp.float32),
+        "w2": w2, "s2": s2, "b2": z((e,), jnp.float32),
+        "ln1_g": jnp.ones((e,), jnp.float32), "ln1_b": z((e,), jnp.float32),
+        "ln2_g": jnp.ones((e,), jnp.float32), "ln2_b": z((e,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Quantization plumbing
+# ---------------------------------------------------------------------------
+
+
+def dyn_quant(x: jax.Array):
+    """Dynamic symmetric int8 quantization: returns (q, scale)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    return ref.quantize(x, s), s
+
+
+# Softmax output lives in [0, 1]; its scale is fixed at deploy time.
+ATTN_SCALE = 1.0 / 127.0
+
+
+# ---------------------------------------------------------------------------
+# Kernelized (Pallas / EDPU-tiled) encoder layer
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    """[L, E] -> [H, L, dh] — the head-splitting after the merged QKV LB."""
+    l, e = x.shape
+    return x.reshape(l, heads, e // heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    h, l, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(l, h * dh)
+
+
+def mha_stage(x_q, x_scale, p, cfg: ModelConfig, *, kernels=True):
+    """MHA Stage: merged-QKV LB -> ATB (QK^T, softmax, AV) -> Proj LB -> LN.
+
+    ``x_q`` int8 [Lp, E]; returns fp32 [Lp, E] (post add&norm).
+    """
+    heads, dh = cfg.heads, cfg.head_dim
+    mm = (lambda a, b: mmk.mm_pu(a, b, mmsz=cfg.mmsz)) if kernels else ref.mm_ref
+    bmm = (lambda a, b: mmk.bmm_pu(a, b, mmsz=cfg.mmsz)) if kernels else ref.bmm_ref
+    softmax = plops.softmax_pl if kernels else ref.softmax_ref
+    layernorm = plops.layernorm_pl if kernels else ref.layernorm_ref
+
+    # --- QKV LB (independent-linear: the three QKV projections of all heads
+    # aggregated into one large PU matmul, §III.B) ---
+    qkv = ref.dequantize(mm(x_q, p["wqkv"]), x_scale * p["sqkv"]) + p["bqkv"]
+    e = cfg.embed_dim
+    q = _split_heads(qkv[:, :e], heads)
+    k = _split_heads(qkv[:, e:2 * e], heads)
+    v = _split_heads(qkv[:, 2 * e:], heads)
+
+    # --- ATB pre-stage: QK^T on Small PUs ---
+    q_q, q_s = dyn_quant(q)
+    k_q, k_s = dyn_quant(k)
+    kt = jnp.transpose(k_q, (0, 2, 1))  # the PL matrix-transpose module
+    scores = ref.dequantize(bmm(q_q, kt), q_s * k_s)
+
+    # --- PL softmax branch ---
+    attn = softmax(scores, scale=1.0 / math.sqrt(dh))
+
+    # --- ATB post-stage: AV on Standard PUs ---
+    a_q = ref.quantize(attn, ATTN_SCALE)
+    v_q, v_s = dyn_quant(v)
+    ctx = ref.dequantize(bmm(a_q, v_q), ATTN_SCALE * v_s)
+
+    # --- Proj LB ---
+    c_q, c_s = dyn_quant(_merge_heads(ctx))
+    proj = ref.dequantize(mm(c_q, p["wproj"]), c_s * p["sproj"]) + p["bproj"]
+
+    # --- Add & LayerNorm (PL) ---
+    x_f = ref.dequantize(x_q, x_scale)
+    if kernels:
+        return layernorm(x_f + proj, p["ln1_g"], p["ln1_b"])
+    return ref.layernorm_ref(x_f + proj, p["ln1_g"], p["ln1_b"])
+
+
+def ffn_stage(h1, p, cfg: ModelConfig, *, kernels=True):
+    """FFN Stage: FFN1 LB -> GELU (PL) -> FFN2 LB -> Add & LayerNorm."""
+    mm = (lambda a, b: mmk.mm_pu(a, b, mmsz=cfg.mmsz)) if kernels else ref.mm_ref
+    gelu = plops.gelu_pl if kernels else ref.gelu_ref
+    layernorm = plops.layernorm_pl if kernels else ref.layernorm_ref
+
+    h_q, h_s = dyn_quant(h1)
+    f1 = ref.dequantize(mm(h_q, p["w1"]), h_s * p["s1"]) + p["b1"]
+    g = gelu(f1)
+    g_q, g_s = dyn_quant(g)
+    f2 = ref.dequantize(mm(g_q, p["w2"]), g_s * p["s2"]) + p["b2"]
+    return layernorm(h1 + f2, p["ln2_g"], p["ln2_b"])
+
+
+def encoder_layer(x_q, x_scale, p, cfg: ModelConfig, *, kernels=True):
+    """One EDPU call: MHA Stage then FFN Stage (serial, Algorithm 1).
+
+    Returns ``(out_f32, out_q, out_scale)`` so successive layers chain on
+    the int8 path without host-side float math.
+    """
+    h1 = mha_stage(x_q, x_scale, p, cfg, kernels=kernels)
+    out = ffn_stage(h1, p, cfg, kernels=kernels)
+    out_q, out_s = dyn_quant(out)
+    return out, out_q, out_s
+
+
+def encoder_layer_fused(x_q, x_scale, p, cfg: ModelConfig):
+    """Identical arithmetic, plain jnp (the fast CPU serving path)."""
+    return encoder_layer(x_q, x_scale, p, cfg, kernels=False)
+
+
+# ---------------------------------------------------------------------------
+# fp32 reference (no quantization) — for quantization-error sanity only
+# ---------------------------------------------------------------------------
+
+
+def encoder_layer_fp32(x, pf, cfg: ModelConfig):
+    """pf holds fp32 weights (same keys, de-quantized)."""
+    heads, dh = cfg.heads, cfg.head_dim
+    qkv = x @ pf["wqkv"] + pf["bqkv"]
+    e = cfg.embed_dim
+    q = _split_heads(qkv[:, :e], heads)
+    k = _split_heads(qkv[:, e:2 * e], heads)
+    v = _split_heads(qkv[:, 2 * e:], heads)
+    scores = jnp.einsum("hld,hmd->hlm", q, k) / math.sqrt(dh)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = _merge_heads(jnp.einsum("hlm,hmd->hld", attn, v))
+    proj = ctx @ pf["wproj"] + pf["bproj"]
+    h1 = ref.layernorm_ref(x + proj, pf["ln1_g"], pf["ln1_b"])
+    f1 = ref.gelu_ref(h1 @ pf["w1"] + pf["b1"])
+    out = f1 @ pf["w2"] + pf["b2"]
+    return ref.layernorm_ref(h1 + out, pf["ln2_g"], pf["ln2_b"])
+
+
+def dequant_params(p: dict) -> dict:
+    """int8 params -> fp32 params for the fp32 reference."""
+    out = dict(p)
+    for w, s in (("wqkv", "sqkv"), ("wproj", "sproj"), ("w1", "s1"), ("w2", "s2")):
+        out[w] = ref.dequantize(p[w], p[s])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Workload accounting (paper §IV.A) — used to cross-check the rust side
+# ---------------------------------------------------------------------------
+
+
+def mm_workload(cfg: ModelConfig) -> list:
+    """The (count, M, N, K) MM load of one layer, independent-linear mode.
+
+    Matches the paper's §V.B design case for BERT-Base: 4x 256x768x768,
+    12x 256x256x64 pre / 12x 256x64x256 post, 2x 256x768x3072-shaped FFN.
+    """
+    l, e, d, h = cfg.padded_seq_len, cfg.embed_dim, cfg.dff, cfg.heads
+    dh = cfg.head_dim
+    return [
+        # merged QKV (3x [E,E]) + Proj = 4 LB matmuls of L x E x E
+        (4, l, e, e),
+        # ATB pre-stage QK^T: per head L x L x dh
+        (h, l, l, dh),
+        # ATB post-stage AV: per head L x dh x L
+        (h, l, dh, l),
+        # FFN1 + FFN2
+        (1, l, d, e),
+        (1, l, e, d),
+    ]
+
+
+def total_ops(cfg: ModelConfig) -> int:
+    """MAC*2 ops of one encoder layer (MM only, as the paper counts TOPS)."""
+    return sum(2 * c * m * n * k for (c, m, n, k) in mm_workload(cfg))

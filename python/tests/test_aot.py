@@ -1,0 +1,97 @@
+"""Artifact sanity: every artifact exists, parses as HLO text, and the
+manifest agrees with the model's parameter contract."""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile.kernels import mm_pu as mmk
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_all_artifacts_present(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    expected = {
+        "encoder_layer_pallas", "encoder_layer_fused", "mha_stage",
+        "ffn_stage", "mm_pu_large", "mm_pu_standard", "mm_pu_small",
+        "mm_tile", "softmax_row", "layernorm", "gelu",
+    }
+    assert expected <= names
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text, a["file"]
+
+
+def test_encoder_manifest_matches_param_order(manifest):
+    art = {a["name"]: a for a in manifest["artifacts"]}
+    enc = art["encoder_layer_pallas"]
+    names = [p["name"] for p in enc["params"]]
+    assert names[:2] == ["x_q", "x_scale"]
+    assert tuple(names[2:]) == M.PARAM_ORDER
+    shapes = M.param_shapes(M.BERT_BASE)
+    for p in enc["params"][2:]:
+        s, d = shapes[p["name"]]
+        assert tuple(p["shape"]) == s
+        assert p["dtype"] == d
+    # fused variant has the identical signature
+    assert enc["params"] == art["encoder_layer_fused"]["params"]
+
+
+def test_encoder_outputs(manifest):
+    art = {a["name"]: a for a in manifest["artifacts"]}
+    outs = art["encoder_layer_pallas"]["outputs"]
+    assert [tuple(o["shape"]) for o in outs] == [(256, 768), (256, 768), ()]
+    assert [o["dtype"] for o in outs] == ["float32", "int8", "float32"]
+
+
+def test_pu_artifact_shapes(manifest):
+    art = {a["name"]: a for a in manifest["artifacts"]}
+    for spec in ("large", "standard", "small"):
+        m, n, k = mmk.pu_invocation_shape(spec)
+        a = art[f"mm_pu_{spec}"]
+        assert a["meta"]["m"] == m and a["meta"]["n"] == n and a["meta"]["k"] == k
+        assert tuple(a["params"][0]["shape"]) == (m, k)
+        assert tuple(a["params"][1]["shape"]) == (k, n)
+        assert tuple(a["outputs"][0]["shape"]) == (m, n)
+
+
+def test_stage_artifacts_compose(manifest):
+    """mha_stage output shape == ffn_stage input shape (the EDPU chain)."""
+    art = {a["name"]: a for a in manifest["artifacts"]}
+    mha_out = art["mha_stage"]["outputs"][0]
+    ffn_in = art["ffn_stage"]["params"][0]
+    assert mha_out["shape"] == ffn_in["shape"]
+    assert mha_out["dtype"] == ffn_in["dtype"] == "float32"
+
+
+def test_models_metadata(manifest):
+    models = manifest["models"]
+    assert models["bert-base"]["seq_len"] == 256
+    assert models["vit-base"]["seq_len"] == 197
+    assert models["vit-base"]["padded_seq_len"] == 256
+    assert manifest["mmsz"] == 64
+
+
+def test_hlo_text_no_64bit_id_proto(manifest):
+    """Interchange must be text (xla_extension 0.5.1 rejects jax>=0.5
+    serialized protos) — i.e. files must be ASCII HLO, not binary."""
+    for a in manifest["artifacts"]:
+        with open(os.path.join(ART, a["file"]), "rb") as f:
+            head = f.read(64)
+        assert head.startswith(b"HloModule"), a["file"]

@@ -1,0 +1,93 @@
+"""L1 kernel vs oracle: the AIE MM PU tile schedule must be exact.
+
+Integer matmul admits no tolerance — any tiling/accumulation bug shows up
+as a hard mismatch.  Hypothesis sweeps shapes and tile sizes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mm_pu as mmk
+from compile.kernels import ref
+
+
+def _rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-127, 128, shape, dtype=np.int8))
+
+
+@pytest.mark.parametrize("mmsz", [4, 8, 16])
+@pytest.mark.parametrize("tiles", [(1, 1, 1), (2, 3, 4), (4, 1, 2)])
+def test_mm_pu_exact(mmsz, tiles):
+    rng = np.random.default_rng(mmsz * 100 + tiles[0])
+    tm, tn, tk = tiles
+    a = _rand_i8(rng, (tm * mmsz, tk * mmsz))
+    b = _rand_i8(rng, (tk * mmsz, tn * mmsz))
+    got = np.asarray(mmk.mm_pu(a, b, mmsz=mmsz))
+    want = np.asarray(ref.mm_ref(a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mmsz", [4, 16])
+@pytest.mark.parametrize("h", [1, 3, 12])
+def test_bmm_pu_exact(mmsz, h):
+    rng = np.random.default_rng(mmsz + h)
+    a = _rand_i8(rng, (h, 2 * mmsz, mmsz))
+    b = _rand_i8(rng, (h, mmsz, 2 * mmsz))
+    got = np.asarray(mmk.bmm_pu(a, b, mmsz=mmsz))
+    want = np.asarray(ref.bmm_ref(a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mm_pu_saturating_inputs():
+    """Extreme int8 values must not overflow the int32 accumulator path."""
+    mmsz = 8
+    a = jnp.full((mmsz, 4 * mmsz), -127, jnp.int8)
+    b = jnp.full((4 * mmsz, mmsz), -127, jnp.int8)
+    got = np.asarray(mmk.mm_pu(a, b, mmsz=mmsz))
+    assert (got == 127 * 127 * 4 * mmsz).all()
+
+
+def test_mm_pu_rejects_unaligned():
+    a = jnp.zeros((10, 16), jnp.int8)
+    b = jnp.zeros((16, 16), jnp.int8)
+    with pytest.raises(AssertionError):
+        mmk.mm_pu(a, b, mmsz=16)
+
+
+def test_mm_pu_rejects_mismatched_inner():
+    a = jnp.zeros((16, 16), jnp.int8)
+    b = jnp.zeros((32, 16), jnp.int8)
+    with pytest.raises(AssertionError):
+        mmk.mm_pu(a, b, mmsz=16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mmsz=st.sampled_from([2, 4, 8]),
+    tm=st.integers(1, 4),
+    tn=st.integers(1, 4),
+    tk=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mm_pu_property(mmsz, tm, tn, tk, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand_i8(rng, (tm * mmsz, tk * mmsz))
+    b = _rand_i8(rng, (tk * mmsz, tn * mmsz))
+    got = np.asarray(mmk.mm_pu(a, b, mmsz=mmsz))
+    want = np.asarray(ref.mm_ref(a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pu_invocation_shapes_match_paper():
+    """Fig. 4: Large 256^3, Standard 128x128x256, Small 64x64x256."""
+    assert mmk.pu_invocation_shape("large") == (256, 256, 256)
+    assert mmk.pu_invocation_shape("standard") == (128, 128, 256)
+    assert mmk.pu_invocation_shape("small") == (64, 64, 256)
+
+
+def test_pu_specs_core_counts():
+    """Core count of each PU = tiles_m * tiles_n * tiles_k (Fig. 4)."""
+    for name, (tm, tn, tk, cores, _, _) in mmk.PU_SPECS.items():
+        assert tm * tn * tk == cores, name

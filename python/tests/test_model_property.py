@@ -1,0 +1,92 @@
+"""Hypothesis sweeps over the L2 model: the EDPU tiling must be
+arithmetically invisible for ANY valid (heads, dims, seq, mmsz)
+combination, not just the benchmark configurations."""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def _cfg(heads, head_dim, dff_mult, seq, mmsz):
+    e = heads * head_dim
+    return M.ModelConfig(
+        "prop", heads=heads, embed_dim=e, dff=e * dff_mult,
+        seq_len=seq, layers=1, mmsz=mmsz,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    head_dim=st.sampled_from([16, 32]),
+    dff_mult=st.sampled_from([2, 4]),
+    seq=st.integers(8, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernelized_equals_fused_any_config(heads, head_dim, dff_mult, seq, seed):
+    mmsz = min(16, head_dim)
+    cfg = _cfg(heads, head_dim, dff_mult, seq, mmsz)
+    p = M.init_params(jax.random.PRNGKey(seed % 1000), cfg)
+    lp = cfg.padded_seq_len
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (lp, cfg.embed_dim), jnp.float32)
+    sx = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    xq = ref.quantize(x, sx)
+    out_k, q_k, s_k = M.encoder_layer(xq, sx, p, cfg, kernels=True)
+    out_f, q_f, s_f = M.encoder_layer_fused(xq, sx, p, cfg)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_f))
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_f),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    heads=st.sampled_from([2, 4, 8]),
+    head_dim=st.sampled_from([16, 32, 64]),
+    seq=st.integers(8, 64),
+)
+def test_workload_identity_5h_plus_3(heads, head_dim, seq):
+    """§IV.A: 5*Head+3 matmuls per layer (per-head linear accounting)."""
+    cfg = _cfg(heads, head_dim, 4, seq, 16)
+    # count from the model's own workload enumeration
+    wl = M.mm_workload(cfg)
+    n = sum(count for (count, _m, _n, _k) in wl)
+    assert n == 2 * heads + 6  # merged-QKV form of 5H+3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seq=st.integers(1, 512), mmsz=st.sampled_from([16, 32, 64, 128]))
+def test_padding_is_minimal_multiple(seq, mmsz):
+    cfg = _cfg(2, mmsz, 2, seq, mmsz)
+    lp = cfg.padded_seq_len
+    assert lp % mmsz == 0
+    assert lp >= seq
+    assert lp - seq < mmsz  # minimal padding
+
+
+def test_softmax_rows_of_attention_sum_to_one():
+    cfg = _cfg(2, 16, 2, 24, 8)
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    lp = cfg.padded_seq_len
+    x = jax.random.normal(jax.random.PRNGKey(1), (lp, cfg.embed_dim), jnp.float32)
+    sx = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    h1 = M.mha_stage(ref.quantize(x, sx), sx, p, cfg, kernels=False)
+    assert np.isfinite(np.asarray(h1)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(scale_exp=st.integers(-6, 2))
+def test_dyn_quant_scale_invariance(scale_exp):
+    """Scaling the input scales the dyn-quant scale; the int8 codes are
+    identical — the EDPU int8 path is magnitude-invariant."""
+    base = jnp.asarray([[0.5, -1.0, 0.25, 1.0]], jnp.float32)
+    s = float(2.0 ** scale_exp)
+    q1, s1 = M.dyn_quant(base)
+    q2, s2 = M.dyn_quant(base * s)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(float(s2), float(s1) * s, rtol=1e-6)

@@ -1,0 +1,100 @@
+"""PL-branch operator kernels (softmax / layernorm / gelu) vs oracles."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import plops, ref
+
+
+def _randf(rng, shape, lo=-4.0, hi=4.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 16), (24, 33), (64, 256), (1, 7)])
+@pytest.mark.parametrize("scale", [1.0, 0.125])
+def test_softmax(rows, cols, scale):
+    rng = np.random.default_rng(rows * cols)
+    x = _randf(rng, (rows, cols))
+    got = np.asarray(plops.softmax_pl(x, scale=scale))
+    want = np.asarray(ref.softmax_ref(x, scale=scale))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_3d_batch():
+    """Attention-shaped [H, L, L] input must flatten correctly."""
+    rng = np.random.default_rng(7)
+    x = _randf(rng, (4, 16, 16))
+    got = np.asarray(plops.softmax_pl(x, scale=0.25))
+    want = np.asarray(ref.softmax_ref(x, scale=0.25))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_large_logits_stable():
+    """Max-subtraction must prevent overflow for large logits."""
+    x = jnp.asarray([[1000.0, 1000.0, -1000.0]] * 8, jnp.float32)
+    got = np.asarray(plops.softmax_pl(x))
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got[:, :2], 0.5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 16), (32, 768), (5, 12)])
+def test_layernorm(rows, cols):
+    rng = np.random.default_rng(rows + cols)
+    x = _randf(rng, (rows, cols))
+    g = _randf(rng, (cols,), 0.5, 1.5)
+    b = _randf(rng, (cols,), -0.5, 0.5)
+    got = np.asarray(plops.layernorm_pl(x, g, b))
+    want = np.asarray(ref.layernorm_ref(x, g, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_statistics():
+    rng = np.random.default_rng(3)
+    x = _randf(rng, (16, 512))
+    g = jnp.ones((512,), jnp.float32)
+    b = jnp.zeros((512,), jnp.float32)
+    got = np.asarray(plops.layernorm_pl(x, g, b))
+    np.testing.assert_allclose(got.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(got.std(-1), 1.0, atol=1e-2)
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 16), (16, 3072), (3, 5)])
+def test_gelu(rows, cols):
+    rng = np.random.default_rng(rows)
+    x = _randf(rng, (rows, cols), -6.0, 6.0)
+    got = np.asarray(plops.gelu_pl(x))
+    want = np.asarray(ref.gelu_ref(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_gelu_asymptotes():
+    x = jnp.asarray([[-20.0, 0.0, 20.0]] * 4, jnp.float32)
+    got = np.asarray(plops.gelu_pl(x))
+    np.testing.assert_allclose(got[:, 0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(got[:, 1], 0.0, atol=1e-7)
+    np.testing.assert_allclose(got[:, 2], 20.0, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 32),
+    cols=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_plops_property(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = _randf(rng, (rows, cols))
+    np.testing.assert_allclose(
+        np.asarray(plops.softmax_pl(x)),
+        np.asarray(ref.softmax_ref(x)), rtol=1e-5, atol=1e-6)
+    g = _randf(rng, (cols,), 0.5, 1.5)
+    b = _randf(rng, (cols,), -0.5, 0.5)
+    np.testing.assert_allclose(
+        np.asarray(plops.layernorm_pl(x, g, b)),
+        np.asarray(ref.layernorm_ref(x, g, b)), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(plops.gelu_pl(x)),
+        np.asarray(ref.gelu_ref(x)), rtol=1e-5, atol=1e-6)

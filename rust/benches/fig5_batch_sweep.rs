@@ -1,0 +1,29 @@
+//! EXP-F5 — regenerates paper Figure 5: throughput of the three
+//! accelerators vs batch size (1..32).  Paper observations to reproduce:
+//! all three stabilize by batch 16; BERT/ViT stay above 22 TOPS even at
+//! small batch; system TOPS lies between MHA and FFN.
+
+use cat::experiments::{fig5_series, three_accelerators};
+use cat::report::fig5;
+use cat::util::bench::bench;
+
+fn main() {
+    println!("=== Figure 5: throughput vs batch size ===\n");
+    for (label, m, hw) in three_accelerators() {
+        let pts = fig5_series(&m, &hw).expect("sweep failed");
+        println!("{}", fig5(label, &pts));
+        let b16 = pts.iter().find(|p| p.batch == 16).unwrap();
+        let b32 = pts.iter().find(|p| p.batch == 32).unwrap();
+        println!(
+            "  saturation by batch 16: {:.1} -> {:.1} TOPS ({:+.1}%)  [paper: stable at 16]\n",
+            b16.sys_tops,
+            b32.sys_tops,
+            (b32.sys_tops / b16.sys_tops - 1.0) * 100.0
+        );
+    }
+
+    let (_, bert, hw) = &three_accelerators()[0];
+    bench("fig5/bert_sweep_6_batches", 1, 5, || {
+        let _ = fig5_series(bert, hw).unwrap();
+    });
+}

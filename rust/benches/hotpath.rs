@@ -1,0 +1,68 @@
+//! §Perf — microbenchmarks of the L3 hot paths (used by the performance
+//! pass; before/after numbers recorded in EXPERIMENTS.md §Perf):
+//!
+//! * DES engine throughput (events/s) on the BERT MHA scenario,
+//! * full EDPU simulation latency at several batch sizes,
+//! * customization engine latency,
+//! * PJRT runtime: encoder-layer execution + literal marshalling
+//!   (skipped when artifacts are absent).
+
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{customize, CustomizeOptions};
+use cat::sched::{run_edpu, run_stage, Stage};
+use cat::util::bench::{bench, black_box};
+
+fn main() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let plan = customize(&model, &hw, &CustomizeOptions::default()).unwrap();
+
+    println!("=== hot-path microbenchmarks ===\n");
+
+    bench("customize/bert_on_vck5000", 10, 100, || {
+        black_box(customize(&model, &hw, &CustomizeOptions::default()).unwrap());
+    });
+
+    let r = run_stage(&plan, Stage::Mha, 8).unwrap();
+    println!(
+        "  (MHA batch-8 scenario: {} events, {:.1} µs simulated)",
+        r.sim.events,
+        r.makespan_ns / 1e3
+    );
+    bench("sim/mha_stage_batch8", 3, 30, || {
+        black_box(run_stage(&plan, Stage::Mha, 8).unwrap());
+    });
+    bench("sim/edpu_batch1", 3, 30, || {
+        black_box(run_edpu(&plan, 1).unwrap());
+    });
+    bench("sim/edpu_batch16", 3, 20, || {
+        black_box(run_edpu(&plan, 16).unwrap());
+    });
+    bench("sim/edpu_batch64", 1, 5, || {
+        black_box(run_edpu(&plan, 64).unwrap());
+    });
+
+    // PJRT hot path (needs artifacts)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use cat::coordinator::synthetic_request;
+        use cat::runtime::{EncoderWeights, Runtime};
+        let mut rt = Runtime::open("artifacts").unwrap();
+        rt.compile("encoder_layer_fused").unwrap();
+        let req = synthetic_request(&model, 64, 0, 1);
+        let w = EncoderWeights::synthetic(&model, 7);
+        bench("pjrt/encoder_layer_fused", 1, 5, || {
+            black_box(
+                rt.encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &w)
+                    .unwrap(),
+            );
+        });
+        let tile_a = cat::runtime::Tensor::I8 { data: vec![1; 64 * 64], shape: vec![64, 64] };
+        let tile_b = tile_a.clone();
+        rt.compile("mm_tile").unwrap();
+        bench("pjrt/mm_tile_64", 3, 50, || {
+            black_box(rt.run("mm_tile", &[tile_a.clone(), tile_b.clone()]).unwrap());
+        });
+    } else {
+        println!("  (artifacts/ missing — run `make artifacts` for PJRT benches)");
+    }
+}

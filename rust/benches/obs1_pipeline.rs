@@ -1,0 +1,18 @@
+//! EXP-O1 — regenerates paper Observation 1: organizing the AIE's
+//! send/compute/receive phases serially vs pipelined on the PL side.
+//! Paper: serial 1.10x baseline, pipelined 0.71x, i.e. 1.41x speedup.
+
+use cat::experiments::obs1_times;
+use cat::util::bench::bench;
+
+fn main() {
+    println!("=== Observation 1: PL-side phase organization ===\n");
+    let (serial, pipe) = obs1_times().expect("sim failed");
+    println!("  serial    : {serial:>10.1} ns   (paper: 1.10x baseline)");
+    println!("  pipelined : {pipe:>10.1} ns   (paper: 0.71x)");
+    println!("  speedup   : {:.2}x          (paper: 1.41x)", serial / pipe);
+
+    bench("obs1/both_sims", 1, 20, || {
+        let _ = obs1_times().unwrap();
+    });
+}

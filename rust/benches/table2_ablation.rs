@@ -1,0 +1,33 @@
+//! EXP-T2 — regenerates paper Table II: the EDPU-organization ablation
+//! (independent linear x ATB pipeline mode x ATB parallelism) on the
+//! ViT-Base configuration.
+//!
+//! Paper speedups: 1.0x / 3.8x / 5.3x / 14.6x / 20.1x.  Our simulator
+//! preserves the strict ordering; magnitudes are compressed because the
+//! simulated Lab 1 baseline is less pathological than the measured one
+//! (see EXPERIMENTS.md).
+
+use cat::experiments::table2_rows;
+use cat::report::table2;
+use cat::util::bench::bench;
+
+fn main() {
+    println!("=== Table II: EDPU organization ablation ===\n");
+    let rows = table2_rows().expect("ablation failed");
+    println!("{}", table2(&rows));
+    let paper = [1.0, 3.8, 5.3, 14.6, 20.1];
+    let base = rows[0].makespan_ns;
+    println!("paper-vs-measured speedup ratios:");
+    for (r, p) in rows.iter().zip(paper) {
+        println!(
+            "  {}: paper {p:>5.1}x  measured {:>5.2}x  (simulated MHA makespan {:.1} µs)",
+            r.lab,
+            base / r.makespan_ns,
+            r.makespan_ns / 1e3
+        );
+    }
+    // timing of the experiment itself (simulator throughput)
+    bench("table2/full_ablation", 1, 5, || {
+        let _ = table2_rows().unwrap();
+    });
+}

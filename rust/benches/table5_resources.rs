@@ -1,0 +1,43 @@
+//! EXP-T5 — regenerates paper Table V: hardware resource utilization
+//! (LUT/FF/BRAM/URAM + AIE deployment / effective-utilization rates) of
+//! the three accelerators derived by the CAT customization engine.
+
+use cat::experiments::table5_plans;
+use cat::report::table5;
+use cat::util::bench::bench;
+
+fn main() {
+    println!("=== Table V: hardware resource utilization ===\n");
+    let plans = table5_plans().expect("customization failed");
+    let refs: Vec<(&str, &cat::arch::AcceleratorPlan)> =
+        plans.iter().map(|(n, p)| (*n, p)).collect();
+    println!("{}", table5(&refs));
+
+    println!("paper-vs-estimated (BERT-Base):");
+    let bert = &plans[0].1;
+    for (what, paper, got) in [
+        ("MHA LUT", 162_900.0, bert.res_mha.luts as f64),
+        ("MHA FF", 213_600.0, bert.res_mha.ffs as f64),
+        ("MHA BRAM", 588.0, bert.res_mha.brams as f64),
+        ("MHA URAM", 220.0, bert.res_mha.urams as f64),
+        ("FFN LUT", 71_700.0, bert.res_ffn.luts as f64),
+        ("FFN BRAM", 482.0, bert.res_ffn.brams as f64),
+        ("FFN URAM", 276.0, bert.res_ffn.urams as f64),
+        ("Overall LUT", 232_300.0, bert.res_overall.luts as f64),
+    ] {
+        println!(
+            "  {what:<12} paper {paper:>9.0}  estimated {got:>9.0}  ({:+.0}%)",
+            (got - paper) / paper * 100.0
+        );
+    }
+    println!(
+        "\ndeployment rates: BERT {:.0}%, ViT {:.0}%, Limited {:.0}% (paper: 88/88/100)",
+        plans[0].1.deployment_rate() * 100.0,
+        plans[1].1.deployment_rate() * 100.0,
+        plans[2].1.deployment_rate() * 100.0
+    );
+
+    bench("table5/customize_all_three", 1, 20, || {
+        let _ = table5_plans().unwrap();
+    });
+}

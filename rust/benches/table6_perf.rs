@@ -1,0 +1,39 @@
+//! EXP-T6 — regenerates paper Table VI: peak performance (latency, TOPS,
+//! GOPS/AIE) and energy efficiency (W, GOPS/W) of the three accelerators.
+
+use cat::experiments::table6_rows;
+use cat::report::table6;
+use cat::util::bench::bench;
+
+fn main() {
+    println!("=== Table VI: peak performance and energy efficiency ===\n");
+    let rows = table6_rows().expect("simulation failed");
+    println!("{}", table6(&rows));
+
+    // paper values: (latency ms, TOPS, GOPS/AIE, W, GOPS/W)
+    let paper = [
+        ("BERT-Base", 0.118, 35.194, 99.983, 67.555, 520.968),
+        ("ViT-Base", 0.129, 30.279, 86.020, 61.464, 492.629),
+        ("BERT-Base (Limited AIE)", 0.398, 9.598, 149.968, 16.168, 593.642),
+    ];
+    println!("paper-vs-measured (System/EDPU rows):");
+    for (s, (name, p_lat, p_tops, p_gpa, p_w, p_gpw)) in rows.iter().zip(paper) {
+        println!("  {name}:");
+        for (what, pv, mv) in [
+            ("latency ms", p_lat, s.sys_latency_ms),
+            ("TOPS", p_tops, s.sys_tops),
+            ("GOPS/AIE", p_gpa, s.sys_gops_per_aie),
+            ("Power W", p_w, s.power_w),
+            ("GOPS/W", p_gpw, s.gops_per_w),
+        ] {
+            println!(
+                "    {what:<11} paper {pv:>9.3}  measured {mv:>9.3}  ({:+.0}%)",
+                (mv - pv) / pv * 100.0
+            );
+        }
+    }
+
+    bench("table6/simulate_all_three_batch16", 1, 5, || {
+        let _ = table6_rows().unwrap();
+    });
+}

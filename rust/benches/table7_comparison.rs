@@ -1,0 +1,54 @@
+//! EXP-T7 — regenerates paper Table VII: cross-platform performance and
+//! energy-efficiency comparison (peak / ViT / BERT groups), including the
+//! CHARM-style and SSR-style scheduling baselines simulated on the same
+//! VCK5000 substrate.
+
+use cat::experiments::table7_data;
+use cat::report::table7_group;
+use cat::util::bench::bench;
+
+fn main() {
+    println!("=== Table VII: cross-platform comparison ===\n");
+    let d = table7_data().expect("comparison failed");
+    println!(
+        "{}",
+        table7_group(
+            "peak",
+            &d.cat_peak,
+            &[
+                ("CHARM-style (sim)", d.charm_style),
+                ("SSR-style (sim)", d.ssr_style)
+            ]
+        )
+    );
+    println!("{}", table7_group("vit", &d.cat_vit, &[]));
+    println!("{}", table7_group("bert", &d.cat_bert, &[]));
+
+    println!("headline claims, paper vs measured:");
+    let ssr_pub = 26.7;
+    let ssr_pub_eff = 453.32;
+    println!(
+        "  CAT vs SSR (SOTA) throughput: paper 1.31x, measured {:.2}x",
+        d.cat_peak.tops / ssr_pub
+    );
+    println!(
+        "  CAT vs SSR energy efficiency: paper 1.15x, measured {:.2}x",
+        d.cat_peak.gops_per_w / ssr_pub_eff
+    );
+    println!(
+        "  CAT vs A10G throughput: paper 2.41x, measured {:.2}x",
+        d.cat_peak.tops / 14.63
+    );
+    println!(
+        "  CAT vs A10G energy efficiency: paper 7.80x, measured {:.2}x",
+        d.cat_peak.gops_per_w / 66.79
+    );
+    println!(
+        "  like-for-like on our substrate: CAT {:.1} > SSR-style {:.1} > CHARM-style {:.1} TOPS",
+        d.cat_peak.tops, d.ssr_style.tops, d.charm_style.tops
+    );
+
+    bench("table7/full_comparison", 1, 5, || {
+        let _ = table7_data().unwrap();
+    });
+}

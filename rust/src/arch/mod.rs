@@ -1,0 +1,404 @@
+//! Abstract accelerator architecture (paper §III).
+//!
+//! Types that describe a derived accelerator *before* it runs: PU
+//! specifications (Fig. 4), PRGs (minimum scheduling units), ATB / LB
+//! blocks, the two EDPU stages and their parallel modes, and the complete
+//! `AcceleratorPlan` the customization engine emits.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::util::json::Json;
+
+/// AIE MM PU size class (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PuClass {
+    Large,
+    Standard,
+    Small,
+}
+
+impl fmt::Display for PuClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PuClass::Large => "large",
+            PuClass::Standard => "standard",
+            PuClass::Small => "small",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One AIE MM PU specification: a `tiles_m x tiles_n x tiles_k` grid of
+/// AIE cores, each holding an `MMSZ^3` tile, with PLIO channel counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PuSpec {
+    pub class: PuClass,
+    pub tiles_m: usize,
+    pub tiles_n: usize,
+    pub tiles_k: usize,
+    pub in_plio: usize,
+    pub out_plio: usize,
+}
+
+impl PuSpec {
+    /// The paper's VCK5000 catalog (Fig. 4, `PLIO_AIE = 4`).
+    pub fn catalog() -> Vec<PuSpec> {
+        vec![
+            PuSpec { class: PuClass::Large, tiles_m: 4, tiles_n: 4, tiles_k: 4, in_plio: 8, out_plio: 4 },
+            PuSpec { class: PuClass::Standard, tiles_m: 2, tiles_n: 2, tiles_k: 4, in_plio: 4, out_plio: 1 },
+            PuSpec { class: PuClass::Small, tiles_m: 1, tiles_n: 1, tiles_k: 4, in_plio: 2, out_plio: 1 },
+        ]
+    }
+
+    pub fn by_class(class: PuClass) -> PuSpec {
+        Self::catalog().into_iter().find(|p| p.class == class).unwrap()
+    }
+
+    /// AIE cores consumed by one PU instance.
+    pub fn cores(&self) -> usize {
+        self.tiles_m * self.tiles_n * self.tiles_k
+    }
+
+    /// (M, N, K) one invocation computes, in elements.
+    pub fn invocation_shape(&self, mmsz: usize) -> (usize, usize, usize) {
+        (self.tiles_m * mmsz, self.tiles_n * mmsz, self.tiles_k * mmsz)
+    }
+
+    /// int8 bytes streamed in per invocation (A and B operand tiles).
+    pub fn in_bytes(&self, mmsz: usize) -> u64 {
+        let (m, n, k) = self.invocation_shape(mmsz);
+        (m * k + k * n) as u64
+    }
+
+    /// int32 bytes streamed out per invocation.
+    pub fn out_bytes(&self, mmsz: usize) -> u64 {
+        let (m, n, _) = self.invocation_shape(mmsz);
+        (m * n * 4) as u64
+    }
+
+    /// MAC*2 ops per invocation.
+    pub fn ops(&self, mmsz: usize) -> u64 {
+        let (m, n, k) = self.invocation_shape(mmsz);
+        2 * (m * n * k) as u64
+    }
+
+    /// Invocations needed to cover an `[M,K]x[K,N]` matmul.
+    pub fn invocations_for(&self, mmsz: usize, m: usize, n: usize, k: usize) -> usize {
+        let (pm, pn, pk) = self.invocation_shape(mmsz);
+        m.div_ceil(pm) * n.div_ceil(pn) * k.div_ceil(pk)
+    }
+}
+
+/// Stage-level parallel mode (paper §IV.C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Mode (1): all PRGs launched in parallel, each owning a slice of the
+    /// computing engine; the stage forms one deep pipeline.
+    FullyPipelined,
+    /// Mode (2): LBs run serially (each with ALL engine resources); the
+    /// `P_ATB` ATBs run in parallel between them.
+    SerialHybrid,
+    /// Pure serial (only when every MM exceeds the whole engine at once —
+    /// "extremely rare", kept for the Limited-AIE configuration).
+    Serial,
+}
+
+impl fmt::Display for ParallelMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ParallelMode::FullyPipelined => "fully-pipelined",
+            ParallelMode::SerialHybrid => "serial-hybrid",
+            ParallelMode::Serial => "serial",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// What a PRG does — its place in the EDPU dataflow (Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrgKind {
+    QLb,
+    KLb,
+    VLb,
+    /// Merged QKV LB (independent-linear organization).
+    QkvLb,
+    /// ATB pre-stage (Q·K^T + transpose + softmax branch).
+    AtbPre,
+    /// ATB post-stage (A·V).
+    AtbPost,
+    ProjLb,
+    Ffn1Lb,
+    Ffn2Lb,
+}
+
+impl PrgKind {
+    pub fn in_mha(&self) -> bool {
+        !matches!(self, PrgKind::Ffn1Lb | PrgKind::Ffn2Lb)
+    }
+
+    pub fn is_atb(&self) -> bool {
+        matches!(self, PrgKind::AtbPre | PrgKind::AtbPost)
+    }
+}
+
+/// A Parallel Region — the minimum scheduling unit of the EDPU. Internally
+/// a fixed pipeline (send → compute → receive + PL branches); externally
+/// combined by the stage's parallel mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Prg {
+    pub kind: PrgKind,
+    /// Which ATB instance this PRG belongs to (0 for LBs).
+    pub atb_index: usize,
+    /// PU instances allocated to this PRG (class, how many).
+    pub pus: Vec<(PuClass, usize)>,
+}
+
+impl Prg {
+    pub fn cores(&self) -> usize {
+        self.pus
+            .iter()
+            .map(|(c, n)| PuSpec::by_class(*c).cores() * n)
+            .sum()
+    }
+}
+
+/// One stage of the EDPU (MHA or FFN) after customization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    pub mode: ParallelMode,
+    pub prgs: Vec<Prg>,
+}
+
+impl StagePlan {
+    /// Distinct AIE cores this stage touches.
+    ///
+    /// * Fully pipelined: every PRG owns disjoint PUs — sum.
+    /// * Serial-hybrid: LBs reuse one pool (max); the `P_ATB` parallel ATBs
+    ///   stack, but each ATB's pre/post PRGs run serially and share their
+    ///   ATB's PUs (per-ATB max, summed across ATBs).
+    /// * Serial: everything shares one pool — max.
+    pub fn cores_deployed(&self) -> usize {
+        match self.mode {
+            ParallelMode::FullyPipelined => self.prgs.iter().map(Prg::cores).sum(),
+            ParallelMode::Serial => {
+                self.prgs.iter().map(Prg::cores).max().unwrap_or(0)
+            }
+            ParallelMode::SerialHybrid => {
+                let lb_max = self
+                    .prgs
+                    .iter()
+                    .filter(|p| !p.kind.is_atb())
+                    .map(Prg::cores)
+                    .max()
+                    .unwrap_or(0);
+                let mut per_atb: std::collections::BTreeMap<usize, usize> =
+                    std::collections::BTreeMap::new();
+                for p in self.prgs.iter().filter(|p| p.kind.is_atb()) {
+                    let e = per_atb.entry(p.atb_index).or_insert(0);
+                    *e = (*e).max(p.cores());
+                }
+                let atb_sum: usize = per_atb.values().sum();
+                lb_max.max(atb_sum)
+            }
+        }
+    }
+
+    pub fn prgs_of(&self, kind: PrgKind) -> impl Iterator<Item = &Prg> {
+        self.prgs.iter().filter(move |p| p.kind == kind)
+    }
+}
+
+/// The PL resource estimate for one hardware module (Table V rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlResources {
+    pub luts: usize,
+    pub ffs: usize,
+    pub brams: usize,
+    pub urams: usize,
+}
+
+impl PlResources {
+    pub fn add(&self, o: &PlResources) -> PlResources {
+        PlResources {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            brams: self.brams + o.brams,
+            urams: self.urams + o.urams,
+        }
+    }
+
+    /// Shared-resource union (two stages sharing hardware: the overall
+    /// consumption is less than the sum — paper Table V discussion).
+    pub fn union_shared(&self, o: &PlResources, shared_fraction: f64) -> PlResources {
+        let f = 1.0 - shared_fraction;
+        PlResources {
+            luts: self.luts.max(o.luts) + (self.luts.min(o.luts) as f64 * f) as usize,
+            ffs: self.ffs.max(o.ffs) + (self.ffs.min(o.ffs) as f64 * f) as usize,
+            brams: self.brams.max(o.brams) + (self.brams.min(o.brams) as f64 * f) as usize,
+            urams: self.urams.max(o.urams) + (self.urams.min(o.urams) as f64 * f) as usize,
+        }
+    }
+}
+
+/// The complete customized accelerator the CAT engine emits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorPlan {
+    pub model: ModelConfig,
+    pub hw: HardwareConfig,
+    /// Eq. 3 decision.
+    pub mmsz: usize,
+    /// Eq. 4 decision.
+    pub plio_aie: usize,
+    /// Whether the QKV linears are merged (independent-linear, §III.B).
+    pub independent_linear: bool,
+    /// Eq. 7/8 decision.
+    pub p_atb: usize,
+    pub mha: StagePlan,
+    pub ffn: StagePlan,
+    /// Eq. 5/6 intermediate values, kept for reporting.
+    pub factor1_mha: f64,
+    pub factor2_mha_bytes: u64,
+    pub factor1_ffn: f64,
+    pub factor2_ffn_bytes: u64,
+    /// Table V estimates.
+    pub res_mha: PlResources,
+    pub res_ffn: PlResources,
+    pub res_overall: PlResources,
+}
+
+impl AcceleratorPlan {
+    /// `AIE_Deployment_number` — max over stages (stages share hardware).
+    pub fn cores_deployed(&self) -> usize {
+        self.mha.cores_deployed().max(self.ffn.cores_deployed())
+    }
+
+    /// Eq. 1: deployed / total.
+    pub fn deployment_rate(&self) -> f64 {
+        self.cores_deployed() as f64 / self.hw.total_aie as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let stage = |s: &StagePlan| {
+            let prgs: Vec<Json> = s
+                .prgs
+                .iter()
+                .map(|p| {
+                    let mut m = BTreeMap::new();
+                    m.insert("kind".into(), Json::Str(format!("{:?}", p.kind)));
+                    m.insert("atb_index".into(), Json::Num(p.atb_index as f64));
+                    m.insert(
+                        "pus".into(),
+                        Json::Arr(
+                            p.pus
+                                .iter()
+                                .map(|(c, n)| {
+                                    Json::Arr(vec![
+                                        Json::Str(c.to_string()),
+                                        Json::Num(*n as f64),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    );
+                    m.insert("cores".into(), Json::Num(p.cores() as f64));
+                    Json::Obj(m)
+                })
+                .collect();
+            let mut m = BTreeMap::new();
+            m.insert("mode".into(), Json::Str(s.mode.to_string()));
+            m.insert("prgs".into(), Json::Arr(prgs));
+            m.insert("cores".into(), Json::Num(s.cores_deployed() as f64));
+            Json::Obj(m)
+        };
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), self.model.to_json());
+        m.insert("hardware".into(), Json::Str(self.hw.name.clone()));
+        m.insert("mmsz".into(), Json::Num(self.mmsz as f64));
+        m.insert("plio_aie".into(), Json::Num(self.plio_aie as f64));
+        m.insert("independent_linear".into(), Json::Bool(self.independent_linear));
+        m.insert("p_atb".into(), Json::Num(self.p_atb as f64));
+        m.insert("mha_stage".into(), stage(&self.mha));
+        m.insert("ffn_stage".into(), stage(&self.ffn));
+        m.insert("factor1_mha".into(), Json::Num(self.factor1_mha));
+        m.insert("factor2_mha_bytes".into(), Json::Num(self.factor2_mha_bytes as f64));
+        m.insert("factor1_ffn".into(), Json::Num(self.factor1_ffn));
+        m.insert("factor2_ffn_bytes".into(), Json::Num(self.factor2_ffn_bytes as f64));
+        m.insert("aie_deployed".into(), Json::Num(self.cores_deployed() as f64));
+        m.insert("aie_deployment_rate".into(), Json::Num(self.deployment_rate()));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_fig4() {
+        let large = PuSpec::by_class(PuClass::Large);
+        assert_eq!(large.cores(), 64);
+        assert_eq!(large.invocation_shape(64), (256, 256, 256));
+        assert_eq!((large.in_plio, large.out_plio), (8, 4));
+
+        let std_ = PuSpec::by_class(PuClass::Standard);
+        assert_eq!(std_.cores(), 16);
+        assert_eq!(std_.invocation_shape(64), (128, 128, 256));
+
+        let small = PuSpec::by_class(PuClass::Small);
+        assert_eq!(small.cores(), 4);
+        assert_eq!(small.invocation_shape(64), (64, 64, 256));
+    }
+
+    #[test]
+    fn invocations_cover_design_case() {
+        let large = PuSpec::by_class(PuClass::Large);
+        // 256x768x768 on a Large PU (256^3 per shot): 1*3*3 = 9 invocations
+        assert_eq!(large.invocations_for(64, 256, 768, 768), 9);
+        let small = PuSpec::by_class(PuClass::Small);
+        // QK^T 256x256x64 on Small (64x64x256): 4*4*1
+        assert_eq!(small.invocations_for(64, 256, 256, 64), 16);
+    }
+
+    #[test]
+    fn stage_core_accounting() {
+        // §V.C: 4 Large to LBs + per-ATB (2 Small + 1 Standard) x 4 = 352
+        let lb = |kind| Prg { kind, atb_index: 0, pus: vec![(PuClass::Large, 1)] };
+        let mut prgs = vec![lb(PrgKind::QkvLb), lb(PrgKind::QLb), lb(PrgKind::KLb), lb(PrgKind::ProjLb)];
+        for i in 0..4 {
+            prgs.push(Prg { kind: PrgKind::AtbPre, atb_index: i, pus: vec![(PuClass::Small, 2)] });
+            prgs.push(Prg { kind: PrgKind::AtbPost, atb_index: i, pus: vec![(PuClass::Standard, 1)] });
+        }
+        let stage = StagePlan { mode: ParallelMode::FullyPipelined, prgs };
+        assert_eq!(stage.cores_deployed(), 4 * 64 + 4 * (2 * 4 + 16));
+        assert_eq!(stage.cores_deployed(), 352);
+    }
+
+    #[test]
+    fn serial_mode_shares_pool() {
+        let prgs = vec![
+            Prg { kind: PrgKind::Ffn1Lb, atb_index: 0, pus: vec![(PuClass::Large, 4)] },
+            Prg { kind: PrgKind::Ffn2Lb, atb_index: 0, pus: vec![(PuClass::Large, 4)] },
+        ];
+        let stage = StagePlan { mode: ParallelMode::Serial, prgs };
+        assert_eq!(stage.cores_deployed(), 256); // shared, not 512
+    }
+
+    #[test]
+    fn pu_bytes() {
+        let small = PuSpec::by_class(PuClass::Small);
+        // 64x64x256: A 64x256 + B 256x64 = 32 KiB in, 64x64x4 = 16 KiB out
+        assert_eq!(small.in_bytes(64), 32 * 1024);
+        assert_eq!(small.out_bytes(64), 16 * 1024);
+    }
+
+    #[test]
+    fn shared_union_less_than_sum() {
+        let a = PlResources { luts: 100, ffs: 200, brams: 10, urams: 4 };
+        let b = PlResources { luts: 60, ffs: 100, brams: 8, urams: 2 };
+        let u = a.union_shared(&b, 0.8);
+        assert!(u.luts < a.luts + b.luts);
+        assert!(u.luts >= a.luts);
+    }
+}

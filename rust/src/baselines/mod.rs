@@ -1,0 +1,243 @@
+//! Comparator accelerators for Table VII.
+//!
+//! Two kinds:
+//!
+//! * **Published numbers** — the rows the paper itself compares against
+//!   (A10G/TensorRT, ViA, Auto-ViT-Acc, SSR, NPE).  The paper's Table VII
+//!   compares *its* measurement to *their* published throughput/energy;
+//!   we reproduce the table the same way, substituting our simulated CAT
+//!   numbers.
+//! * **Scheduling-style baselines on our own substrate** — CHARM-style
+//!   (one generic MM accelerator called per operator, DRAM round-trips
+//!   between calls) and SSR-style (uniform PU array, spatial-sequential,
+//!   no per-model customization), so the "customization wins" claim can
+//!   be tested like-for-like on the same simulated board.
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::workload::{layer_workload, Workload};
+
+/// One published comparator row (Table VII).
+#[derive(Debug, Clone)]
+pub struct PublishedAccel {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub design: &'static str,
+    pub frequency: &'static str,
+    pub precision: &'static str,
+    pub tops: f64,
+    pub gops_per_w: f64,
+    /// Which comparison groups this row belongs to.
+    pub groups: &'static [&'static str],
+}
+
+/// The paper's Table VII comparator set (published numbers).
+pub fn published() -> Vec<PublishedAccel> {
+    vec![
+        PublishedAccel {
+            name: "TensorRT",
+            platform: "NVIDIA A10G",
+            design: "TensorRT [16]",
+            frequency: "1.71GHz",
+            precision: "FP32",
+            tops: 14.630,
+            gops_per_w: 66.79,
+            groups: &["peak"],
+        },
+        PublishedAccel {
+            name: "ViA",
+            platform: "Alveo U50",
+            design: "ViA [25]",
+            frequency: "300MHz",
+            precision: "FP16",
+            tops: 0.309,
+            gops_per_w: 7.92,
+            groups: &["peak", "vit"],
+        },
+        PublishedAccel {
+            name: "Auto-ViT-Acc",
+            platform: "ZCU102",
+            design: "Auto-ViT-Acc [19]",
+            frequency: "150MHz",
+            precision: "FIX8",
+            tops: 0.711,
+            gops_per_w: 84.10,
+            groups: &["peak", "vit"],
+        },
+        PublishedAccel {
+            name: "SSR",
+            platform: "VCK190",
+            design: "SSR [14] (FPGA'24)",
+            frequency: "AIE:1GHz PL:230MHz",
+            precision: "INT8",
+            tops: 26.700,
+            gops_per_w: 453.32,
+            groups: &["peak"],
+        },
+        PublishedAccel {
+            name: "SSR-ViT",
+            platform: "VCK190",
+            design: "SSR [14] (FPGA'24)",
+            frequency: "AIE:1GHz PL:230MHz",
+            precision: "INT8",
+            tops: 22.030,
+            gops_per_w: 360.04,
+            groups: &["vit"],
+        },
+        PublishedAccel {
+            name: "NPE",
+            platform: "Zynq Z-7100",
+            design: "NPE [38]",
+            frequency: "200MHz",
+            precision: "16-bit",
+            tops: 0.208,
+            gops_per_w: 10.40,
+            groups: &["peak", "bert"],
+        },
+    ]
+}
+
+/// Result of a scheduling-style baseline evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineResult {
+    /// End-to-end time for one encoder layer (ns).
+    pub layer_ns: f64,
+    pub tops: f64,
+    /// Estimated average power (W).
+    pub power_w: f64,
+    pub gops_per_w: f64,
+}
+
+/// CHARM-style execution: one monolithic MM accelerator (all AIEs) called
+/// once per MM operator, with every operand/result round-tripping DRAM —
+/// the paper's critique: "the communication overhead and power waste
+/// caused by multiple calls to the operator are very obvious".
+pub fn charm_style(model: &ModelConfig, hw: &HardwareConfig) -> BaselineResult {
+    let mmsz = 64.min(crate::customize::eq3_mmsz(hw, model.bytes_per_elem()));
+    let wl = layer_workload(model, mmsz, false); // no operator fusion
+    let t_calc = hw.t_calc_ns(mmsz);
+    let dram = hw.dram_bw_gbps; // bytes/ns
+    let mut total_ns = 0.0;
+    let mut dram_bytes = 0u64;
+    for mm in &wl.mms {
+        for _ in 0..mm.count {
+            let tiles = mm.m.div_ceil(mmsz) * mm.n.div_ceil(mmsz) * mm.k.div_ceil(mmsz);
+            let compute = (tiles as f64 / hw.total_aie as f64).ceil() * t_calc;
+            // A, B in; C out — int8 in, int8 out (int32 for scores)
+            let bytes = (mm.m * mm.k + mm.k * mm.n + mm.m * mm.n) as u64;
+            let io = bytes as f64 / dram;
+            // per-call overhead: kernel launch + descriptor setup via host
+            let launch = 2_000.0;
+            total_ns += compute.max(io) + launch;
+            dram_bytes += bytes;
+        }
+    }
+    // nonlinear operators execute on PL between calls (serial)
+    for pl in &wl.pls {
+        let bytes = pl.bytes();
+        total_ns += bytes as f64 / (hw.plio_bits as f64 / 8.0 * hw.pl_freq_mhz * 1e-3 * 8.0);
+        dram_bytes += bytes;
+    }
+    finish(model, hw, &wl, total_ns, dram_bytes, 1.0)
+}
+
+/// SSR-style execution: a uniform array of Standard PUs, spatial-sequential
+/// scheduling, on-chip between ops, but *no* per-model customization —
+/// each operator group pays its own pipeline fill.
+pub fn ssr_style(model: &ModelConfig, hw: &HardwareConfig) -> BaselineResult {
+    let mmsz = 64.min(crate::customize::eq3_mmsz(hw, model.bytes_per_elem()));
+    let wl = layer_workload(model, mmsz, true);
+    let t_calc = hw.t_calc_ns(mmsz);
+    let beat = t_calc.max(hw.t_window_ns(mmsz, 1) * 4.0);
+    let fill = 3.0 * beat;
+    let mut total_ns = 0.0;
+    for mm in &wl.mms {
+        let tiles = mm.count * mm.m.div_ceil(mmsz) * mm.n.div_ceil(mmsz) * mm.k.div_ceil(mmsz);
+        let beats = (tiles as f64 / hw.total_aie as f64).ceil();
+        total_ns += beats * beat + fill;
+    }
+    let dram_bytes = 2 * (model.padded_seq_len(mmsz) * model.embed_dim) as u64;
+    finish(model, hw, &wl, total_ns, dram_bytes, 0.9)
+}
+
+fn finish(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    wl: &Workload,
+    total_ns: f64,
+    dram_bytes: u64,
+    running_frac: f64,
+) -> BaselineResult {
+    let ops = (wl.total_ops() as f64 * model.useful_fraction(wl.mmsz)) as u64;
+    let tops = ops as f64 / total_ns / 1e3;
+    let pw = crate::sim::power::power(
+        hw,
+        &crate::sim::power::PowerBreakdownInput {
+            aie_deployed: hw.total_aie,
+            aie_running_avg: hw.total_aie as f64 * running_frac,
+            pl: crate::arch::PlResources { luts: 120_000, ffs: 150_000, brams: 500, urams: 100 },
+            dram_gbps: (dram_bytes as f64 / total_ns).min(hw.dram_bw_gbps),
+        },
+    )
+    .total_w();
+    BaselineResult {
+        layer_ns: total_ns,
+        tops,
+        power_w: pw,
+        gops_per_w: ops as f64 / total_ns / pw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::customize::{customize, CustomizeOptions};
+    use crate::sched::run_edpu;
+
+    #[test]
+    fn published_table_complete() {
+        let p = published();
+        assert_eq!(p.len(), 6);
+        let peak: Vec<_> = p.iter().filter(|a| a.groups.contains(&"peak")).collect();
+        assert_eq!(peak.len(), 5);
+        // SSR is the pre-CAT SOTA
+        let ssr = p.iter().find(|a| a.name == "SSR").unwrap();
+        assert!((ssr.tops - 26.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cat_beats_charm_and_ssr_styles() {
+        // The paper's core claim, like-for-like on our substrate:
+        // customized CAT > generic SSR-style > operator-call CHARM-style.
+        let m = ModelConfig::bert_base();
+        let hw = HardwareConfig::vck5000();
+        let charm = charm_style(&m, &hw);
+        let ssr = ssr_style(&m, &hw);
+        let plan = customize(&m, &hw, &CustomizeOptions::default()).unwrap();
+        let cat = run_edpu(&plan, 16).unwrap().tops();
+        assert!(cat > ssr.tops, "CAT {cat} <= SSR-style {}", ssr.tops);
+        assert!(ssr.tops > charm.tops, "SSR-style {} <= CHARM-style {}", ssr.tops, charm.tops);
+    }
+
+    #[test]
+    fn charm_is_dram_bound() {
+        // CHARM-style should land far below the array's sustained peak.
+        let r = charm_style(&ModelConfig::bert_base(), &HardwareConfig::vck5000());
+        assert!(r.tops < 30.0, "{}", r.tops);
+        assert!(r.tops > 3.0, "{}", r.tops);
+    }
+
+    #[test]
+    fn ssr_style_near_published_ssr() {
+        // SSR-style on VCK190 parameters should land near SSR's published
+        // 26.7 TOPS (order-of-magnitude calibration).
+        let r = ssr_style(&ModelConfig::bert_base(), &HardwareConfig::vck190());
+        assert!(r.tops > 13.0 && r.tops < 45.0, "{}", r.tops);
+    }
+
+    #[test]
+    fn baseline_power_positive() {
+        let r = ssr_style(&ModelConfig::vit_base(), &HardwareConfig::vck5000());
+        assert!(r.power_w > 10.0 && r.power_w < 150.0);
+        assert!(r.gops_per_w > 0.0);
+    }
+}

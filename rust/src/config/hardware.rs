@@ -1,0 +1,267 @@
+//! Versal ACAP board descriptors (paper Table III "intrinsic hardware
+//! parameters" + §V.A hardware setup).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Calibrated power-model coefficients (see `sim::power`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerModelParams {
+    /// Board static power (W): NoC, DDR controllers, shell.
+    pub static_w: f64,
+    /// Per *running* AIE core (W) at full MM duty.
+    pub aie_active_w: f64,
+    /// Per *deployed but idle* AIE core (W): clocked, waiting.
+    pub aie_idle_w: f64,
+    /// PL dynamic power per 100K LUTs at 300 MHz (W).
+    pub pl_per_100k_lut_w: f64,
+    /// DRAM I/O power per GB/s of achieved bandwidth (W).
+    pub dram_per_gbps_w: f64,
+}
+
+/// One Versal ACAP part + board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    pub name: String,
+    /// Total AIE tiles on the device (`Total_AIE`).
+    pub total_aie: usize,
+    /// AIE array clock (GHz). Paper Table VII: 1.25 GHz on VCK5000.
+    pub aie_freq_ghz: f64,
+    /// PL fabric clock (MHz). Paper: 300 MHz.
+    pub pl_freq_mhz: f64,
+    /// AIE data ("window") memory per tile, bytes (`M_Window`). 32 KiB.
+    pub window_bytes: usize,
+    /// int8 MACs/cycle one AIE core sustains on the MM inner loop.
+    /// Calibrated: paper's 64-core MM-only throughput is 10 TOPS
+    /// -> 156 GOPS/core / (2 * 1.25 GHz) ~= 64 MACs/cycle sustained.
+    pub aie_macs_per_cycle: usize,
+    /// PLIO stream width (bits) at PL clock.
+    pub plio_bits: usize,
+    /// Total PL on-chip SRAM (bytes) — `Total_Buffer` (23.9 MB on VCK5000).
+    pub onchip_sram_bytes: usize,
+    /// Off-chip DRAM bandwidth (GB/s).
+    pub dram_bw_gbps: f64,
+    /// Off-chip DRAM capacity (bytes).
+    pub dram_bytes: usize,
+    /// PL resource pools (for the Table V estimator).
+    pub pl_luts: usize,
+    pub pl_ffs: usize,
+    pub pl_brams: usize,
+    pub pl_urams: usize,
+    /// Max pipeline depth a PRG chain may reach before the fully-pipelined
+    /// mode stops paying off (`PRG_MAX_Pipeline_Depth`, paper §V.B: 4).
+    pub prg_max_pipeline_depth: usize,
+    pub power: PowerModelParams,
+}
+
+impl HardwareConfig {
+    /// The VCK5000 development card (paper's platform): 400 usable AIE
+    /// cores, 145 TOPS Int8 peak, 23.9 MB on-chip SRAM @ 23.5 TB/s,
+    /// 16 GB DDR @ 102.4 GB/s.
+    pub fn vck5000() -> Self {
+        HardwareConfig {
+            name: "vck5000".into(),
+            total_aie: 400,
+            aie_freq_ghz: 1.25,
+            pl_freq_mhz: 300.0,
+            window_bytes: 32 * 1024,
+            aie_macs_per_cycle: 64,
+            plio_bits: 128,
+            onchip_sram_bytes: (23.9 * 1024.0 * 1024.0) as usize,
+            dram_bw_gbps: 102.4,
+            dram_bytes: 16 << 30,
+            pl_luts: 899_840,
+            pl_ffs: 1_799_680,
+            pl_brams: 967,
+            pl_urams: 463,
+            prg_max_pipeline_depth: 4,
+            power: PowerModelParams {
+                // calibrated against Table VI: (352 running-avg AIE, 67.6 W),
+                // (352, 61.5 W ViT), (64, 16.2 W limited)
+                static_w: 4.5,
+                aie_active_w: 0.165,
+                aie_idle_w: 0.055,
+                pl_per_100k_lut_w: 2.2,
+                dram_per_gbps_w: 0.035,
+            },
+        }
+    }
+
+    /// The VCK190 evaluation board (CHARM / SSR's platform).
+    pub fn vck190() -> Self {
+        HardwareConfig {
+            name: "vck190".into(),
+            total_aie: 400,
+            aie_freq_ghz: 1.0,
+            pl_freq_mhz: 230.0,
+            ..Self::vck5000()
+        }
+    }
+
+    /// The paper's BERT-Base(Limited AIE) setup: only 64 AIEs allowed,
+    /// simulating a smaller Versal part.
+    pub fn vck5000_limited(aies: usize) -> Self {
+        let mut hw = Self::vck5000();
+        hw.name = format!("vck5000-limited-{aies}");
+        hw.total_aie = aies;
+        hw
+    }
+
+    /// AIE single-core iteration time `T_Calc` for an `mmsz^3` tile (ns).
+    pub fn t_calc_ns(&self, mmsz: usize) -> f64 {
+        let macs = (mmsz * mmsz * mmsz) as f64;
+        macs / self.aie_macs_per_cycle as f64 / self.aie_freq_ghz
+    }
+
+    /// PLIO time to move one `mmsz^2` int8 window `T_Window` (ns).
+    pub fn t_window_ns(&self, mmsz: usize, bytes_per_elem: usize) -> f64 {
+        let bytes = (mmsz * mmsz * bytes_per_elem) as f64;
+        let bytes_per_ns = self.plio_bits as f64 / 8.0 * self.pl_freq_mhz * 1e-3;
+        bytes / bytes_per_ns
+    }
+
+    /// Peak int8 throughput of the whole AIE array (TOPS).
+    pub fn peak_tops(&self) -> f64 {
+        2.0 * self.total_aie as f64 * self.aie_macs_per_cycle as f64 * self.aie_freq_ghz
+            / 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        let nums: &[(&str, f64)] = &[
+            ("total_aie", self.total_aie as f64),
+            ("aie_freq_ghz", self.aie_freq_ghz),
+            ("pl_freq_mhz", self.pl_freq_mhz),
+            ("window_bytes", self.window_bytes as f64),
+            ("aie_macs_per_cycle", self.aie_macs_per_cycle as f64),
+            ("plio_bits", self.plio_bits as f64),
+            ("onchip_sram_bytes", self.onchip_sram_bytes as f64),
+            ("dram_bw_gbps", self.dram_bw_gbps),
+            ("dram_bytes", self.dram_bytes as f64),
+            ("pl_luts", self.pl_luts as f64),
+            ("pl_ffs", self.pl_ffs as f64),
+            ("pl_brams", self.pl_brams as f64),
+            ("pl_urams", self.pl_urams as f64),
+            ("prg_max_pipeline_depth", self.prg_max_pipeline_depth as f64),
+            ("power_static_w", self.power.static_w),
+            ("power_aie_active_w", self.power.aie_active_w),
+            ("power_aie_idle_w", self.power.aie_idle_w),
+            ("power_pl_per_100k_lut_w", self.power.pl_per_100k_lut_w),
+            ("power_dram_per_gbps_w", self.power.dram_per_gbps_w),
+        ];
+        for (k, v) in nums {
+            m.insert(k.to_string(), Json::Num(*v));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("hardware config missing '{k}'"))
+        };
+        let u = |k: &str| -> Result<usize> { Ok(f(k)? as usize) };
+        Ok(HardwareConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("hardware config missing 'name'"))?
+                .to_string(),
+            total_aie: u("total_aie")?,
+            aie_freq_ghz: f("aie_freq_ghz")?,
+            pl_freq_mhz: f("pl_freq_mhz")?,
+            window_bytes: u("window_bytes")?,
+            aie_macs_per_cycle: u("aie_macs_per_cycle")?,
+            plio_bits: u("plio_bits")?,
+            onchip_sram_bytes: u("onchip_sram_bytes")?,
+            dram_bw_gbps: f("dram_bw_gbps")?,
+            dram_bytes: u("dram_bytes")?,
+            pl_luts: u("pl_luts")?,
+            pl_ffs: u("pl_ffs")?,
+            pl_brams: u("pl_brams")?,
+            pl_urams: u("pl_urams")?,
+            prg_max_pipeline_depth: u("prg_max_pipeline_depth")?,
+            power: PowerModelParams {
+                static_w: f("power_static_w")?,
+                aie_active_w: f("power_aie_active_w")?,
+                aie_idle_w: f("power_aie_idle_w")?,
+                pl_per_100k_lut_w: f("power_pl_per_100k_lut_w")?,
+                dram_per_gbps_w: f("power_dram_per_gbps_w")?,
+            },
+        })
+    }
+
+    /// Resolve a named preset or a JSON file path.
+    pub fn resolve(spec: &str) -> Result<Self> {
+        match spec {
+            "vck5000" => Ok(Self::vck5000()),
+            "vck190" => Ok(Self::vck190()),
+            s if s.starts_with("vck5000-limited-") => {
+                let n: usize = s["vck5000-limited-".len()..]
+                    .parse()
+                    .map_err(|_| anyhow!("bad limited-AIE count in '{s}'"))?;
+                Ok(Self::vck5000_limited(n))
+            }
+            path if path.ends_with(".json") => {
+                Self::from_json(&super::load_json(path)?)
+            }
+            other => Err(anyhow!(
+                "unknown hardware '{other}' (try vck5000, vck190, \
+                 vck5000-limited-<n>, or a .json path)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck5000_peak_matches_datasheet_order() {
+        let hw = HardwareConfig::vck5000();
+        // 2 * 400 * 64 * 1.25 = 64 TOPS sustained-MM peak; the datasheet's
+        // 145 TOPS is the marketing peak (int8 vector peak), our model peak
+        // is the *sustained* MM roofline the paper's 150 GOPS/AIE implies.
+        assert!((hw.peak_tops() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn t_calc_t_window_ratio_near_4() {
+        // Eq. 4 cross-check: T_Calc / T_Window ~= 4 on VCK5000 (the paper
+        // reaches PLIO_AIE = 4; double buffering absorbs the ~4% shortfall
+        // — see customize::eq4_plio_aie).
+        let hw = HardwareConfig::vck5000();
+        let ratio = hw.t_calc_ns(64) / hw.t_window_ns(64, 1);
+        assert!((3.5..=4.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let hw = HardwareConfig::vck5000();
+        let j = hw.to_json();
+        let back = HardwareConfig::from_json(&j).unwrap();
+        assert_eq!(hw, back);
+    }
+
+    #[test]
+    fn resolve_presets() {
+        assert_eq!(HardwareConfig::resolve("vck5000").unwrap().total_aie, 400);
+        assert_eq!(
+            HardwareConfig::resolve("vck5000-limited-64").unwrap().total_aie,
+            64
+        );
+        assert!(HardwareConfig::resolve("nope").is_err());
+    }
+
+    #[test]
+    fn limited_keeps_other_params() {
+        let hw = HardwareConfig::vck5000_limited(64);
+        assert_eq!(hw.total_aie, 64);
+        assert_eq!(hw.aie_freq_ghz, 1.25);
+    }
+}

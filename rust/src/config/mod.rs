@@ -1,0 +1,22 @@
+//! Hardware and model configuration — the two inputs to the CAT framework.
+//!
+//! `HardwareConfig` describes a Versal ACAP part the way the paper's
+//! Table III "intrinsic hardware parameters" does; `ModelConfig` is the
+//! Transformer configuration information (Heads, Embed_dim, Dff, L).
+//! Presets mirror the paper's experimental setup (Table IV + §V.A).
+
+mod hardware;
+mod model;
+
+pub use hardware::{HardwareConfig, PowerModelParams};
+pub use model::ModelConfig;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Load either kind of config from a JSON file produced by `to_json`.
+pub fn load_json(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
+}

@@ -1,0 +1,199 @@
+//! Transformer model configuration information (paper Table IV).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// One Transformer encoder model, as CAT sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// `Head` — number of attention heads.
+    pub heads: usize,
+    /// `Embed_dim`.
+    pub embed_dim: usize,
+    /// `Dff` — FFN hidden dimension.
+    pub dff: usize,
+    /// `L` — input sequence length (logical, pre-padding).
+    pub seq_len: usize,
+    /// Encoder layer count.
+    pub layers: usize,
+    /// Data width in bits (8 = the paper's Int8 models).
+    pub bits: usize,
+}
+
+impl ModelConfig {
+    /// BERT-Base with L fixed to 256 (paper §V.A benchmark 1).
+    pub fn bert_base() -> Self {
+        ModelConfig {
+            name: "bert-base".into(),
+            heads: 12,
+            embed_dim: 768,
+            dff: 3072,
+            seq_len: 256,
+            layers: 12,
+            bits: 8,
+        }
+    }
+
+    /// ViT-Base, L = 197 (196 patches + CLS; paper §V.A benchmark 2).
+    pub fn vit_base() -> Self {
+        ModelConfig {
+            name: "vit-base".into(),
+            heads: 12,
+            embed_dim: 768,
+            dff: 3072,
+            seq_len: 197,
+            layers: 12,
+            bits: 8,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.embed_dim / self.heads
+    }
+
+    /// L padded to a multiple of the AIE tile edge (the paper pads ViT's
+    /// 197 -> 256 because `MMSZ_AIE = 64`).
+    pub fn padded_seq_len(&self, mmsz: usize) -> usize {
+        self.seq_len.div_ceil(mmsz) * mmsz
+    }
+
+    /// Fraction of padded MHA work that is useful (ViT pays a padding tax —
+    /// §V.D "a part of the throughput is occupied by the padded data").
+    pub fn useful_fraction(&self, mmsz: usize) -> f64 {
+        self.seq_len as f64 / self.padded_seq_len(mmsz) as f64
+    }
+
+    pub fn bytes_per_elem(&self) -> usize {
+        self.bits.div_ceil(8)
+    }
+
+    /// int8 parameter bytes of one encoder layer (weights only).
+    pub fn layer_weight_bytes(&self) -> usize {
+        let e = self.embed_dim;
+        let d = self.dff;
+        (3 * e * e + e * e + e * d + d * e) * self.bytes_per_elem()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        for (k, v) in [
+            ("heads", self.heads),
+            ("embed_dim", self.embed_dim),
+            ("dff", self.dff),
+            ("seq_len", self.seq_len),
+            ("layers", self.layers),
+            ("bits", self.bits),
+        ] {
+            m.insert(k.to_string(), Json::Num(v as f64));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model config missing '{k}'"))
+        };
+        let cfg = ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("model config missing 'name'"))?
+                .to_string(),
+            heads: u("heads")?,
+            embed_dim: u("embed_dim")?,
+            dff: u("dff")?,
+            seq_len: u("seq_len")?,
+            layers: u("layers")?,
+            bits: u("bits")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.heads == 0 || self.embed_dim == 0 || self.dff == 0 {
+            return Err(anyhow!("model dims must be positive"));
+        }
+        if self.embed_dim % self.heads != 0 {
+            return Err(anyhow!(
+                "embed_dim {} not divisible by heads {}",
+                self.embed_dim,
+                self.heads
+            ));
+        }
+        if self.seq_len == 0 || self.layers == 0 {
+            return Err(anyhow!("seq_len and layers must be positive"));
+        }
+        if !matches!(self.bits, 8 | 16 | 32) {
+            return Err(anyhow!("bits must be 8, 16 or 32"));
+        }
+        Ok(())
+    }
+
+    /// Resolve a named preset or a JSON file path.
+    pub fn resolve(spec: &str) -> Result<Self> {
+        match spec {
+            "bert-base" | "bert" => Ok(Self::bert_base()),
+            "vit-base" | "vit" => Ok(Self::vit_base()),
+            path if path.ends_with(".json") => {
+                Self::from_json(&super::load_json(path)?)
+            }
+            other => Err(anyhow!(
+                "unknown model '{other}' (try bert-base, vit-base, or a .json path)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table_iv() {
+        let b = ModelConfig::bert_base();
+        assert_eq!((b.heads, b.embed_dim, b.dff, b.seq_len, b.layers), (12, 768, 3072, 256, 12));
+        let v = ModelConfig::vit_base();
+        assert_eq!(v.seq_len, 197);
+        assert_eq!(v.head_dim(), 64);
+    }
+
+    #[test]
+    fn vit_pads_to_256() {
+        let v = ModelConfig::vit_base();
+        assert_eq!(v.padded_seq_len(64), 256);
+        assert!((v.useful_fraction(64) - 197.0 / 256.0).abs() < 1e-12);
+        let b = ModelConfig::bert_base();
+        assert_eq!(b.padded_seq_len(64), 256);
+        assert_eq!(b.useful_fraction(64), 1.0);
+    }
+
+    #[test]
+    fn weight_bytes() {
+        let b = ModelConfig::bert_base();
+        // 3*768^2 + 768^2 + 2*768*3072 = 7_077_888 int8 bytes / layer
+        assert_eq!(b.layer_weight_bytes(), 7_077_888);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let b = ModelConfig::bert_base();
+        assert_eq!(ModelConfig::from_json(&b.to_json()).unwrap(), b);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut b = ModelConfig::bert_base();
+        b.heads = 7; // 768 % 7 != 0
+        assert!(b.validate().is_err());
+        let mut c = ModelConfig::bert_base();
+        c.bits = 12;
+        assert!(c.validate().is_err());
+    }
+}

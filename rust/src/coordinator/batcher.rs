@@ -1,0 +1,118 @@
+//! Dynamic batcher: groups requests up to `max_batch` or until the oldest
+//! pending request has waited `timeout` (the host-side analogue of the
+//! EDPU batch loop — larger batches amortize pipeline fill, Fig. 5).
+
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub timeout: Duration,
+}
+
+/// Accumulates requests; emits a batch when full or stale.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: Vec<(Request, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        Batcher { cfg, pending: Vec::new() }
+    }
+
+    /// Add a request; returns a full batch if one is ready.
+    pub fn push(&mut self, req: Request, now: Instant) -> Option<Vec<(Request, Instant)>> {
+        self.pending.push((req, now));
+        if self.pending.len() >= self.cfg.max_batch {
+            return Some(std::mem::take(&mut self.pending));
+        }
+        if self.is_stale(now) {
+            return Some(std::mem::take(&mut self.pending));
+        }
+        None
+    }
+
+    /// True if the oldest pending request has exceeded the timeout.
+    pub fn is_stale(&self, now: Instant) -> bool {
+        self.pending
+            .first()
+            .map(|(_, t)| now.duration_since(*t) >= self.cfg.timeout)
+            .unwrap_or(false)
+    }
+
+    /// Emit whatever is pending (stream end / timer tick).
+    pub fn flush(&mut self) -> Option<Vec<(Request, Instant)>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            x_q: Tensor::I8 { data: vec![0; 4], shape: vec![2, 2] },
+            x_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn emits_full_batches() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            timeout: Duration::from_secs(10),
+        });
+        let t = Instant::now();
+        assert!(b.push(req(1), t).is_none());
+        assert!(b.push(req(2), t).is_none());
+        let batch = b.push(req(3), t).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn timeout_forces_emission() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            timeout: Duration::from_millis(1),
+        });
+        let t0 = Instant::now();
+        assert!(b.push(req(1), t0).is_none());
+        let later = t0 + Duration::from_millis(5);
+        let batch = b.push(req(2), later).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn flush_drains() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            timeout: Duration::from_secs(1),
+        });
+        assert!(b.flush().is_none());
+        b.push(req(1), Instant::now());
+        assert_eq!(b.flush().unwrap().len(), 1);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn zero_batch_rejected() {
+        Batcher::new(BatcherConfig { max_batch: 0, timeout: Duration::ZERO });
+    }
+}

@@ -1,0 +1,358 @@
+//! HOST-side coordination (paper Fig. 2): top-level resource scheduling
+//! and execution timing control of the EDPUs.
+//!
+//! The HOST "is only responsible for the scheduling work between EDPUs,
+//! and cannot interfere with the internal operation of EDPUs" — here:
+//!
+//! * a **batcher** groups incoming requests up to `max_batch` (or a
+//!   timeout), exactly the batch loop of Algorithm 1;
+//! * an **EDPU pool** of worker threads, each owning its own PJRT
+//!   [`Runtime`](crate::runtime::Runtime) (one compiled executable per
+//!   model variant), pulls batches from a shared queue — "multiple upper
+//!   level tasks can be executed in parallel without interfering";
+//! * serving statistics (latency percentiles, throughput) and, when a
+//!   plan is attached, the *simulated board* latency for each batch.
+
+mod batcher;
+
+pub use batcher::{Batcher, BatcherConfig};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arch::AcceleratorPlan;
+use crate::config::ModelConfig;
+use crate::runtime::{EncoderWeights, Runtime, Tensor};
+use crate::sched;
+use anyhow::{anyhow, Result};
+
+/// One inference request: a quantized `[L, E]` activation.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub x_q: Tensor,
+    pub x_scale: f32,
+}
+
+/// One completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Final encoder output (fp32 `[L, E]`).
+    pub output: Tensor,
+    /// Host wall-clock latency (enqueue -> completion).
+    pub latency: Duration,
+    /// Which batch this request rode in.
+    pub batch_size: usize,
+    /// Simulated VCK5000 latency for that batch, if a plan was attached.
+    pub simulated_batch_ns: Option<f64>,
+}
+
+/// Serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub batches: usize,
+    pub latencies: Vec<Duration>,
+    pub wall: Duration,
+}
+
+impl ServeStats {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.completed as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.latencies.clone();
+        v.sort();
+        let idx = ((v.len() - 1) as f64 * p).round() as usize;
+        v[idx]
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.batches as f64
+    }
+}
+
+/// Pool configuration.
+#[derive(Debug, Clone)]
+pub struct HostConfig {
+    pub artifact_dir: String,
+    /// `encoder_layer_fused` (fast) or `encoder_layer_pallas` (tiled proof).
+    pub variant: String,
+    pub model: ModelConfig,
+    /// Encoder layers to run per request (can be < model.layers for demos).
+    pub layers: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    /// Attach to report simulated-board latency alongside wall clock.
+    pub plan: Option<AcceleratorPlan>,
+    pub weight_seed: u64,
+}
+
+impl HostConfig {
+    pub fn new(model: ModelConfig) -> HostConfig {
+        HostConfig {
+            artifact_dir: "artifacts".into(),
+            variant: "encoder_layer_fused".into(),
+            model,
+            layers: 2,
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(5),
+            plan: None,
+            weight_seed: 0xCA7,
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<(Vec<(Request, Instant)>, usize)>>,
+    available: Condvar,
+    done: Mutex<Vec<Response>>,
+    stop: AtomicBool,
+    errors: Mutex<Vec<String>>,
+}
+
+/// The HOST: accepts requests, batches them, runs them on the EDPU pool.
+pub struct Host {
+    cfg: HostConfig,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    batcher: Batcher,
+    submitted: u64,
+    started: Instant,
+}
+
+impl Host {
+    /// Start the worker pool. Each worker opens its own PJRT runtime and
+    /// pre-compiles the model variant, so serving latency excludes
+    /// compilation.
+    pub fn start(cfg: HostConfig) -> Result<Host> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            done: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            errors: Mutex::new(Vec::new()),
+        });
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let sh = Arc::clone(&shared);
+            let cfg2 = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("edpu-{wid}"))
+                    .spawn(move || worker_loop(wid, cfg2, sh))
+                    .map_err(|e| anyhow!("spawning worker: {e}"))?,
+            );
+        }
+        let batcher = Batcher::new(BatcherConfig {
+            max_batch: cfg.max_batch,
+            timeout: cfg.batch_timeout,
+        });
+        Ok(Host {
+            cfg,
+            shared,
+            workers,
+            batcher,
+            submitted: 0,
+            started: Instant::now(),
+        })
+    }
+
+    /// Enqueue a request (non-blocking). The batcher may hold it until
+    /// `max_batch` requests accumulate or the timeout passes.
+    pub fn submit(&mut self, req: Request) {
+        self.submitted += 1;
+        if let Some(batch) = self.batcher.push(req, Instant::now()) {
+            self.dispatch(batch);
+        }
+    }
+
+    /// Flush the batcher (end of request stream).
+    pub fn flush(&mut self) {
+        if let Some(batch) = self.batcher.flush() {
+            self.dispatch(batch);
+        }
+    }
+
+    fn dispatch(&self, batch: Vec<(Request, Instant)>) {
+        let n = batch.len();
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back((batch, n));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Wait until every submitted request has completed; returns all
+    /// responses (sorted by id) and the serving stats.
+    pub fn drain(mut self) -> Result<(Vec<Response>, ServeStats)> {
+        self.flush();
+        loop {
+            {
+                let done = self.shared.done.lock().unwrap();
+                if done.len() as u64 >= self.submitted {
+                    break;
+                }
+                let errs = self.shared.errors.lock().unwrap();
+                if !errs.is_empty() {
+                    return Err(anyhow!("worker error: {}", errs.join("; ")));
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut out = std::mem::take(&mut *self.shared.done.lock().unwrap());
+        out.sort_by_key(|r| r.id);
+        let stats = ServeStats {
+            completed: out.len(),
+            batches: out.iter().map(|r| (r.id, r.batch_size)).fold(
+                std::collections::BTreeSet::new(),
+                |mut s, (id, b)| {
+                    // count batches by their first member id bucket
+                    s.insert(id / b.max(1) as u64 * b.max(1) as u64);
+                    s
+                },
+            )
+            .len(),
+            latencies: out.iter().map(|r| r.latency).collect(),
+            wall: self.started.elapsed(),
+        };
+        let errs = self.shared.errors.lock().unwrap();
+        if !errs.is_empty() {
+            return Err(anyhow!("worker error: {}", errs.join("; ")));
+        }
+        Ok((out, stats))
+    }
+
+    pub fn config(&self) -> &HostConfig {
+        &self.cfg
+    }
+}
+
+fn worker_loop(_wid: usize, cfg: HostConfig, sh: Arc<Shared>) {
+    let mut rt = match Runtime::open(&cfg.artifact_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            sh.errors.lock().unwrap().push(format!("runtime open: {e}"));
+            return;
+        }
+    };
+    if let Err(e) = rt.compile(&cfg.variant) {
+        sh.errors.lock().unwrap().push(format!("compile: {e}"));
+        return;
+    }
+    let weights: Vec<EncoderWeights> = (0..cfg.layers)
+        .map(|i| EncoderWeights::synthetic(&cfg.model, cfg.weight_seed.wrapping_add(i as u64)))
+        .collect();
+
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if sh.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = sh.available.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+            }
+        };
+        let Some((batch, batch_size)) = job else { return };
+
+        // simulated board latency for this batch (once per batch)
+        let sim_ns = cfg
+            .plan
+            .as_ref()
+            .and_then(|p| sched::run_edpu(p, batch_size).ok())
+            .map(|r| r.makespan_ns() * cfg.layers as f64);
+
+        for (req, enq) in batch {
+            let result = rt.encoder_forward(
+                &cfg.variant,
+                req.x_q.clone(),
+                req.x_scale,
+                &weights,
+            );
+            match result {
+                Ok(output) => {
+                    sh.done.lock().unwrap().push(Response {
+                        id: req.id,
+                        output,
+                        latency: enq.elapsed(),
+                        batch_size,
+                        simulated_batch_ns: sim_ns,
+                    });
+                }
+                Err(e) => {
+                    sh.errors.lock().unwrap().push(format!("req {}: {e}", req.id));
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Generate a random request for demos/tests.
+pub fn synthetic_request(model: &ModelConfig, mmsz: usize, id: u64, seed: u64) -> Request {
+    use crate::util::prng::Prng;
+    let mut rng = Prng::new(seed);
+    let l = model.padded_seq_len(mmsz);
+    let e = model.embed_dim;
+    let x: Vec<f32> = (0..l * e).map(|_| rng.gaussian() as f32).collect();
+    let (x_q, x_scale) = crate::runtime::quantize_activation(&x, &[l, e]);
+    Request { id, x_q, x_scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let stats = ServeStats {
+            completed: 4,
+            batches: 2,
+            latencies: vec![
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+                Duration::from_millis(3),
+                Duration::from_millis(100),
+            ],
+            wall: Duration::from_secs(1),
+        };
+        assert_eq!(stats.percentile(0.0), Duration::from_millis(1));
+        assert_eq!(stats.percentile(1.0), Duration::from_millis(100));
+        assert_eq!(stats.throughput_rps(), 4.0);
+        assert_eq!(stats.mean_batch(), 2.0);
+    }
+
+    #[test]
+    fn synthetic_request_shape() {
+        let m = ModelConfig::bert_base();
+        let r = synthetic_request(&m, 64, 3, 42);
+        assert_eq!(r.x_q.shape(), &[256, 768]);
+        assert!(r.x_scale > 0.0);
+        assert_eq!(r.id, 3);
+    }
+
+    // end-to-end host tests live in rust/tests/ (they need artifacts)
+}

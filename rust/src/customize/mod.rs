@@ -1,0 +1,495 @@
+//! The CAT customization strategy (paper §IV): decide the three
+//! customizable attributes — AIE MM PU scale (Eq. 3–4), stage parallel
+//! modes (Eq. 5–6), ATB parallelism (Eq. 7–8) — from the model
+//! configuration and the board's intrinsic parameters, then allocate PUs
+//! to PRGs (§V.C) and estimate PL resources (Table V).
+
+mod resources;
+
+pub use resources::{estimate_stage_resources, StageKind};
+
+use crate::arch::{
+    AcceleratorPlan, ParallelMode, Prg, PrgKind, PuClass, PuSpec, StagePlan,
+};
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::workload::{layer_workload, MmSite};
+use anyhow::{anyhow, Result};
+
+/// Ablation / override knobs (Table II toggles these; normal use leaves
+/// everything `None` and lets Eq. 3–8 decide).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CustomizeOptions {
+    /// Force the independent-linear (merged QKV) organization on/off.
+    pub independent_linear: Option<bool>,
+    /// Force the MHA stage parallel mode.
+    pub force_mha_mode: Option<ParallelMode>,
+    /// Force the FFN stage parallel mode.
+    pub force_ffn_mode: Option<ParallelMode>,
+    /// Force `P_ATB`.
+    pub p_atb: Option<usize>,
+}
+
+/// Eq. 3: largest power-of-two tile edge whose square int8 tile fits in a
+/// quarter of the AIE window (two operands x double buffering).
+pub fn eq3_mmsz(hw: &HardwareConfig, bytes_per_elem: usize) -> usize {
+    let budget = hw.window_bytes / 4;
+    let mut mmsz = 1usize;
+    while (2 * mmsz) * (2 * mmsz) * bytes_per_elem <= budget {
+        mmsz *= 2;
+    }
+    mmsz
+}
+
+/// Eq. 4: how many cores one PLIO can feed in packet-switch mode without
+/// stalling compute: `floor(T_Calc / T_Window)`.
+///
+/// A 5% tolerance is applied before the floor: with double buffering the
+/// next window's tail can overlap the current iteration, so a ~4% shortfall
+/// (exactly what the VCK5000 numbers give: 3276.8 ns / 853.3 ns = 3.84)
+/// still sustains `T_PU ~= T_Calc` — and the paper indeed reaches
+/// `PLIO_AIE = 4` on this board.
+pub fn eq4_plio_aie(hw: &HardwareConfig, mmsz: usize, bytes_per_elem: usize) -> usize {
+    let t_calc = hw.t_calc_ns(mmsz);
+    let t_window = hw.t_window_ns(mmsz, bytes_per_elem);
+    let ratio = t_calc / t_window * 1.05;
+    (ratio.floor() as usize).max(1)
+}
+
+/// Eq. 5 Factor1 for the MHA stage: LB MM scale demanded by the model vs
+/// the MM scale the whole computing engine can take in one shot.
+pub fn factor1_mha(model: &ModelConfig, hw: &HardwareConfig, mmsz: usize, plio: usize) -> f64 {
+    let l = model.padded_seq_len(mmsz) as f64;
+    let e = model.embed_dim as f64;
+    let engine = engine_capacity(hw, mmsz, plio);
+    // 4 LB matmuls of L x E x E (merged QKV counts as 3 + projection)
+    4.0 * l * e * e / engine
+}
+
+/// Eq. 6 Factor1 for the FFN stage.
+pub fn factor1_ffn(model: &ModelConfig, hw: &HardwareConfig, mmsz: usize, plio: usize) -> f64 {
+    let l = model.padded_seq_len(mmsz) as f64;
+    let e = model.embed_dim as f64;
+    let d = model.dff as f64;
+    2.0 * l * e * d / engine_capacity(hw, mmsz, plio)
+}
+
+/// `floor(Total_AIE / PLIO_AIE^2) * (PLIO_AIE * MMSZ)^3` — the denominator
+/// of Eq. 5/6.
+fn engine_capacity(hw: &HardwareConfig, mmsz: usize, plio: usize) -> f64 {
+    let groups = (hw.total_aie / (plio * plio)) as f64;
+    let edge = (plio * mmsz) as f64;
+    groups * edge * edge * edge
+}
+
+/// Eq. 5 Factor2: PL on-chip bytes the MHA stage needs when fully
+/// pipeline-unrolled (the §V.B accounting: QKV-out + ATB I/O + attention
+/// cache + Proj I/O + weight cache = 7.5625 MiB for BERT-Base).
+pub fn factor2_mha_bytes(
+    model: &ModelConfig,
+    mmsz: usize,
+    plio: usize,
+    p_atb: usize,
+) -> u64 {
+    let l = model.padded_seq_len(mmsz) as u64;
+    let e = model.embed_dim as u64;
+    let d = model.dff as u64;
+    let dh = model.head_dim() as u64;
+    let chunk = (plio * mmsz) as u64; // Large-PU output width
+    let qkv_out = l * chunk * 3;
+    let atb_io = l * dh * 4 * p_atb as u64;
+    let attn_cache = p_atb as u64 * l * l / 2;
+    let proj_io = l * e + l * chunk;
+    // weight cache holds ALL layer weights (shared by both stages):
+    // 4*E^2 (QKV merged + Proj) + 2*E*Dff
+    let weights = 4 * e * e + 2 * e * d;
+    qkv_out + atb_io + attn_cache + proj_io + weights
+}
+
+/// Eq. 6 Factor2: FFN1/FFN2 buffers under full pipelining.
+pub fn factor2_ffn_bytes(model: &ModelConfig, mmsz: usize) -> u64 {
+    let l = model.padded_seq_len(mmsz) as u64;
+    let e = model.embed_dim as u64;
+    let d = model.dff as u64;
+    // FFN weights + the inter-LB activation (L x Dff int8) + in/out rows
+    let weights = 2 * e * d;
+    weights + l * d + 2 * l * e
+}
+
+/// Eq. 5/6 decision rule.
+pub fn decide_mode(factor1: f64, factor2_bytes: u64, hw: &HardwareConfig) -> ParallelMode {
+    if factor1 >= hw.prg_max_pipeline_depth as f64
+        || factor2_bytes > hw.onchip_sram_bytes as u64
+    {
+        ParallelMode::SerialHybrid
+    } else {
+        ParallelMode::FullyPipelined
+    }
+}
+
+/// Eq. 7: integer head-ratio between what the QKV LB emits per execution
+/// and what one ATB consumes.
+pub fn eq7_p_atb(model: &ModelConfig, mmsz: usize, plio: usize) -> Option<usize> {
+    let lb_out_cols = plio * mmsz; // Large-PU output tile width
+    let dh = model.head_dim();
+    if lb_out_cols % dh == 0 {
+        Some(lb_out_cols / dh)
+    } else {
+        None
+    }
+}
+
+/// Eq. 8 fallback: throughput ratio.
+pub fn eq8_p_atb(model: &ModelConfig, hw: &HardwareConfig, mmsz: usize, plio: usize) -> usize {
+    // QKV LB throughput on one Large PU vs one ATB chain's throughput on
+    // (2 Small + 1 Standard); both are t_calc-bound, so the ratio reduces
+    // to an ops ratio per beat.
+    let large = PuSpec::by_class(PuClass::Large);
+    let small = PuSpec::by_class(PuClass::Small);
+    let std_ = PuSpec::by_class(PuClass::Standard);
+    let lb_ops = large.ops(mmsz) as f64;
+    let atb_ops = (2 * small.ops(mmsz) + std_.ops(mmsz)) as f64;
+    let _ = hw;
+    let _ = model;
+    let _ = plio;
+    ((lb_ops / atb_ops).round() as usize).max(1)
+}
+
+/// §V.C PU allocation for the fully-pipelined MHA stage: one Large per LB
+/// PRG, and per ATB a (2 Small + 1 Standard) pre/post pair.
+fn mha_pipelined_prgs(independent_linear: bool, p_atb: usize) -> Vec<Prg> {
+    let mut prgs = Vec::new();
+    if independent_linear {
+        // merged QKV computed as 3 Large-PU LB PRGs + Proj
+        for kind in [PrgKind::QLb, PrgKind::KLb, PrgKind::VLb] {
+            prgs.push(Prg { kind, atb_index: 0, pus: vec![(PuClass::Large, 1)] });
+        }
+    } else {
+        for kind in [PrgKind::QLb, PrgKind::KLb, PrgKind::VLb] {
+            prgs.push(Prg { kind, atb_index: 0, pus: vec![(PuClass::Large, 1)] });
+        }
+    }
+    for i in 0..p_atb {
+        prgs.push(Prg {
+            kind: PrgKind::AtbPre,
+            atb_index: i,
+            pus: vec![(PuClass::Small, 2)],
+        });
+        prgs.push(Prg {
+            kind: PrgKind::AtbPost,
+            atb_index: i,
+            pus: vec![(PuClass::Standard, 1)],
+        });
+    }
+    prgs.push(Prg { kind: PrgKind::ProjLb, atb_index: 0, pus: vec![(PuClass::Large, 1)] });
+    prgs
+}
+
+/// FFN stage reuses the MHA stage's Large PUs (two per LB) — the paper's
+/// two-stage hardware sharing.
+fn ffn_pipelined_prgs(n_large: usize) -> Vec<Prg> {
+    let per_lb = (n_large / 2).max(1);
+    vec![
+        Prg { kind: PrgKind::Ffn1Lb, atb_index: 0, pus: vec![(PuClass::Large, per_lb)] },
+        Prg { kind: PrgKind::Ffn2Lb, atb_index: 0, pus: vec![(PuClass::Large, per_lb)] },
+    ]
+}
+
+/// Serial allocation (Limited-AIE): one shared PU pool, every PRG uses it
+/// in turn.
+fn serial_prgs(pool: &[(PuClass, usize)], independent_linear: bool, mha: bool) -> Vec<Prg> {
+    let mut prgs = Vec::new();
+    if mha {
+        let lb_kinds: Vec<PrgKind> = if independent_linear {
+            vec![PrgKind::QkvLb]
+        } else {
+            vec![PrgKind::QLb, PrgKind::KLb, PrgKind::VLb]
+        };
+        for kind in lb_kinds {
+            prgs.push(Prg { kind, atb_index: 0, pus: pool.to_vec() });
+        }
+        prgs.push(Prg { kind: PrgKind::AtbPre, atb_index: 0, pus: pool.to_vec() });
+        prgs.push(Prg { kind: PrgKind::AtbPost, atb_index: 0, pus: pool.to_vec() });
+        prgs.push(Prg { kind: PrgKind::ProjLb, atb_index: 0, pus: pool.to_vec() });
+    } else {
+        prgs.push(Prg { kind: PrgKind::Ffn1Lb, atb_index: 0, pus: pool.to_vec() });
+        prgs.push(Prg { kind: PrgKind::Ffn2Lb, atb_index: 0, pus: pool.to_vec() });
+    }
+    prgs
+}
+
+/// Largest PU mix that fits a core budget (used by serial mode).
+fn best_pool_for(budget: usize) -> Vec<(PuClass, usize)> {
+    for class in [PuClass::Large, PuClass::Standard, PuClass::Small] {
+        let cores = PuSpec::by_class(class).cores();
+        if budget >= cores {
+            return vec![(class, budget / cores)];
+        }
+    }
+    vec![(PuClass::Small, 1)]
+}
+
+/// Top-level: derive a customized accelerator (the "top-down" strategy).
+pub fn customize(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    opts: &CustomizeOptions,
+) -> Result<AcceleratorPlan> {
+    model.validate()?;
+    let bytes = model.bytes_per_elem();
+
+    // --- Eq. 3 / Eq. 4: PU scale attributes ---
+    let mmsz = eq3_mmsz(hw, bytes);
+    let plio = eq4_plio_aie(hw, mmsz, bytes);
+    if mmsz < 2 {
+        return Err(anyhow!("window memory too small for any tile"));
+    }
+
+    let independent_linear = opts.independent_linear.unwrap_or(true);
+
+    // --- Eq. 7 / Eq. 8: ATB parallelism ---
+    let p_atb_unclamped = opts
+        .p_atb
+        .or_else(|| eq7_p_atb(model, mmsz, plio))
+        .unwrap_or_else(|| eq8_p_atb(model, hw, mmsz, plio));
+    let p_atb = p_atb_unclamped.clamp(1, model.heads);
+
+    // --- Eq. 5 / Eq. 6: parallel modes ---
+    let f1_mha = factor1_mha(model, hw, mmsz, plio);
+    let f2_mha = factor2_mha_bytes(model, mmsz, plio, p_atb);
+    let f1_ffn = factor1_ffn(model, hw, mmsz, plio);
+    let f2_ffn = factor2_ffn_bytes(model, mmsz);
+
+    let mut mha_mode = opts
+        .force_mha_mode
+        .unwrap_or_else(|| decide_mode(f1_mha, f2_mha, hw));
+    let mut ffn_mode = opts
+        .force_ffn_mode
+        .unwrap_or_else(|| decide_mode(f1_ffn, f2_ffn, hw));
+
+    // The pipelined allocation needs 4 Large + p_atb*(2 Small + 1 Standard)
+    // cores; if the board cannot host it, fall back to serial (this is
+    // exactly what the Limited-AIE configuration exercises).
+    let pipelined_cores = 4 * PuSpec::by_class(PuClass::Large).cores()
+        + p_atb
+            * (2 * PuSpec::by_class(PuClass::Small).cores()
+                + PuSpec::by_class(PuClass::Standard).cores());
+    if hw.total_aie < pipelined_cores && opts.force_mha_mode.is_none() {
+        mha_mode = ParallelMode::Serial;
+    }
+    if hw.total_aie < 4 * PuSpec::by_class(PuClass::Large).cores()
+        && opts.force_ffn_mode.is_none()
+    {
+        ffn_mode = ParallelMode::Serial;
+    }
+
+    // --- PRG construction + PU allocation ---
+    let mha = match mha_mode {
+        ParallelMode::FullyPipelined => StagePlan {
+            mode: mha_mode,
+            prgs: mha_pipelined_prgs(independent_linear, p_atb),
+        },
+        ParallelMode::SerialHybrid => {
+            // LBs serial with the whole pool; ATBs split the pool p_atb ways
+            let pool = best_pool_for(hw.total_aie);
+            let mut prgs = serial_prgs(&pool, independent_linear, true);
+            // mark ATB PRGs as parallel instances
+            let per_atb = best_pool_for(hw.total_aie / p_atb.max(1));
+            prgs.retain(|p| !p.kind.is_atb());
+            for i in 0..p_atb {
+                prgs.push(Prg { kind: PrgKind::AtbPre, atb_index: i, pus: per_atb.clone() });
+                prgs.push(Prg { kind: PrgKind::AtbPost, atb_index: i, pus: per_atb.clone() });
+            }
+            StagePlan { mode: mha_mode, prgs }
+        }
+        ParallelMode::Serial => StagePlan {
+            mode: mha_mode,
+            prgs: serial_prgs(&best_pool_for(hw.total_aie), independent_linear, true),
+        },
+    };
+
+    let n_large_mha = mha
+        .prgs
+        .iter()
+        .flat_map(|p| p.pus.iter())
+        .filter(|(c, _)| *c == PuClass::Large)
+        .map(|(_, n)| n)
+        .sum::<usize>()
+        .max(1);
+
+    let ffn = match ffn_mode {
+        ParallelMode::FullyPipelined | ParallelMode::SerialHybrid => StagePlan {
+            mode: ParallelMode::FullyPipelined,
+            prgs: ffn_pipelined_prgs(n_large_mha.min(4)),
+        },
+        ParallelMode::Serial => StagePlan {
+            mode: ffn_mode,
+            prgs: serial_prgs(&best_pool_for(hw.total_aie), independent_linear, false),
+        },
+    };
+
+    // --- Table V resource estimate ---
+    let wl = layer_workload(model, mmsz, independent_linear);
+    let res_mha = resources::estimate_stage_resources(StageKind::Mha, &mha, &wl, p_atb);
+    let res_ffn = resources::estimate_stage_resources(StageKind::Ffn, &ffn, &wl, p_atb);
+    // Stages share hardware; shared fraction calibrated to Table V's
+    // "overall < sum of stages".
+    let res_overall = res_mha.union_shared(&res_ffn, 0.70);
+
+    let plan = AcceleratorPlan {
+        model: model.clone(),
+        hw: hw.clone(),
+        mmsz,
+        plio_aie: plio,
+        independent_linear,
+        p_atb,
+        mha,
+        ffn,
+        factor1_mha: f1_mha,
+        factor2_mha_bytes: f2_mha,
+        factor1_ffn: f1_ffn,
+        factor2_ffn_bytes: f2_ffn,
+        res_mha,
+        res_ffn,
+        res_overall,
+    };
+
+    // Feasibility invariants
+    if plan.cores_deployed() > hw.total_aie {
+        return Err(anyhow!(
+            "allocation exceeds AIE budget: {} > {}",
+            plan.cores_deployed(),
+            hw.total_aie
+        ));
+    }
+    let _ = wl.mms_at(MmSite::AtbPre);
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bert() -> ModelConfig {
+        ModelConfig::bert_base()
+    }
+
+    fn vck() -> HardwareConfig {
+        HardwareConfig::vck5000()
+    }
+
+    #[test]
+    fn eq3_gives_64_on_vck5000() {
+        // 64^2 * 1B = 4 KiB <= 32 KiB / 4 = 8 KiB; 128^2 = 16 KiB > 8 KiB.
+        assert_eq!(eq3_mmsz(&vck(), 1), 64);
+    }
+
+    #[test]
+    fn eq3_scales_with_window() {
+        let mut hw = vck();
+        hw.window_bytes = 8 * 1024; // budget 2 KiB -> 32x32 int8
+        assert_eq!(eq3_mmsz(&hw, 1), 32);
+        // int16 exactly fills the quarter window at 64 (64^2*2 = 8 KiB):
+        assert_eq!(eq3_mmsz(&vck(), 2), 64);
+        assert_eq!(eq3_mmsz(&vck(), 4), 32); // fp32 halves the edge
+    }
+
+    #[test]
+    fn eq4_gives_4_on_vck5000() {
+        assert_eq!(eq4_plio_aie(&vck(), 64, 1), 4);
+    }
+
+    #[test]
+    fn design_case_factor1() {
+        // §V.B: Factor1 = 1.5 (paper, 1 dp); exact arithmetic gives
+        // 4*256*768^2 / (25 * 256^3) = 1.44.
+        let f1 = factor1_mha(&bert(), &vck(), 64, 4);
+        assert!((f1 - 1.44).abs() < 0.01, "{f1}");
+        assert!(f1 < 4.0); // < PRG_MAX_Pipeline_Depth -> fully pipelined
+    }
+
+    #[test]
+    fn design_case_factor2_is_7_5625_mib() {
+        let f2 = factor2_mha_bytes(&bert(), 64, 4, 4);
+        assert_eq!(f2, 7_929_856); // = 7.5625 MiB, the paper's number
+        assert!((f2 as f64 / (1024.0 * 1024.0) - 7.5625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn design_case_p_atb_4() {
+        assert_eq!(eq7_p_atb(&bert(), 64, 4), Some(4));
+    }
+
+    #[test]
+    fn design_case_full_plan() {
+        // The §V.B walk-through end to end.
+        let plan = customize(&bert(), &vck(), &CustomizeOptions::default()).unwrap();
+        assert_eq!(plan.mmsz, 64);
+        assert_eq!(plan.plio_aie, 4);
+        assert_eq!(plan.p_atb, 4);
+        assert_eq!(plan.mha.mode, ParallelMode::FullyPipelined);
+        assert_eq!(plan.mha.cores_deployed(), 352); // §V.C
+        assert!((plan.deployment_rate() - 0.88).abs() < 1e-9);
+        // FFN reuses 4 Large PUs = 256 cores
+        assert_eq!(plan.ffn.cores_deployed(), 256);
+    }
+
+    #[test]
+    fn vit_plan_matches_bert_structure() {
+        let plan = customize(&ModelConfig::vit_base(), &vck(), &CustomizeOptions::default())
+            .unwrap();
+        assert_eq!(plan.mha.cores_deployed(), 352);
+        assert_eq!(plan.p_atb, 4);
+        assert_eq!(plan.mha.mode, ParallelMode::FullyPipelined);
+    }
+
+    #[test]
+    fn limited_aie_goes_serial() {
+        let hw = HardwareConfig::vck5000_limited(64);
+        let plan = customize(&bert(), &hw, &CustomizeOptions::default()).unwrap();
+        assert_eq!(plan.mha.mode, ParallelMode::Serial);
+        assert_eq!(plan.cores_deployed(), 64);
+        assert!((plan.deployment_rate() - 1.0).abs() < 1e-9); // Table V: 100%
+        // serial mode keeps buffers small: no URAM (Table V row 3)
+        assert_eq!(plan.res_overall.urams, 0);
+    }
+
+    #[test]
+    fn tiny_budget_still_feasible() {
+        let hw = HardwareConfig::vck5000_limited(4);
+        let plan = customize(&bert(), &hw, &CustomizeOptions::default()).unwrap();
+        assert!(plan.cores_deployed() <= 4);
+    }
+
+    #[test]
+    fn huge_model_forces_serial_hybrid() {
+        let mut m = bert();
+        m.seq_len = 4096;
+        m.embed_dim = 4096;
+        m.dff = 16384;
+        m.heads = 64;
+        let plan = customize(&m, &vck(), &CustomizeOptions::default()).unwrap();
+        assert_ne!(plan.mha.mode, ParallelMode::FullyPipelined);
+    }
+
+    #[test]
+    fn overrides_respected() {
+        let opts = CustomizeOptions {
+            independent_linear: Some(false),
+            p_atb: Some(1),
+            force_mha_mode: Some(ParallelMode::SerialHybrid),
+            force_ffn_mode: None,
+        };
+        let plan = customize(&bert(), &vck(), &opts).unwrap();
+        assert!(!plan.independent_linear);
+        assert_eq!(plan.p_atb, 1);
+        assert_eq!(plan.mha.mode, ParallelMode::SerialHybrid);
+    }
+
+    #[test]
+    fn plan_json_exports() {
+        let plan = customize(&bert(), &vck(), &CustomizeOptions::default()).unwrap();
+        let j = plan.to_json();
+        assert_eq!(j.get("p_atb").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("aie_deployed").unwrap().as_usize(), Some(352));
+    }
+}

@@ -1,0 +1,35 @@
+//! # CAT: Customized Transformer Accelerator Framework on Versal ACAP
+//!
+//! Full-system reproduction of Zhang, Liu & Bao (2024).  The crate derives
+//! customized Transformer accelerators for a (simulated) Versal ACAP part:
+//!
+//! * [`config`] — hardware + model descriptors (paper Tables III/IV);
+//! * [`workload`] — Transformer load analysis (§IV.A);
+//! * [`arch`] — the abstract accelerator architecture: PU specs, PRGs,
+//!   ATB/LB, EDPU stages (§III);
+//! * [`customize`] — the Eq. 3–8 customization strategy (§IV);
+//! * [`sim`] — discrete-event Versal ACAP substrate (AIE/PLIO/PL/power);
+//! * [`sched`] — Algorithm 1: EDPU stage execution over the simulator;
+//! * [`metrics`] — AIE utilization rates (Eq. 1–2), TOPS, GOPS/W;
+//! * [`baselines`] — CHARM/SSR-style and published GPU/FPGA comparators;
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas encoder;
+//! * [`coordinator`] — HOST-side request batching over an EDPU pool;
+//! * [`report`] — renderers for every paper table/figure.
+//!
+//! See DESIGN.md for the substitution map (real board → simulator) and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod arch;
+pub mod baselines;
+pub mod codegen;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod customize;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,308 @@
+//! `cat` — the CAT framework CLI (leader entrypoint).
+//!
+//! ```text
+//! cat customize --model bert-base --hw vck5000 [--json]
+//! cat simulate  --model bert-base --hw vck5000 --batch 16
+//! cat table 2|5|6|7     reproduce the paper tables
+//! cat fig5              reproduce Figure 5
+//! cat obs1              reproduce Observation 1
+//! cat verify            numerics: pallas-tiled == fused == stage-composed
+//! cat serve  --requests 32 --batch 8 --layers 2 --workers 1
+//! ```
+
+use anyhow::{anyhow, Result};
+use cat::experiments;
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::coordinator::{synthetic_request, Host, HostConfig};
+use cat::customize::{customize, CustomizeOptions};
+use cat::metrics::summarize;
+use cat::report;
+use cat::runtime::{EncoderWeights, Runtime};
+use cat::sched::run_edpu;
+use cat::util::cli;
+
+const VALUED: &[&str] = &[
+    "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
+];
+
+fn main() {
+    let args = cli::parse(std::env::args().skip(1), VALUED);
+    let result = match args.subcommand.as_deref() {
+        Some("customize") => cmd_customize(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("table") => cmd_table(&args),
+        Some("fig5") => cmd_fig5(&args),
+        Some("obs1") => cmd_obs1(),
+        Some("verify") => cmd_verify(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("codegen") => cmd_codegen(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}'\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+cat — Customized Transformer Accelerator framework (Versal ACAP, simulated)
+
+subcommands:
+  customize --model <m> --hw <h> [--json]   derive an accelerator plan
+  simulate  --model <m> --hw <h> [--batch N]  run the EDPU simulator
+  table <2|5|6|7>                           reproduce a paper table
+  fig5                                      reproduce Figure 5
+  obs1                                      reproduce Observation 1
+  verify [--artifacts <dir>]                check PJRT numerics end to end
+  serve [--requests N] [--batch B] [--layers L] [--workers W]
+                                            serve batched requests (PJRT)
+  codegen --model <m> --hw <h> [--json]     emit the AIE graph design
+models: bert-base | vit-base | <path>.json
+hardware: vck5000 | vck190 | vck5000-limited-<n> | <path>.json
+";
+
+fn model_of(args: &cli::Args) -> Result<ModelConfig> {
+    ModelConfig::resolve(args.opt_or("model", "bert-base"))
+}
+
+fn hw_of(args: &cli::Args) -> Result<HardwareConfig> {
+    HardwareConfig::resolve(args.opt_or("hw", "vck5000"))
+}
+
+fn cmd_customize(args: &cli::Args) -> Result<()> {
+    let model = model_of(args)?;
+    let hw = hw_of(args)?;
+    let plan = customize(&model, &hw, &CustomizeOptions::default())?;
+    if args.flag("json") {
+        println!("{}", plan.to_json());
+        return Ok(());
+    }
+    println!("== CAT customization: {} on {} ==", model.name, hw.name);
+    println!("  MMSZ_AIE (Eq.3)         = {}", plan.mmsz);
+    println!("  PLIO_AIE (Eq.4)         = {}", plan.plio_aie);
+    println!("  independent linear      = {}", plan.independent_linear);
+    println!("  P_ATB (Eq.7/8)          = {}", plan.p_atb);
+    println!(
+        "  MHA mode (Eq.5)         = {} (Factor1 {:.2}, Factor2 {:.4} MiB)",
+        plan.mha.mode,
+        plan.factor1_mha,
+        plan.factor2_mha_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "  FFN mode (Eq.6)         = {} (Factor1 {:.2}, Factor2 {:.4} MiB)",
+        plan.ffn.mode,
+        plan.factor1_ffn,
+        plan.factor2_ffn_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "  AIE deployed            = {} / {} ({:.0}%)",
+        plan.cores_deployed(),
+        hw.total_aie,
+        plan.deployment_rate() * 100.0
+    );
+    for (name, stage) in [("MHA", &plan.mha), ("FFN", &plan.ffn)] {
+        println!("  {name} PRGs:");
+        for prg in &stage.prgs {
+            println!(
+                "    {:?}[atb{}] <- {:?} ({} cores)",
+                prg.kind, prg.atb_index, prg.pus, prg.cores()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &cli::Args) -> Result<()> {
+    let model = model_of(args)?;
+    let hw = hw_of(args)?;
+    let batch = args.opt_usize("batch", 16);
+    let plan = customize(&model, &hw, &CustomizeOptions::default())?;
+    let r = run_edpu(&plan, batch)?;
+    let s = summarize(&plan, &r);
+    println!("{}", report::table6(&[s]));
+    Ok(())
+}
+
+fn cmd_table(args: &cli::Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("2") => {
+            println!("{}", report::table2(&experiments::table2_rows()?));
+        }
+        Some("5") => {
+            let plans = experiments::table5_plans()?;
+            let refs: Vec<(&str, &cat::arch::AcceleratorPlan)> =
+                plans.iter().map(|(n, p)| (*n, p)).collect();
+            println!("{}", report::table5(&refs));
+        }
+        Some("6") => {
+            println!("{}", report::table6(&experiments::table6_rows()?));
+        }
+        Some("7") => {
+            let d = experiments::table7_data()?;
+            println!(
+                "{}",
+                report::table7_group(
+                    "peak",
+                    &d.cat_peak,
+                    &[
+                        ("CHARM-style (sim)", d.charm_style),
+                        ("SSR-style (sim)", d.ssr_style)
+                    ]
+                )
+            );
+            println!("{}", report::table7_group("vit", &d.cat_vit, &[]));
+            println!("{}", report::table7_group("bert", &d.cat_bert, &[]));
+        }
+        other => return Err(anyhow!("usage: cat table <2|5|6|7> (got {other:?})")),
+    }
+    Ok(())
+}
+
+fn cmd_fig5(_args: &cli::Args) -> Result<()> {
+    for (label, m, hw) in experiments::three_accelerators() {
+        let pts = experiments::fig5_series(&m, &hw)?;
+        println!("{}", report::fig5(label, &pts));
+    }
+    Ok(())
+}
+
+fn cmd_obs1() -> Result<()> {
+    let (serial, pipe) = experiments::obs1_times()?;
+    println!("Observation 1 — PL-side send/compute/receive organization");
+    println!("  serial    : {serial:>10.1} ns  (paper: 1.10x baseline)");
+    println!("  pipelined : {pipe:>10.1} ns  (paper: 0.71x)");
+    println!("  speedup   : {:.2}x        (paper: 1.41x)", serial / pipe);
+    Ok(())
+}
+
+fn cmd_verify(args: &cli::Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let model = ModelConfig::bert_base();
+    let mut rt = Runtime::open(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let req = synthetic_request(&model, rt.manifest().mmsz, 0, 42);
+    let w = EncoderWeights::synthetic(&model, 7);
+
+    println!("running encoder_layer_fused ...");
+    let (f_fused, q_fused, s_fused) = rt.encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &w)?;
+    println!("running encoder_layer_pallas (EDPU-tiled) ...");
+    let (f_pal, q_pal, s_pal) = rt.encoder_layer("encoder_layer_pallas", &req.x_q, req.x_scale, &w)?;
+
+    let a = f_fused.as_f32()?;
+    let b = f_pal.as_f32()?;
+    let max_diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("  pallas-tiled vs fused: max |diff| = {max_diff:.2e}");
+    if max_diff > 1e-4 {
+        return Err(anyhow!("EDPU tiling changed the numerics (diff {max_diff})"));
+    }
+    if q_fused.as_i8()? != q_pal.as_i8()? {
+        return Err(anyhow!("quantized outputs differ"));
+    }
+    println!("  quantized outputs identical; scales {s_fused:.6} vs {s_pal:.6}");
+
+    // stage composition: ffn(mha(x)) == layer(x)
+    println!("running mha_stage + ffn_stage composition ...");
+    let mut mha_in = vec![req.x_q.clone(), cat::runtime::Tensor::scalar_f32(req.x_scale)];
+    mha_in.extend([
+        w.wqkv.clone(),
+        cat::runtime::Tensor::scalar_f32(w.sqkv),
+        w.bqkv.clone(),
+        w.wproj.clone(),
+        cat::runtime::Tensor::scalar_f32(w.sproj),
+        w.bproj.clone(),
+        w.ln1_g.clone(),
+        w.ln1_b.clone(),
+    ]);
+    let h1 = rt.run("mha_stage", &mha_in)?.remove(0);
+    let mut ffn_in = vec![h1];
+    ffn_in.extend([
+        w.w1.clone(),
+        cat::runtime::Tensor::scalar_f32(w.s1),
+        w.b1.clone(),
+        w.w2.clone(),
+        cat::runtime::Tensor::scalar_f32(w.s2),
+        w.b2.clone(),
+        w.ln2_g.clone(),
+        w.ln2_b.clone(),
+    ]);
+    let composed = rt.run("ffn_stage", &ffn_in)?.remove(0);
+    let c = composed.as_f32()?;
+    let max_diff2 = a
+        .iter()
+        .zip(c)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("  stage-composed vs full layer: max |diff| = {max_diff2:.2e}");
+    if max_diff2 > 1e-4 {
+        return Err(anyhow!("stage composition diverged ({max_diff2})"));
+    }
+    println!("verify OK — the EDPU decomposition is arithmetically exact");
+    Ok(())
+}
+
+fn cmd_serve(args: &cli::Args) -> Result<()> {
+    let model = model_of(args)?;
+    let hw = hw_of(args)?;
+    let n_requests = args.opt_usize("requests", 16);
+    let mut cfg = HostConfig::new(model.clone());
+    cfg.artifact_dir = args.opt_or("artifacts", "artifacts").to_string();
+    cfg.variant = args.opt_or("variant", "encoder_layer_fused").to_string();
+    cfg.layers = args.opt_usize("layers", 2);
+    cfg.workers = args.opt_usize("workers", 1);
+    cfg.max_batch = args.opt_usize("batch", 8);
+    cfg.plan = customize(&model, &hw, &CustomizeOptions::default()).ok();
+    let mmsz = cfg.plan.as_ref().map(|p| p.mmsz).unwrap_or(64);
+
+    println!(
+        "serving {n_requests} requests of {} through {} worker(s), max_batch {} ...",
+        model.name, cfg.workers, cfg.max_batch
+    );
+    let mut host = Host::start(cfg)?;
+    for i in 0..n_requests {
+        host.submit(synthetic_request(&model, mmsz, i as u64, 1000 + i as u64));
+    }
+    let (responses, stats) = host.drain()?;
+    println!("  completed     : {}", stats.completed);
+    println!("  wall time     : {:.2?}", stats.wall);
+    println!("  throughput    : {:.2} req/s (host CPU, interpret-mode XLA)", stats.throughput_rps());
+    println!("  p50 latency   : {:.2?}", stats.percentile(0.5));
+    println!("  p99 latency   : {:.2?}", stats.percentile(0.99));
+    if let Some(sim) = responses.first().and_then(|r| r.simulated_batch_ns) {
+        println!(
+            "  simulated VCK5000 batch latency: {:.3} ms ({} layers)",
+            sim / 1e6,
+            args.opt_usize("layers", 2)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &cli::Args) -> Result<()> {
+    let model = model_of(args)?;
+    let hw = hw_of(args)?;
+    let plan = customize(&model, &hw, &CustomizeOptions::default())?;
+    let design = cat::codegen::generate(&plan);
+    design
+        .validate(plan.plio_aie)
+        .map_err(|e| anyhow!("generated design invalid: {e}"))?;
+    if args.flag("json") {
+        println!("{}", design.to_json());
+    } else {
+        println!(
+            "// {} PUs, {} AIE cores, {} array columns\n",
+            design.pus.len(),
+            design.total_cores(),
+            design.cols_used
+        );
+        print!("{}", design.render_graph_source());
+    }
+    Ok(())
+}

@@ -1,0 +1,270 @@
+//! Renderers that print the paper's tables and figure series from
+//! measured (simulated) data.  Each bench target calls one of these; the
+//! same functions back the `cat table ...` CLI subcommands.
+
+use crate::arch::AcceleratorPlan;
+use crate::baselines::{published, BaselineResult};
+use crate::metrics::PerfSummary;
+use crate::util::table::{fmt_f, fmt_ratio, Table};
+
+/// Table II row: one ablation lab.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub lab: &'static str,
+    pub independent_linear: bool,
+    pub atb_parallel_mode: &'static str,
+    pub atb_parallelism: usize,
+    pub makespan_ns: f64,
+}
+
+/// Render Table II (architecture ablation, speedups vs Lab 1).
+pub fn table2(rows: &[AblationRow]) -> String {
+    let base = rows
+        .first()
+        .map(|r| r.makespan_ns)
+        .unwrap_or(1.0);
+    let mut t = Table::new(
+        "Table II — operation efficiency of different EDPU organizations (ViT-Base cfg)",
+        &["ID", "Independent Linear", "ATB Parallel Mode", "ATB Parallelism", "Speedup Ratio"],
+    );
+    for r in rows {
+        t.row(&[
+            r.lab.to_string(),
+            if r.independent_linear { "yes" } else { "no" }.into(),
+            r.atb_parallel_mode.into(),
+            r.atb_parallelism.to_string(),
+            fmt_ratio(base / r.makespan_ns),
+        ]);
+    }
+    t.render()
+}
+
+/// Render Table V (hardware resource utilization) for a set of plans.
+pub fn table5(plans: &[(&str, &AcceleratorPlan)]) -> String {
+    let mut t = Table::new(
+        "Table V — hardware resource utilization",
+        &["Model", "Module", "LUT", "FF", "BRAM", "URAM", "AIE dep.rate", "AIE eff.util"],
+    );
+    for (name, plan) in plans {
+        let dep = format!(
+            "{:.0}% ({} AIEs)",
+            plan.deployment_rate() * 100.0,
+            plan.cores_deployed()
+        );
+        let mha_cores = plan.mha.cores_deployed();
+        let ffn_cores = plan.ffn.cores_deployed();
+        let deployed = plan.cores_deployed().max(1);
+        let rows = [
+            ("MHA Stage", plan.res_mha, mha_cores),
+            ("FFN Stage", plan.res_ffn, ffn_cores),
+            ("Overall", plan.res_overall, usize::MAX),
+        ];
+        for (module, r, running) in rows {
+            let eff = if running == usize::MAX {
+                let avg = (mha_cores as f64 / deployed as f64
+                    + ffn_cores as f64 / deployed as f64)
+                    / 2.0;
+                format!("{:.0}% (Avg)", avg * 100.0)
+            } else {
+                format!("{:.0}% ({} AIEs)", running as f64 / deployed as f64 * 100.0, running)
+            };
+            t.row(&[
+                name.to_string(),
+                module.into(),
+                format!("{:.1}K", r.luts as f64 / 1e3),
+                format!("{:.1}K", r.ffs as f64 / 1e3),
+                r.brams.to_string(),
+                r.urams.to_string(),
+                dep.clone(),
+                eff,
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Render Table VI (peak performance and energy efficiency).
+pub fn table6(rows: &[PerfSummary]) -> String {
+    let mut t = Table::new(
+        "Table VI — peak performance and energy efficiency (batch at saturation)",
+        &["Model", "Module", "Latency(ms)", "TOPS", "GOPS/AIE", "Power(W)", "GOPS/W"],
+    );
+    for s in rows {
+        t.row(&[
+            s.model.clone(),
+            "MHA Stage".into(),
+            fmt_f(s.mha_latency_ms, 3),
+            fmt_f(s.mha_tops, 3),
+            fmt_f(s.mha_gops_per_aie, 1),
+            "N/A".into(),
+            "N/A".into(),
+        ]);
+        t.row(&[
+            s.model.clone(),
+            "FFN Stage".into(),
+            fmt_f(s.ffn_latency_ms, 3),
+            fmt_f(s.ffn_tops, 3),
+            fmt_f(s.ffn_gops_per_aie, 1),
+            "N/A".into(),
+            "N/A".into(),
+        ]);
+        t.row(&[
+            s.model.clone(),
+            "System (EDPU)".into(),
+            fmt_f(s.sys_latency_ms, 3),
+            fmt_f(s.sys_tops, 3),
+            fmt_f(s.sys_gops_per_aie, 1),
+            fmt_f(s.power_w, 2),
+            fmt_f(s.gops_per_w, 1),
+        ]);
+    }
+    t.render()
+}
+
+/// One measured CAT row for Table VII.
+#[derive(Debug, Clone)]
+pub struct CatRow {
+    pub tops: f64,
+    pub gops_per_w: f64,
+}
+
+/// Render one group of Table VII (peak / ViT / BERT), ratios vs the
+/// group's reference row (the paper uses ViA for peak+ViT, NPE for BERT).
+pub fn table7_group(group: &str, cat: &CatRow, extra_styles: &[(&str, BaselineResult)]) -> String {
+    let rows: Vec<_> = published()
+        .into_iter()
+        .filter(|a| a.groups.contains(&group))
+        .collect();
+    let reference = rows
+        .iter()
+        .find(|a| a.name == if group == "bert" { "NPE" } else { "ViA" })
+        .map(|a| (a.tops, a.gops_per_w))
+        .unwrap_or((1.0, 1.0));
+    let mut t = Table::new(
+        &format!("Table VII ({group}) — performance and energy-efficiency comparison"),
+        &["Platform", "Design", "Freq", "Prec", "TOPS", "GOPS/W", "Speedup", "EnergyEff Up"],
+    );
+    for a in &rows {
+        t.row(&[
+            a.platform.into(),
+            a.design.into(),
+            a.frequency.into(),
+            a.precision.into(),
+            fmt_f(a.tops, 3),
+            fmt_f(a.gops_per_w, 2),
+            fmt_ratio(a.tops / reference.0),
+            fmt_ratio(a.gops_per_w / reference.1),
+        ]);
+    }
+    for (name, r) in extra_styles {
+        t.row(&[
+            "VCK5000 (sim)".into(),
+            (*name).into(),
+            "AIE:1.25GHz PL:300MHz".into(),
+            "INT8".into(),
+            fmt_f(r.tops, 3),
+            fmt_f(r.gops_per_w, 2),
+            fmt_ratio(r.tops / reference.0),
+            fmt_ratio(r.gops_per_w / reference.1),
+        ]);
+    }
+    t.row(&[
+        "VCK5000 (sim)".into(),
+        "CAT (ours)".into(),
+        "AIE:1.25GHz PL:300MHz".into(),
+        "INT8".into(),
+        fmt_f(cat.tops, 3),
+        fmt_f(cat.gops_per_w, 2),
+        fmt_ratio(cat.tops / reference.0),
+        fmt_ratio(cat.gops_per_w / reference.1),
+    ]);
+    t.render()
+}
+
+/// Figure 5 series: throughput vs batch size for MHA / FFN / System.
+#[derive(Debug, Clone)]
+pub struct BatchPoint {
+    pub batch: usize,
+    pub mha_tops: f64,
+    pub ffn_tops: f64,
+    pub sys_tops: f64,
+}
+
+/// Render the Figure 5 series for one accelerator as a table + ASCII plot.
+pub fn fig5(model: &str, points: &[BatchPoint]) -> String {
+    let mut t = Table::new(
+        &format!("Figure 5 — {model}: throughput vs batch size"),
+        &["batch", "MHA TOPS", "FFN TOPS", "System TOPS"],
+    );
+    for p in points {
+        t.row(&[
+            p.batch.to_string(),
+            fmt_f(p.mha_tops, 2),
+            fmt_f(p.ffn_tops, 2),
+            fmt_f(p.sys_tops, 2),
+        ]);
+    }
+    let mut out = t.render();
+    // ASCII sparkline of system TOPS
+    let max = points.iter().map(|p| p.sys_tops).fold(1e-9, f64::max);
+    out.push_str("  sys TOPS |");
+    for p in points {
+        let h = (p.sys_tops / max * 8.0).round() as usize;
+        out.push(['.', '1', '2', '3', '4', '5', '6', '7', '8'][h.min(8)]);
+    }
+    out.push_str("| (normalized)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+    use crate::customize::{customize, CustomizeOptions};
+
+    #[test]
+    fn table2_ratios_relative_to_first() {
+        let rows = vec![
+            AblationRow { lab: "Lab 1", independent_linear: false, atb_parallel_mode: "N/A", atb_parallelism: 1, makespan_ns: 100.0 },
+            AblationRow { lab: "Lab 2", independent_linear: false, atb_parallel_mode: "Pipeline", atb_parallelism: 1, makespan_ns: 25.0 },
+        ];
+        let s = table2(&rows);
+        assert!(s.contains("1.00x"));
+        assert!(s.contains("4.00x"));
+    }
+
+    #[test]
+    fn table5_renders_three_modules_per_model() {
+        let plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000(),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        let s = table5(&[("BERT-Base", &plan)]);
+        assert!(s.contains("MHA Stage") && s.contains("FFN Stage") && s.contains("Overall"));
+        assert!(s.contains("88% (352 AIEs)"));
+    }
+
+    #[test]
+    fn table7_has_reference_rows() {
+        let cat = CatRow { tops: 35.194, gops_per_w: 520.97 };
+        let s = table7_group("peak", &cat, &[]);
+        assert!(s.contains("ViA"));
+        assert!(s.contains("CAT (ours)"));
+        assert!(s.contains("SSR"));
+        // CAT vs ViA speedup ~113.9x
+        assert!(s.contains("113.9") || s.contains("113.90"), "{s}");
+    }
+
+    #[test]
+    fn fig5_sparkline() {
+        let pts = vec![
+            BatchPoint { batch: 1, mha_tops: 10.0, ffn_tops: 12.0, sys_tops: 11.0 },
+            BatchPoint { batch: 16, mha_tops: 38.0, ffn_tops: 30.0, sys_tops: 33.0 },
+        ];
+        let s = fig5("bert-base", &pts);
+        assert!(s.contains("batch"));
+        assert!(s.contains("sys TOPS"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (parameter order, shapes, dtypes of every HLO artifact).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// One artifact parameter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub params: Vec<ParamInfo>,
+    pub output_shapes: Vec<Vec<usize>>,
+    pub output_dtypes: Vec<String>,
+}
+
+/// A model entry in the manifest (logical vs padded sequence length).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub heads: usize,
+    pub embed_dim: usize,
+    pub dff: usize,
+    pub seq_len: usize,
+    pub padded_seq_len: usize,
+    pub layers: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub mmsz: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub models: Vec<ModelEntry>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let mmsz = j
+            .get("mmsz")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing mmsz"))?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string();
+            let mut params = Vec::new();
+            for p in a.get("params").and_then(Json::as_arr).unwrap_or(&[]) {
+                params.push(ParamInfo {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: parse_shape(p.get("shape").ok_or_else(|| anyhow!("param missing shape"))?)?,
+                    dtype: p
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing dtype"))?
+                        .to_string(),
+                });
+            }
+            let mut output_shapes = Vec::new();
+            let mut output_dtypes = Vec::new();
+            for o in a.get("outputs").and_then(Json::as_arr).unwrap_or(&[]) {
+                output_shapes.push(parse_shape(
+                    o.get("shape").ok_or_else(|| anyhow!("output missing shape"))?,
+                )?);
+                output_dtypes.push(
+                    o.get("dtype")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("output missing dtype"))?
+                        .to_string(),
+                );
+            }
+            artifacts.push(ArtifactInfo { name, file, params, output_shapes, output_dtypes });
+        }
+        let mut models = Vec::new();
+        if let Some(m) = j.get("models").and_then(Json::as_obj) {
+            for (name, v) in m {
+                let u = |k: &str| -> Result<usize> {
+                    v.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("model '{name}' missing '{k}'"))
+                };
+                models.push(ModelEntry {
+                    name: name.clone(),
+                    heads: u("heads")?,
+                    embed_dim: u("embed_dim")?,
+                    dff: u("dff")?,
+                    seq_len: u("seq_len")?,
+                    padded_seq_len: u("padded_seq_len")?,
+                    layers: u("layers")?,
+                });
+            }
+        }
+        Ok(Manifest { mmsz, artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "mmsz": 64,
+        "models": {"bert-base": {"heads":12,"embed_dim":768,"dff":3072,
+                   "seq_len":256,"padded_seq_len":256,"layers":12}},
+        "artifacts": [{
+            "name": "mm_tile", "file": "mm_tile.hlo.txt",
+            "params": [
+                {"name":"a","shape":[64,64],"dtype":"int8"},
+                {"name":"b","shape":[64,64],"dtype":"int8"}],
+            "outputs": [{"shape":[64,64],"dtype":"int32"}],
+            "meta": {"mmsz": 64}
+        }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.mmsz, 64);
+        let a = m.artifact("mm_tile").unwrap();
+        assert_eq!(a.params[0].shape, vec![64, 64]);
+        assert_eq!(a.output_dtypes, vec!["int32"]);
+        assert_eq!(m.model("bert-base").unwrap().layers, 12);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        let j = Json::parse(r#"{"artifacts": []}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load("artifacts/manifest.json").unwrap();
+            assert!(m.artifact("encoder_layer_fused").is_some());
+            assert!(m.artifact("encoder_layer_pallas").is_some());
+            let enc = m.artifact("encoder_layer_fused").unwrap();
+            assert_eq!(enc.params.len(), 18); // x_q, x_scale + 16 weights
+        }
+    }
+}

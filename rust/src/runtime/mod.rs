@@ -1,0 +1,326 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them.
+//!
+//! This is the XRT-substitute host path: python/jax lowered every L1/L2
+//! computation to HLO **text** at `make artifacts` time; here the rust
+//! coordinator compiles them once on the PJRT CPU client and executes
+//! them on the request path — python never runs at serving time.
+
+mod manifest;
+mod weights;
+
+pub use manifest::{ArtifactInfo, Manifest, ParamInfo};
+pub use weights::{quantize_activation, EncoderWeights};
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A host tensor, convertible to/from `xla::Literal`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    I8 { data: Vec<i8>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::I8 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::F32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            Tensor::I8 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i8")),
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::I8 { .. } => "int8",
+            Tensor::I32 { .. } => "int32",
+            Tensor::F32 { .. } => "float32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match self {
+            Tensor::I8 { data, .. } => (
+                xla::ElementType::S8,
+                data.iter().map(|v| *v as u8).collect(),
+            ),
+            Tensor::I32 { data, .. } => (
+                xla::ElementType::S32,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            Tensor::F32 { data, .. } => (
+                xla::ElementType::F32,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), &bytes)
+            .map_err(|e| anyhow!("literal creation: {e}"))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+        let (dims, ty) = match &shape {
+            xla::Shape::Array(a) => (
+                a.dims().iter().map(|d| *d as usize).collect::<Vec<_>>(),
+                a.ty(),
+            ),
+            _ => return Err(anyhow!("tuple literal where array expected")),
+        };
+        match ty {
+            xla::ElementType::S8 => Ok(Tensor::I8 {
+                data: lit.to_vec::<i8>().map_err(|e| anyhow!("{e}"))?,
+                shape: dims,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?,
+                shape: dims,
+            }),
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+                shape: dims,
+            }),
+            other => Err(anyhow!("unsupported output element type {other:?}")),
+        }
+    }
+}
+
+/// The PJRT runtime: a CPU client plus compiled executables, keyed by
+/// artifact name.  Compilation happens once (lazily); execution is the
+/// hot path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: std::path::PathBuf,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (built by `make artifacts`).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Runtime { client, manifest, dir, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (memoized) an artifact by name.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let info = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact.  Inputs are validated against the manifest.
+    /// All artifacts are lowered with `return_tuple=True`, so the result
+    /// is always the decomposed tuple.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let info = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != info.params.len() {
+            return Err(anyhow!(
+                "artifact '{name}' expects {} inputs, got {}",
+                info.params.len(),
+                inputs.len()
+            ));
+        }
+        for (t, p) in inputs.iter().zip(&info.params) {
+            if t.shape() != p.shape.as_slice() {
+                return Err(anyhow!(
+                    "param '{}' shape mismatch: expected {:?}, got {:?}",
+                    p.name,
+                    p.shape,
+                    t.shape()
+                ));
+            }
+            if t.dtype_name() != p.dtype {
+                return Err(anyhow!(
+                    "param '{}' dtype mismatch: expected {}, got {}",
+                    p.name,
+                    p.dtype,
+                    t.dtype_name()
+                ));
+            }
+        }
+        self.compile(name)?;
+        let exe = self.compiled.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {name}: {e}"))?;
+        parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("converting outputs of {name}"))
+    }
+
+    /// Run one encoder layer (fused fast path by default).
+    /// Returns `(out_f32, out_q, out_scale)` for layer chaining.
+    pub fn encoder_layer(
+        &mut self,
+        variant: &str,
+        x_q: &Tensor,
+        x_scale: f32,
+        w: &EncoderWeights,
+    ) -> Result<(Tensor, Tensor, f32)> {
+        let mut inputs = vec![x_q.clone(), Tensor::scalar_f32(x_scale)];
+        inputs.extend(w.tensors());
+        let mut out = self.run(variant, &inputs)?;
+        if out.len() != 3 {
+            return Err(anyhow!("encoder artifact returned {} outputs", out.len()));
+        }
+        let scale = out[2].as_f32()?[0];
+        let q = out.remove(1);
+        let f = out.remove(0);
+        Ok((f, q, scale))
+    }
+
+    /// Chain `weights.len()` encoder layers on the int8 path (the EDPU
+    /// loop: each call's `(q, scale)` feeds the next).
+    pub fn encoder_forward(
+        &mut self,
+        variant: &str,
+        x_q: Tensor,
+        x_scale: f32,
+        weights: &[EncoderWeights],
+    ) -> Result<Tensor> {
+        let mut q = x_q;
+        let mut s = x_scale;
+        let mut last_f = None;
+        for w in weights {
+            let (f, q2, s2) = self.encoder_layer(variant, &q, s, w)?;
+            q = q2;
+            s = s2;
+            last_f = Some(f);
+        }
+        last_f.ok_or_else(|| anyhow!("no layers given"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn tensor_roundtrip_f32() {
+        let t = Tensor::F32 { data: vec![1.0, -2.5, 3.25, 0.0], shape: vec![2, 2] };
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn tensor_roundtrip_i8() {
+        let t = Tensor::I8 { data: vec![-127, 0, 5, 127, 1, -1], shape: vec![3, 2] };
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn runtime_rejects_bad_shapes() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rt = Runtime::open("artifacts").unwrap();
+        let bad = vec![Tensor::I8 { data: vec![0; 4], shape: vec![2, 2] }; 2];
+        assert!(rt.run("mm_tile", &bad).is_err());
+    }
+
+    #[test]
+    fn mm_tile_executes_correctly() {
+        if !artifacts_available() {
+            return;
+        }
+        let mut rt = Runtime::open("artifacts").unwrap();
+        let n = 64;
+        // identity x constant: a = I, b = ramp -> out == b
+        let mut a = vec![0i8; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1;
+        }
+        let b: Vec<i8> = (0..n * n).map(|i| (i % 127) as i8).collect();
+        let out = rt
+            .run(
+                "mm_tile",
+                &[
+                    Tensor::I8 { data: a, shape: vec![n, n] },
+                    Tensor::I8 { data: b.clone(), shape: vec![n, n] },
+                ],
+            )
+            .unwrap();
+        match &out[0] {
+            Tensor::I32 { data, .. } => {
+                assert!(data.iter().zip(&b).all(|(x, y)| *x == *y as i32));
+            }
+            other => panic!("unexpected output {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Synthetic int8-quantized encoder weights, generated host-side.
+//!
+//! The paper deploys "already quantified Int8 models"; lacking the
+//! original checkpoints we generate Xavier-style random weights with the
+//! same quantization scheme as `python/compile/model.py::init_params`
+//! (symmetric per-tensor scales), deterministic per seed.
+
+use super::Tensor;
+use crate::config::ModelConfig;
+use crate::util::prng::Prng;
+
+/// One encoder layer's parameters, in the manifest's canonical order:
+/// wqkv, sqkv, bqkv, wproj, sproj, bproj, w1, s1, b1, w2, s2, b2,
+/// ln1_g, ln1_b, ln2_g, ln2_b.
+#[derive(Debug, Clone)]
+pub struct EncoderWeights {
+    pub wqkv: Tensor,
+    pub sqkv: f32,
+    pub bqkv: Tensor,
+    pub wproj: Tensor,
+    pub sproj: f32,
+    pub bproj: Tensor,
+    pub w1: Tensor,
+    pub s1: f32,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub s2: f32,
+    pub b2: Tensor,
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+}
+
+/// Quantize an fp32 weight matrix to (int8, scale) with a calibrated
+/// symmetric per-tensor scale.
+fn quantize_weight(w: &[f32]) -> (Vec<i8>, f32) {
+    let max = w.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+    let scale = max / 127.0;
+    let q = w
+        .iter()
+        .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// Quantize an activation with a dynamic per-tensor scale (matches
+/// `model.dyn_quant`). Returns (int8 tensor, scale).
+pub fn quantize_activation(x: &[f32], shape: &[usize]) -> (Tensor, f32) {
+    let max = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+    let scale = max / 127.0;
+    let q: Vec<i8> = x
+        .iter()
+        .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (Tensor::I8 { data: q, shape: shape.to_vec() }, scale)
+}
+
+fn xavier(rng: &mut Prng, rows: usize, cols: usize) -> Vec<f32> {
+    let std = 1.0 / (rows as f64).sqrt();
+    (0..rows * cols)
+        .map(|_| (rng.gaussian() * std) as f32)
+        .collect()
+}
+
+impl EncoderWeights {
+    /// Deterministic synthetic weights for one layer.
+    pub fn synthetic(model: &ModelConfig, seed: u64) -> EncoderWeights {
+        let mut rng = Prng::new(seed);
+        let e = model.embed_dim;
+        let d = model.dff;
+        let (wqkv, sqkv) = quantize_weight(&xavier(&mut rng, e, 3 * e));
+        let (wproj, sproj) = quantize_weight(&xavier(&mut rng, e, e));
+        let (w1, s1) = quantize_weight(&xavier(&mut rng, e, d));
+        let (w2, s2) = quantize_weight(&xavier(&mut rng, d, e));
+        let zeros = |n: usize| Tensor::F32 { data: vec![0.0; n], shape: vec![n] };
+        let ones = |n: usize| Tensor::F32 { data: vec![1.0; n], shape: vec![n] };
+        EncoderWeights {
+            wqkv: Tensor::I8 { data: wqkv, shape: vec![e, 3 * e] },
+            sqkv,
+            bqkv: zeros(3 * e),
+            wproj: Tensor::I8 { data: wproj, shape: vec![e, e] },
+            sproj,
+            bproj: zeros(e),
+            w1: Tensor::I8 { data: w1, shape: vec![e, d] },
+            s1,
+            b1: zeros(d),
+            w2: Tensor::I8 { data: w2, shape: vec![d, e] },
+            s2,
+            b2: zeros(e),
+            ln1_g: ones(e),
+            ln1_b: zeros(e),
+            ln2_g: ones(e),
+            ln2_b: zeros(e),
+        }
+    }
+
+    /// Weights for a whole model (one entry per layer).
+    pub fn model_stack(model: &ModelConfig, seed: u64) -> Vec<EncoderWeights> {
+        (0..model.layers)
+            .map(|i| Self::synthetic(model, seed.wrapping_add(i as u64)))
+            .collect()
+    }
+
+    /// Flatten in the manifest's canonical parameter order.
+    pub fn tensors(&self) -> Vec<Tensor> {
+        vec![
+            self.wqkv.clone(),
+            Tensor::scalar_f32(self.sqkv),
+            self.bqkv.clone(),
+            self.wproj.clone(),
+            Tensor::scalar_f32(self.sproj),
+            self.bproj.clone(),
+            self.w1.clone(),
+            Tensor::scalar_f32(self.s1),
+            self.b1.clone(),
+            self.w2.clone(),
+            Tensor::scalar_f32(self.s2),
+            self.b2.clone(),
+            self.ln1_g.clone(),
+            self.ln1_b.clone(),
+            self.ln2_g.clone(),
+            self.ln2_b.clone(),
+        ]
+    }
+
+    /// Total int8 weight bytes (for DRAM/buffer accounting).
+    pub fn weight_bytes(&self) -> usize {
+        [&self.wqkv, &self.wproj, &self.w1, &self.w2]
+            .iter()
+            .map(|t| t.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            heads: 4,
+            embed_dim: 64,
+            dff: 128,
+            seq_len: 32,
+            layers: 2,
+            bits: 8,
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = EncoderWeights::synthetic(&tiny(), 7);
+        let b = EncoderWeights::synthetic(&tiny(), 7);
+        assert_eq!(a.wqkv, b.wqkv);
+        assert_eq!(a.sqkv, b.sqkv);
+        let c = EncoderWeights::synthetic(&tiny(), 8);
+        assert_ne!(a.wqkv, c.wqkv);
+    }
+
+    #[test]
+    fn shapes_match_model() {
+        let w = EncoderWeights::synthetic(&tiny(), 1);
+        assert_eq!(w.wqkv.shape(), &[64, 192]);
+        assert_eq!(w.w1.shape(), &[64, 128]);
+        assert_eq!(w.w2.shape(), &[128, 64]);
+        assert_eq!(w.tensors().len(), 16);
+        assert_eq!(w.weight_bytes(), 64 * 192 + 64 * 64 + 2 * 64 * 128);
+    }
+
+    #[test]
+    fn quantization_in_range() {
+        let w = EncoderWeights::synthetic(&tiny(), 3);
+        let q = w.wqkv.as_i8().unwrap();
+        assert!(q.iter().any(|v| *v != 0));
+        assert!(q.iter().all(|v| (-127..=127).contains(v)));
+        assert!(w.sqkv > 0.0);
+    }
+
+    #[test]
+    fn activation_quantization_roundtrip() {
+        let x = vec![-2.0f32, 0.0, 1.0, 2.0];
+        let (t, s) = quantize_activation(&x, &[2, 2]);
+        let q = t.as_i8().unwrap();
+        assert_eq!(q[0], -127);
+        assert_eq!(q[3], 127);
+        for (orig, qv) in x.iter().zip(q) {
+            assert!((orig - *qv as f32 * s).abs() <= s * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn stack_has_layer_count() {
+        let ws = EncoderWeights::model_stack(&tiny(), 42);
+        assert_eq!(ws.len(), 2);
+        assert_ne!(
+            ws[0].wqkv.as_i8().unwrap()[..32],
+            ws[1].wqkv.as_i8().unwrap()[..32]
+        );
+    }
+}

@@ -1,0 +1,216 @@
+//! Multi-EDPU deployment (paper §III.A): "the framework supports the
+//! deployment of multiple EDPUs ... Different EDPUs can be used to
+//! jointly accelerate one upper level task in a pipelined manner, or
+//! multiple upper level tasks can be executed in parallel without
+//! interfering with each other."
+//!
+//! Both HOST-level organizations over the single-EDPU simulator:
+//!
+//! * **Parallel** — `n` independent EDPUs each run a share of the batch;
+//!   makespan = slowest share (plus nothing: they do not interfere).
+//! * **Pipelined** — the model's layers are partitioned round-robin over
+//!   the EDPUs; batch items stream through the EDPU chain, so steady-
+//!   state throughput is set by the slowest EDPU while latency still
+//!   pays every layer.
+
+use super::{run_edpu, EdpuReport};
+use crate::arch::AcceleratorPlan;
+use anyhow::{anyhow, Result};
+
+/// How the HOST organizes several EDPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MultiEdpuMode {
+    /// Independent tasks, one per EDPU (no interference).
+    Parallel,
+    /// One task, layers partitioned across the EDPU chain.
+    Pipelined,
+}
+
+/// Result of a multi-EDPU execution of a whole model (all layers).
+#[derive(Debug, Clone)]
+pub struct MultiEdpuReport {
+    pub mode: MultiEdpuMode,
+    pub n_edpu: usize,
+    pub batch: usize,
+    /// Wall time to finish the whole batch through all layers (ns).
+    pub makespan_ns: f64,
+    /// Per-item end-to-end latency (ns).
+    pub latency_ns: f64,
+    pub ops: u64,
+    pub per_edpu: Vec<EdpuReport>,
+}
+
+impl MultiEdpuReport {
+    pub fn tops(&self) -> f64 {
+        self.ops as f64 / self.makespan_ns / 1e3
+    }
+}
+
+/// Execute `plan.model.layers` encoder layers for `batch` items on
+/// `n_edpu` EDPU instances.
+///
+/// Resource note: each EDPU instance needs its own AIE allocation; the
+/// caller is responsible for `n_edpu * plan.cores_deployed() <=` the
+/// board budget (checked here).
+pub fn run_multi_edpu(
+    plan: &AcceleratorPlan,
+    n_edpu: usize,
+    batch: usize,
+    mode: MultiEdpuMode,
+) -> Result<MultiEdpuReport> {
+    if n_edpu == 0 {
+        return Err(anyhow!("need at least one EDPU"));
+    }
+    if n_edpu * plan.cores_deployed() > plan.hw.total_aie {
+        return Err(anyhow!(
+            "{n_edpu} EDPUs x {} cores exceed the {}-AIE budget",
+            plan.cores_deployed(),
+            plan.hw.total_aie
+        ));
+    }
+    let layers = plan.model.layers;
+    match mode {
+        MultiEdpuMode::Parallel => {
+            // split the batch as evenly as possible; EDPUs don't interfere
+            let mut per_edpu = Vec::new();
+            let mut makespan: f64 = 0.0;
+            let mut ops = 0u64;
+            for i in 0..n_edpu {
+                let share = batch / n_edpu + usize::from(i < batch % n_edpu);
+                if share == 0 {
+                    continue;
+                }
+                let r = run_edpu(plan, share)?;
+                makespan = makespan.max(r.makespan_ns() * layers as f64);
+                ops += r.ops() * layers as u64;
+                per_edpu.push(r);
+            }
+            let latency = makespan / batch.div_ceil(n_edpu).max(1) as f64;
+            Ok(MultiEdpuReport {
+                mode,
+                n_edpu,
+                batch,
+                makespan_ns: makespan,
+                latency_ns: latency,
+                ops,
+                per_edpu,
+            })
+        }
+        MultiEdpuMode::Pipelined => {
+            // Layers partitioned round-robin: EDPU i runs ~layers/n of
+            // the model; batches stream through the EDPU chain.  The
+            // chain's steady-state initiation interval is the slowest
+            // stage's time — that is the effective makespan charged per
+            // batch window once warm.  A single batch's end-to-end
+            // latency still crosses every layer.
+            let r = run_edpu(plan, batch)?;
+            let per_layer = r.makespan_ns(); // batch makespan for one layer
+            let stage_layers = layers.div_ceil(n_edpu);
+            let stage_time = per_layer * stage_layers as f64;
+            let latency = per_layer * layers as f64;
+            let ops = r.ops() * layers as u64;
+            Ok(MultiEdpuReport {
+                mode,
+                n_edpu,
+                batch,
+                makespan_ns: stage_time,
+                latency_ns: latency,
+                ops,
+                per_edpu: vec![r],
+            })
+        }
+    }
+}
+
+/// Sweep EDPU counts for a fixed total budget: how many EDPUs should the
+/// HOST deploy? (the "adjusted freely according to hardware resources
+/// and acceleration requirements" knob).
+pub fn edpu_count_sweep(
+    plan: &AcceleratorPlan,
+    batch: usize,
+    mode: MultiEdpuMode,
+) -> Result<Vec<MultiEdpuReport>> {
+    let max_n = (plan.hw.total_aie / plan.cores_deployed().max(1)).max(1);
+    (1..=max_n)
+        .map(|n| run_multi_edpu(plan, n, batch, mode))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+    use crate::customize::{customize, CustomizeOptions};
+
+    fn small_plan() -> AcceleratorPlan {
+        // a compact 64-core EDPU (the Limited-AIE serial design) hosted
+        // on the full 400-AIE board, so several instances fit — the
+        // §III.A "number of EDPUs can be adjusted freely" scenario.
+        let mut plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000_limited(64),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        plan.hw = HardwareConfig::vck5000();
+        plan
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000(),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        // 352-core EDPU: two do not fit in 400
+        assert!(run_multi_edpu(&plan, 2, 8, MultiEdpuMode::Parallel).is_err());
+        assert!(run_multi_edpu(&plan, 1, 8, MultiEdpuMode::Parallel).is_ok());
+        assert!(run_multi_edpu(&plan, 0, 8, MultiEdpuMode::Parallel).is_err());
+    }
+
+    #[test]
+    fn parallel_edpus_scale_throughput() {
+        let plan = small_plan();
+        let one = run_multi_edpu(&plan, 1, 8, MultiEdpuMode::Parallel).unwrap();
+        let deployable = plan.hw.total_aie / plan.cores_deployed();
+        assert!(deployable >= 2, "plan too big: {}", plan.cores_deployed());
+        let two = run_multi_edpu(&plan, 2, 8, MultiEdpuMode::Parallel).unwrap();
+        // two EDPUs on half the batch each: close to half the makespan
+        assert!(two.makespan_ns < one.makespan_ns * 0.7,
+                "{} vs {}", two.makespan_ns, one.makespan_ns);
+        assert_eq!(one.ops, two.ops);
+        assert!(two.tops() > one.tops() * 1.4);
+    }
+
+    #[test]
+    fn pipelined_edpus_improve_initiation_not_latency() {
+        let plan = small_plan();
+        let one = run_multi_edpu(&plan, 1, 4, MultiEdpuMode::Pipelined).unwrap();
+        let three = run_multi_edpu(&plan, 3, 4, MultiEdpuMode::Pipelined).unwrap();
+        // latency (all layers) identical; makespan per batch window shrinks
+        assert!((three.latency_ns - one.latency_ns).abs() / one.latency_ns < 1e-9);
+        assert!(three.makespan_ns <= one.makespan_ns);
+    }
+
+    #[test]
+    fn sweep_covers_budget() {
+        let plan = small_plan();
+        let sweep = edpu_count_sweep(&plan, 8, MultiEdpuMode::Parallel).unwrap();
+        let max_n = plan.hw.total_aie / plan.cores_deployed();
+        assert_eq!(sweep.len(), max_n);
+        // throughput non-decreasing in EDPU count (monotone resource law)
+        for w in sweep.windows(2) {
+            assert!(w[1].tops() >= w[0].tops() * 0.99);
+        }
+    }
+
+    #[test]
+    fn uneven_batch_split_completes_all_items() {
+        let plan = small_plan();
+        let r = run_multi_edpu(&plan, 3, 7, MultiEdpuMode::Parallel).unwrap();
+        let total: usize = r.per_edpu.iter().map(|e| e.batch).sum();
+        assert_eq!(total, 7);
+    }
+}

@@ -1,0 +1,20 @@
+//! Versal ACAP simulator substrate.
+//!
+//! The paper measures a physical VCK5000; we reproduce the *schedule
+//! behaviour* with a discrete-event, cycle-approximate simulator whose
+//! timing parameters come from the paper's own numbers (DESIGN.md §7):
+//!
+//! * [`scenario`] — the dataflow description: PRG-like processor nodes
+//!   holding AIE MM PU instances, buffer edges with PL-operator latency,
+//!   internal (send/compute/receive) pipelining flags;
+//! * [`engine`] — the event-driven executor with backpressure (finite
+//!   buffers block producers — this is what makes the paper's Lab 3
+//!   "serial ATB blocks the linear layer" observable);
+//! * [`power`] — the calibrated board power model.
+
+pub mod engine;
+pub mod power;
+pub mod scenario;
+
+pub use engine::{run, NodeStats, SimReport};
+pub use scenario::{EdgeSpec, NodeSpec, PortSpec, Scenario};

@@ -1,0 +1,109 @@
+//! Board power model (substitute for AMD Power Design Manager).
+//!
+//! `P = static + n_running·p_active + (n_deployed − n_running)·p_idle
+//!      + PL activity + DRAM I/O`
+//!
+//! Coefficients live in [`PowerModelParams`](crate::config::PowerModelParams)
+//! and are calibrated against the paper's three operating points
+//! (Table VI): BERT-Base 67.56 W, ViT-Base 61.46 W, Limited-AIE 16.17 W.
+
+use crate::arch::PlResources;
+use crate::config::HardwareConfig;
+
+/// Inputs to one power evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerBreakdownInput {
+    /// AIE cores deployed (clocked).
+    pub aie_deployed: usize,
+    /// Average running AIE cores over the measurement window.
+    pub aie_running_avg: f64,
+    /// PL resources in use (Table V overall row).
+    pub pl: PlResources,
+    /// Average DRAM bandwidth achieved (GB/s).
+    pub dram_gbps: f64,
+}
+
+/// Itemized power result (W).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub static_w: f64,
+    pub aie_active_w: f64,
+    pub aie_idle_w: f64,
+    pub pl_w: f64,
+    pub dram_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.static_w + self.aie_active_w + self.aie_idle_w + self.pl_w + self.dram_w
+    }
+}
+
+/// Evaluate the calibrated model.
+pub fn power(hw: &HardwareConfig, input: &PowerBreakdownInput) -> PowerBreakdown {
+    let p = &hw.power;
+    let running = input.aie_running_avg.min(input.aie_deployed as f64);
+    let idle = input.aie_deployed as f64 - running;
+    PowerBreakdown {
+        static_w: p.static_w,
+        aie_active_w: running * p.aie_active_w,
+        aie_idle_w: idle * p.aie_idle_w,
+        pl_w: input.pl.luts as f64 / 100_000.0 * p.pl_per_100k_lut_w,
+        dram_w: input.dram_gbps * p.dram_per_gbps_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bert_like() -> PowerBreakdownInput {
+        PowerBreakdownInput {
+            aie_deployed: 352,
+            aie_running_avg: 0.87 * 352.0,
+            pl: PlResources { luts: 232_300, ffs: 290_500, brams: 940, urams: 360 },
+            dram_gbps: 12.0,
+        }
+    }
+
+    #[test]
+    fn bert_operating_point_near_paper() {
+        let hw = HardwareConfig::vck5000();
+        let p = power(&hw, &bert_like()).total_w();
+        // paper Table VI: 67.555 W — calibrate within 15%
+        assert!((p - 67.555).abs() / 67.555 < 0.15, "P = {p}");
+    }
+
+    #[test]
+    fn limited_aie_operating_point_near_paper() {
+        let hw = HardwareConfig::vck5000();
+        let input = PowerBreakdownInput {
+            aie_deployed: 64,
+            aie_running_avg: 64.0,
+            pl: PlResources { luts: 48_400, ffs: 73_100, brams: 320, urams: 0 },
+            dram_gbps: 6.0,
+        };
+        let p = power(&hw, &input).total_w();
+        // paper Table VI: 16.168 W
+        assert!((p - 16.168).abs() / 16.168 < 0.20, "P = {p}");
+    }
+
+    #[test]
+    fn more_running_cores_cost_more() {
+        let hw = HardwareConfig::vck5000();
+        let mut a = bert_like();
+        let mut b = bert_like();
+        a.aie_running_avg = 100.0;
+        b.aie_running_avg = 300.0;
+        assert!(power(&hw, &b).total_w() > power(&hw, &a).total_w());
+    }
+
+    #[test]
+    fn running_clamped_to_deployed() {
+        let hw = HardwareConfig::vck5000();
+        let mut i = bert_like();
+        i.aie_running_avg = 10_000.0;
+        let p = power(&hw, &i);
+        assert!(p.aie_idle_w.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,276 @@
+//! Dataflow scenario description consumed by the simulator engine.
+//!
+//! A scenario is a DAG of processor **nodes** (PRGs holding AIE MM PU
+//! instances, or PL operator modules) connected by finite **buffer edges**
+//! (on-chip streams/caches).  The scheduler (`crate::sched`) builds one
+//! scenario per EDPU stage from an `AcceleratorPlan`; Table II ablations
+//! build variants directly.
+
+/// Time unit used throughout the simulator: nanoseconds as f64 at the API,
+/// picoseconds as u64 inside the engine (exact heap ordering).
+pub const PS_PER_NS: u64 = 1_000;
+
+/// One PU instance inside a node: per-invocation phase times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PuTiming {
+    /// PLIO send of the operand windows into AIE local memory (ns).
+    pub t_send_ns: f64,
+    /// AIE array compute time for one invocation (ns).
+    pub t_calc_ns: f64,
+    /// PLIO receive of the result windows (ns).
+    pub t_recv_ns: f64,
+}
+
+impl PuTiming {
+    /// Steady-state initiation interval: pipelined PL organization
+    /// overlaps the three phases (double buffering), serial sums them
+    /// (paper Observation 1).
+    pub fn beat_ns(&self, pipelined: bool) -> f64 {
+        if pipelined {
+            self.t_send_ns.max(self.t_calc_ns).max(self.t_recv_ns)
+        } else {
+            self.t_send_ns + self.t_calc_ns + self.t_recv_ns
+        }
+    }
+
+    /// First-invocation latency (pipeline fill).
+    pub fn fill_ns(&self) -> f64 {
+        self.t_send_ns + self.t_calc_ns + self.t_recv_ns
+    }
+}
+
+/// A node port: which edge it connects to and how many bytes one
+/// invocation consumes from (or produces into) that edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PortSpec {
+    pub edge: usize,
+    pub bytes_per_inv: u64,
+}
+
+/// A processor node (a PRG, or a PL pipeline module).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    /// PU instances; each can hold one in-flight invocation (double
+    /// buffering is captured by `beat < fill`).
+    pub pus: Vec<PuTiming>,
+    /// Internal send/compute/receive organization (Observation 1).
+    pub pipelined: bool,
+    /// Total invocations this node must complete.
+    pub n_inv: usize,
+    /// Cores this node's PUs occupy (for utilization accounting).
+    pub cores: usize,
+    pub inputs: Vec<PortSpec>,
+    pub outputs: Vec<PortSpec>,
+}
+
+/// A finite buffer edge, optionally with a PL operator on it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeSpec {
+    /// On-chip buffer capacity in bytes (backpressure bound).
+    pub capacity_bytes: u64,
+    /// Extra latency a grain suffers crossing this edge (the PL operator
+    /// pipeline depth: softmax/LN/GELU/transpose), ns.
+    pub latency_ns: f64,
+    /// Edge throughput in bytes/ns (PL stream width x clock); f64::INFINITY
+    /// for plain wires.
+    pub bw_bytes_per_ns: f64,
+}
+
+impl EdgeSpec {
+    pub fn wire(capacity_bytes: u64) -> EdgeSpec {
+        EdgeSpec { capacity_bytes, latency_ns: 0.0, bw_bytes_per_ns: f64::INFINITY }
+    }
+}
+
+/// The full dataflow to simulate.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Scenario {
+    pub nodes: Vec<NodeSpec>,
+    pub edges: Vec<EdgeSpec>,
+}
+
+impl Scenario {
+    pub fn add_edge(&mut self, e: EdgeSpec) -> usize {
+        self.edges.push(e);
+        self.edges.len() - 1
+    }
+
+    pub fn add_node(&mut self, n: NodeSpec) -> usize {
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    /// Sanity-check port wiring (every edge has exactly one producer and
+    /// one consumer; byte ratios conserve flow).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut producers = vec![0usize; self.edges.len()];
+        let mut consumers = vec![0usize; self.edges.len()];
+        for n in &self.nodes {
+            for p in &n.outputs {
+                if p.edge >= self.edges.len() {
+                    return Err(format!("node '{}' writes missing edge {}", n.name, p.edge));
+                }
+                producers[p.edge] += 1;
+            }
+            for p in &n.inputs {
+                if p.edge >= self.edges.len() {
+                    return Err(format!("node '{}' reads missing edge {}", n.name, p.edge));
+                }
+                consumers[p.edge] += 1;
+            }
+            if n.pus.is_empty() {
+                return Err(format!("node '{}' has no PUs", n.name));
+            }
+            if n.n_inv == 0 {
+                return Err(format!("node '{}' has zero invocations", n.name));
+            }
+        }
+        for (i, (&p, &c)) in producers.iter().zip(&consumers).enumerate() {
+            if p != 1 || c != 1 {
+                return Err(format!(
+                    "edge {i} must have exactly 1 producer and 1 consumer (got {p}/{c})"
+                ));
+            }
+        }
+        // flow conservation: producer total bytes == consumer total bytes
+        for (i, _) in self.edges.iter().enumerate() {
+            let produced: u64 = self
+                .nodes
+                .iter()
+                .flat_map(|n| n.outputs.iter().map(move |p| (n, p)))
+                .filter(|(_, p)| p.edge == i)
+                .map(|(n, p)| n.n_inv as u64 * p.bytes_per_inv)
+                .sum();
+            let consumed: u64 = self
+                .nodes
+                .iter()
+                .flat_map(|n| n.inputs.iter().map(move |p| (n, p)))
+                .filter(|(_, p)| p.edge == i)
+                .map(|(n, p)| n.n_inv as u64 * p.bytes_per_inv)
+                .sum();
+            if produced != consumed {
+                return Err(format!(
+                    "edge {i}: flow not conserved (produced {produced} != consumed {consumed})"
+                ));
+            }
+        }
+        // capacity must fit at least one consumer grain, else deadlock
+        for (i, e) in self.edges.iter().enumerate() {
+            let max_grain = self
+                .nodes
+                .iter()
+                .flat_map(|n| n.inputs.iter())
+                .filter(|p| p.edge == i)
+                .map(|p| p.bytes_per_inv)
+                .chain(
+                    self.nodes
+                        .iter()
+                        .flat_map(|n| n.outputs.iter())
+                        .filter(|p| p.edge == i)
+                        .map(|p| p.bytes_per_inv),
+                )
+                .max()
+                .unwrap_or(0);
+            if e.capacity_bytes < max_grain {
+                return Err(format!(
+                    "edge {i}: capacity {} < largest grain {max_grain} (deadlock)",
+                    e.capacity_bytes
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pu(ns: f64) -> PuTiming {
+        PuTiming { t_send_ns: ns * 0.2, t_calc_ns: ns, t_recv_ns: ns * 0.2 }
+    }
+
+    #[test]
+    fn beat_serial_vs_pipelined() {
+        let t = pu(10.0);
+        assert!((t.beat_ns(true) - 10.0).abs() < 1e-9);
+        assert!((t.beat_ns(false) - 14.0).abs() < 1e-9);
+        assert!((t.fill_ns() - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_flow_mismatch() {
+        let mut s = Scenario::default();
+        let e = s.add_edge(EdgeSpec::wire(1024));
+        s.add_node(NodeSpec {
+            name: "a".into(),
+            pus: vec![pu(1.0)],
+            pipelined: true,
+            n_inv: 2,
+            cores: 1,
+            inputs: vec![],
+            outputs: vec![PortSpec { edge: e, bytes_per_inv: 100 }],
+        });
+        s.add_node(NodeSpec {
+            name: "b".into(),
+            pus: vec![pu(1.0)],
+            pipelined: true,
+            n_inv: 3, // 3*100 != 2*100
+            cores: 1,
+            inputs: vec![PortSpec { edge: e, bytes_per_inv: 100 }],
+            outputs: vec![],
+        });
+        assert!(s.validate().unwrap_err().contains("flow not conserved"));
+    }
+
+    #[test]
+    fn validate_catches_undersized_edge() {
+        let mut s = Scenario::default();
+        let e = s.add_edge(EdgeSpec::wire(10));
+        s.add_node(NodeSpec {
+            name: "a".into(),
+            pus: vec![pu(1.0)],
+            pipelined: true,
+            n_inv: 1,
+            cores: 1,
+            inputs: vec![],
+            outputs: vec![PortSpec { edge: e, bytes_per_inv: 100 }],
+        });
+        s.add_node(NodeSpec {
+            name: "b".into(),
+            pus: vec![pu(1.0)],
+            pipelined: true,
+            n_inv: 1,
+            cores: 1,
+            inputs: vec![PortSpec { edge: e, bytes_per_inv: 100 }],
+            outputs: vec![],
+        });
+        assert!(s.validate().unwrap_err().contains("deadlock"));
+    }
+
+    #[test]
+    fn validate_ok_graph() {
+        let mut s = Scenario::default();
+        let e = s.add_edge(EdgeSpec::wire(1 << 20));
+        s.add_node(NodeSpec {
+            name: "src".into(),
+            pus: vec![pu(5.0)],
+            pipelined: true,
+            n_inv: 4,
+            cores: 4,
+            inputs: vec![],
+            outputs: vec![PortSpec { edge: e, bytes_per_inv: 256 }],
+        });
+        s.add_node(NodeSpec {
+            name: "dst".into(),
+            pus: vec![pu(5.0)],
+            pipelined: true,
+            n_inv: 2,
+            cores: 4,
+            inputs: vec![PortSpec { edge: e, bytes_per_inv: 512 }],
+            outputs: vec![],
+        });
+        s.validate().unwrap();
+    }
+}

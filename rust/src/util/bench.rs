@@ -1,0 +1,99 @@
+//! Minimal timing harness for the `harness = false` benches (criterion is
+//! not vendored for offline builds).  Median-of-N with warmup; prints one
+//! line per benchmark in a stable, grep-able format.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the measured iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn time<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / iters;
+    Stats {
+        iters,
+        median,
+        mean,
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Time and report one benchmark row: `bench <name> ... median <t>`.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F) -> Stats {
+    let s = time(warmup, iters, f);
+    println!(
+        "bench {name:<44} median {:>12} mean {:>12} min {:>12} (n={})",
+        fmt_dur(s.median),
+        fmt_dur(s.mean),
+        fmt_dur(s.min),
+        s.iters
+    );
+    s
+}
+
+/// Human duration: ns / µs / ms / s with 3 significant places.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = time(1, 16, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(s.iters, 16);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

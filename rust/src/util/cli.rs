@@ -1,0 +1,104 @@
+//! Tiny CLI argument parser (clap is not vendored for offline builds).
+//!
+//! Grammar: `cat <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Option names that take a value; everything else starting `--` is a flag.
+pub fn parse(raw: impl IntoIterator<Item = String>, valued: &[&str]) -> Args {
+    let mut args = Args::default();
+    let mut it = raw.into_iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if valued.contains(&name) {
+                match it.next() {
+                    Some(v) => {
+                        args.options.insert(name.to_string(), v);
+                    }
+                    None => {
+                        args.flags.push(name.to_string());
+                    }
+                }
+            } else {
+                args.flags.push(name.to_string());
+            }
+        } else if args.subcommand.is_none() && args.positional.is_empty() {
+            args.subcommand = Some(a);
+        } else {
+            args.positional.push(a);
+        }
+    }
+    args
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_strs(s: &[&str], valued: &[&str]) -> Args {
+        parse(s.iter().map(|x| x.to_string()), valued)
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse_strs(&["simulate", "bert", "extra"], &[]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.positional, vec!["bert", "extra"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse_strs(
+            &["run", "--batch", "16", "--verbose", "--hw=vck5000"],
+            &["batch"],
+        );
+        assert_eq!(a.opt("batch"), Some("16"));
+        assert_eq!(a.opt("hw"), Some("vck5000"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("batch", 1), 16);
+        assert_eq!(a.opt_usize("missing", 4), 4);
+    }
+
+    #[test]
+    fn equals_form_needs_no_valued_list() {
+        let a = parse_strs(&["x", "--k=v"], &[]);
+        assert_eq!(a.opt("k"), Some("v"));
+    }
+}

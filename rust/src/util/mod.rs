@@ -1,0 +1,9 @@
+//! Small self-contained substrates (offline build: no clap/serde/criterion/
+//! proptest available, so the repo carries its own minimal equivalents).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod table;

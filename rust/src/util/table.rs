@@ -1,0 +1,133 @@
+//! ASCII table rendering for the paper-table reproductions.
+
+/// A simple left-aligned-text / right-aligned-number table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width != header width in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render to a boxed ASCII string.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let sep: String = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = w[i] - c.chars().count();
+                // right-align numeric-looking cells
+                let numeric = c
+                    .chars()
+                    .all(|ch| ch.is_ascii_digit() || ".-+x%()/e".contains(ch))
+                    && c.chars().any(|ch| ch.is_ascii_digit());
+                if numeric {
+                    s.push_str(&format!(" {}{} |", " ".repeat(pad), c));
+                } else {
+                    s.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a float with engineering-friendly precision.
+pub fn fmt_f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Format a ratio like the paper's "2.41x".
+pub fn fmt_ratio(v: f64) -> String {
+    format!("{v:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_box() {
+        let mut t = Table::new("T", &["name", "val"]);
+        t.row_strs(&["a", "1.5"]);
+        t.row_strs(&["bb", "20"]);
+        let s = t.render();
+        assert!(s.contains("| name | val |") || s.contains("| name |  val |"), "{s}");
+        assert!(s.lines().count() >= 6);
+        // all body lines equal width
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn ratio_format() {
+        assert_eq!(fmt_ratio(2.414), "2.41x");
+        assert_eq!(fmt_f(1.0 / 3.0, 3), "0.333");
+    }
+}

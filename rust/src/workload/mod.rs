@@ -1,0 +1,247 @@
+//! Transformer load analysis (paper §IV.A).
+//!
+//! Enumerates the exact MM / nonlinear-operator load of one encoder layer
+//! under either linear-layer organization:
+//!
+//! * **per-head linear** — the naive `5·Head + 3` matmuls;
+//! * **independent linear** — the paper's extraction/aggregation of the
+//!   QKV projections of all heads into one large PU matmul (§III.B),
+//!   which collapses the LB count to 4 but keeps `2·Head` ATB matmuls.
+
+use crate::config::ModelConfig;
+
+/// Where in the EDPU dataflow an MM lives (decides which PRG runs it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MmSite {
+    /// Merged QKV linear (independent-linear mode), or one of Q/K/V.
+    QkvLb,
+    /// ATB pre-stage `Q·K^T` (per head).
+    AtbPre,
+    /// ATB post-stage `A·V` (per head).
+    AtbPost,
+    /// Output projection LB.
+    ProjLb,
+    /// FFN first linear.
+    Ffn1Lb,
+    /// FFN second linear.
+    Ffn2Lb,
+}
+
+impl MmSite {
+    pub fn in_mha(&self) -> bool {
+        !matches!(self, MmSite::Ffn1Lb | MmSite::Ffn2Lb)
+    }
+}
+
+/// `count` matmuls of shape `[m, k] x [k, n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MmOp {
+    pub site: MmSite,
+    pub count: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl MmOp {
+    /// MAC*2 ops for all `count` instances.
+    pub fn ops(&self) -> u64 {
+        2 * self.count as u64 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    /// int8 input bytes streamed for one instance (A + B operands).
+    pub fn in_bytes(&self) -> u64 {
+        (self.m * self.k + self.k * self.n) as u64
+    }
+
+    /// int32 output bytes for one instance.
+    pub fn out_bytes(&self) -> u64 {
+        (self.m * self.n * 4) as u64
+    }
+}
+
+/// Nonlinear / data-movement operators that run on the PL branch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlSite {
+    Softmax,
+    Transpose,
+    Gelu,
+    LayerNormAdd,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlOp {
+    pub site: PlSite,
+    pub count: usize,
+    /// rows x cols processed per instance.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PlOp {
+    pub fn bytes(&self) -> u64 {
+        (self.count * self.rows * self.cols * 4) as u64
+    }
+}
+
+/// The full one-layer load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub model: ModelConfig,
+    pub mmsz: usize,
+    pub independent_linear: bool,
+    pub mms: Vec<MmOp>,
+    pub pls: Vec<PlOp>,
+}
+
+/// Enumerate one encoder layer's load (paper §IV.A and the §V.B design
+/// case), padded to `mmsz`.
+pub fn layer_workload(
+    model: &ModelConfig,
+    mmsz: usize,
+    independent_linear: bool,
+) -> Workload {
+    let l = model.padded_seq_len(mmsz);
+    let e = model.embed_dim;
+    let d = model.dff;
+    let h = model.heads;
+    let dh = model.head_dim().max(mmsz); // pad tiny head_dim up to a tile
+
+    let mut mms = Vec::new();
+    if independent_linear {
+        // merged QKV: one [L,E]x[E,3E] — accounted as 3 L x E x E plus the
+        // projection, i.e. the paper's "4 times 256x768x768".
+        mms.push(MmOp { site: MmSite::QkvLb, count: 3, m: l, n: e, k: e });
+    } else {
+        // per-head Q, K, V linears: 3·Head small matmuls [L,E]x[E,dh]
+        mms.push(MmOp { site: MmSite::QkvLb, count: 3 * h, m: l, n: dh, k: e });
+    }
+    mms.push(MmOp { site: MmSite::AtbPre, count: h, m: l, n: l, k: dh });
+    mms.push(MmOp { site: MmSite::AtbPost, count: h, m: l, n: dh, k: l });
+    mms.push(MmOp { site: MmSite::ProjLb, count: 1, m: l, n: e, k: e });
+    mms.push(MmOp { site: MmSite::Ffn1Lb, count: 1, m: l, n: d, k: e });
+    mms.push(MmOp { site: MmSite::Ffn2Lb, count: 1, m: l, n: e, k: d });
+
+    let pls = vec![
+        PlOp { site: PlSite::Softmax, count: h, rows: l, cols: l },
+        PlOp { site: PlSite::Transpose, count: h, rows: l, cols: dh },
+        PlOp { site: PlSite::LayerNormAdd, count: 2, rows: l, cols: e },
+        PlOp { site: PlSite::Gelu, count: 1, rows: l, cols: d },
+    ];
+
+    Workload {
+        model: model.clone(),
+        mmsz,
+        independent_linear,
+        mms,
+        pls,
+    }
+}
+
+impl Workload {
+    /// Total matmul instances. Per-head linear: `5·Head + 3` (§IV.A);
+    /// independent linear: `2·Head + 6`.
+    pub fn mm_count(&self) -> usize {
+        self.mms.iter().map(|m| m.count).sum()
+    }
+
+    /// MAC*2 ops of the layer (what the paper's TOPS figures count).
+    pub fn total_ops(&self) -> u64 {
+        self.mms.iter().map(MmOp::ops).sum()
+    }
+
+    pub fn mha_ops(&self) -> u64 {
+        self.mms.iter().filter(|m| m.site.in_mha()).map(MmOp::ops).sum()
+    }
+
+    pub fn ffn_ops(&self) -> u64 {
+        self.mms.iter().filter(|m| !m.site.in_mha()).map(MmOp::ops).sum()
+    }
+
+    /// Fraction of MM ops vs everything (the paper: "more than 90%").
+    pub fn mm_op_fraction(&self) -> f64 {
+        // count PL ops as ~10 flops/element (exp/div/mean/var etc.)
+        let pl: u64 = self.pls.iter().map(|p| p.bytes() / 4 * 10).sum();
+        let mm = self.total_ops();
+        mm as f64 / (mm + pl) as f64
+    }
+
+    pub fn mms_at(&self, site: MmSite) -> Option<&MmOp> {
+        self.mms.iter().find(|m| m.site == site)
+    }
+
+    /// Weight bytes that must be resident (the §V.B weight cache term).
+    pub fn weight_cache_bytes(&self) -> u64 {
+        let e = self.model.embed_dim as u64;
+        let d = self.model.dff as u64;
+        // paper counts 768*768*4 (QKV merged + proj) + 768*3072*2 = 6.75 MB
+        4 * e * e + 2 * e * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn bert_design_case_counts() {
+        // §V.B: 4x 256x768x768, 12x 256x64x256 (pre: n=l? see below),
+        // 12x 256x256x64, 2 FFN matmuls.
+        let wl = layer_workload(&ModelConfig::bert_base(), 64, true);
+        let qkv = wl.mms_at(MmSite::QkvLb).unwrap();
+        assert_eq!((qkv.count, qkv.m, qkv.n, qkv.k), (3, 256, 768, 768));
+        let proj = wl.mms_at(MmSite::ProjLb).unwrap();
+        assert_eq!((proj.count, proj.m, proj.n, proj.k), (1, 256, 768, 768));
+        let pre = wl.mms_at(MmSite::AtbPre).unwrap();
+        assert_eq!((pre.count, pre.m, pre.n, pre.k), (12, 256, 256, 64));
+        let post = wl.mms_at(MmSite::AtbPost).unwrap();
+        assert_eq!((post.count, post.m, post.n, post.k), (12, 256, 64, 256));
+        assert_eq!(wl.mms_at(MmSite::Ffn1Lb).unwrap().n, 3072);
+    }
+
+    #[test]
+    fn mm_count_rule() {
+        let m = ModelConfig::bert_base();
+        assert_eq!(layer_workload(&m, 64, false).mm_count(), 5 * 12 + 3);
+        assert_eq!(layer_workload(&m, 64, true).mm_count(), 2 * 12 + 6);
+    }
+
+    #[test]
+    fn ops_match_paper_table_vi() {
+        let wl = layer_workload(&ModelConfig::bert_base(), 64, true);
+        // FFN = 2.416 GOP, MHA = 1.409 GOP (paper Table VI cross-check)
+        assert!((wl.ffn_ops() as f64 - 2.416e9).abs() / 2.416e9 < 0.01);
+        assert!((wl.mha_ops() as f64 - 1.409e9).abs() / 1.409e9 < 0.01);
+    }
+
+    #[test]
+    fn mm_dominates_compute() {
+        let wl = layer_workload(&ModelConfig::bert_base(), 64, true);
+        assert!(wl.mm_op_fraction() > 0.90, "{}", wl.mm_op_fraction());
+    }
+
+    #[test]
+    fn vit_pads_attention() {
+        let wl = layer_workload(&ModelConfig::vit_base(), 64, true);
+        let pre = wl.mms_at(MmSite::AtbPre).unwrap();
+        assert_eq!((pre.m, pre.n), (256, 256)); // padded from 197
+    }
+
+    #[test]
+    fn weight_cache_is_6_75_mb() {
+        let wl = layer_workload(&ModelConfig::bert_base(), 64, true);
+        // 768*768*4 + 768*3072*2 = 7_077_888 bytes = 6.75 MiB (paper §V.B)
+        assert_eq!(wl.weight_cache_bytes(), 7_077_888);
+        assert!((wl.weight_cache_bytes() as f64 / (1024.0 * 1024.0) - 6.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn independent_vs_perhead_same_total_lb_ops() {
+        // merging QKV must not change total LB compute
+        let m = ModelConfig::bert_base();
+        let a = layer_workload(&m, 64, true);
+        let b = layer_workload(&m, 64, false);
+        assert_eq!(a.total_ops(), b.total_ops());
+    }
+}

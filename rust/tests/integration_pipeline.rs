@@ -1,0 +1,152 @@
+//! Integration: customization engine -> EDPU scheduler -> simulator ->
+//! metrics, for all three paper accelerators, with calibration checks
+//! against the paper's Tables V/VI.
+
+use cat::arch::ParallelMode;
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{customize, CustomizeOptions};
+use cat::metrics::summarize;
+use cat::sched::{run_edpu, run_stage, Stage};
+
+fn rel_err(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want
+}
+
+#[test]
+fn bert_base_full_pipeline_vs_paper() {
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let r = run_edpu(&plan, 16).unwrap();
+    let s = summarize(&plan, &r);
+
+    // Table VI BERT-Base System row: 0.118 ms, 35.194 TOPS, 99.98 GOPS/AIE,
+    // 67.56 W, 520.97 GOPS/W. Simulator tolerance: 40%.
+    assert!(rel_err(s.sys_latency_ms, 0.118) < 0.40, "latency {}", s.sys_latency_ms);
+    assert!(rel_err(s.sys_tops, 35.194) < 0.40, "tops {}", s.sys_tops);
+    assert!(rel_err(s.sys_gops_per_aie, 99.983) < 0.40, "gops/aie {}", s.sys_gops_per_aie);
+    assert!(rel_err(s.power_w, 67.555) < 0.40, "power {}", s.power_w);
+    assert!(rel_err(s.gops_per_w, 520.968) < 0.50, "gops/w {}", s.gops_per_w);
+    // structure exactly as the paper derives
+    assert_eq!(plan.cores_deployed(), 352);
+    assert!((s.mha_eff_util - 1.0).abs() < 1e-9);
+    assert!((s.ffn_eff_util - 256.0 / 352.0).abs() < 1e-9);
+}
+
+#[test]
+fn vit_base_full_pipeline_vs_paper() {
+    let plan = customize(
+        &ModelConfig::vit_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let r = run_edpu(&plan, 16).unwrap();
+    let s = summarize(&plan, &r);
+    // Table VI ViT-Base: 0.129 ms, 30.279 TOPS, 492.6 GOPS/W
+    assert!(rel_err(s.sys_tops, 30.279) < 0.40, "tops {}", s.sys_tops);
+    assert!(rel_err(s.gops_per_w, 492.629) < 0.50, "gops/w {}", s.gops_per_w);
+}
+
+#[test]
+fn limited_aie_full_pipeline_vs_paper() {
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000_limited(64),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let r = run_edpu(&plan, 16).unwrap();
+    let s = summarize(&plan, &r);
+    // Table VI Limited: 0.398 ms, 9.598 TOPS, 149.97 GOPS/AIE, 16.17 W
+    assert!(rel_err(s.sys_latency_ms, 0.398) < 0.40, "latency {}", s.sys_latency_ms);
+    assert!(rel_err(s.sys_tops, 9.598) < 0.40, "tops {}", s.sys_tops);
+    assert!(rel_err(s.sys_gops_per_aie, 149.968) < 0.40, "gops/aie {}", s.sys_gops_per_aie);
+    assert!(rel_err(s.power_w, 16.168) < 0.40, "power {}", s.power_w);
+    // and the serial design's signature: 100% deployment + utilization
+    assert!((s.deployment_rate - 1.0).abs() < 1e-9);
+    assert!((s.avg_eff_util - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn system_latency_is_sum_of_stages() {
+    // Algorithm 1: MHA and FFN execute serially -> EDPU latency adds.
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let mha = run_stage(&plan, Stage::Mha, 4).unwrap();
+    let ffn = run_stage(&plan, Stage::Ffn, 4).unwrap();
+    let edpu = run_edpu(&plan, 4).unwrap();
+    let sum = mha.makespan_ns + ffn.makespan_ns;
+    assert!((edpu.makespan_ns() - sum).abs() / sum < 1e-9);
+}
+
+#[test]
+fn system_tops_between_stage_tops() {
+    // paper Fig. 5: "the overall system performance is mostly between
+    // MHA Stage and FFN Stage"
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let r = run_edpu(&plan, 16).unwrap();
+    let lo = r.mha.tops().min(r.ffn.tops());
+    let hi = r.mha.tops().max(r.ffn.tops());
+    assert!(r.tops() >= lo * 0.95 && r.tops() <= hi * 1.05,
+            "sys {} not between {} and {}", r.tops(), lo, hi);
+}
+
+#[test]
+fn serial_hybrid_mode_runs_end_to_end() {
+    let opts = CustomizeOptions {
+        force_mha_mode: Some(ParallelMode::SerialHybrid),
+        ..Default::default()
+    };
+    let plan = customize(&ModelConfig::bert_base(), &HardwareConfig::vck5000(), &opts).unwrap();
+    let r = run_edpu(&plan, 2).unwrap();
+    assert!(r.makespan_ns() > 0.0);
+    assert!(r.tops() > 1.0);
+}
+
+#[test]
+fn plan_json_roundtrips_key_fields() {
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let j = plan.to_json();
+    let text = j.to_string();
+    let parsed = cat::util::json::Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("mmsz").unwrap().as_usize(), Some(64));
+    assert_eq!(parsed.get("p_atb").unwrap().as_usize(), Some(4));
+    assert_eq!(
+        parsed.path(&["model", "name"]).unwrap().as_str(),
+        Some("bert-base")
+    );
+}
+
+#[test]
+fn twelve_layer_model_scales_linearly() {
+    // one EDPU iteration = one layer; a 12-layer model is 12 iterations
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let r1 = run_edpu(&plan, 1).unwrap();
+    let full_model_ns = r1.makespan_ns() * 12.0;
+    // BERT-Base full inference: ~12 * 0.118ms at peak (we're at batch 1,
+    // so slower) — just check the scaling arithmetic holds
+    assert!(full_model_ns > 12.0 * r1.mha.makespan_ns);
+}

@@ -1,0 +1,244 @@
+//! Property-based tests over the coordinator/customization invariants
+//! (in-repo harness `cat::util::check`; proptest is not vendored).
+
+use cat::arch::ParallelMode;
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{customize, eq3_mmsz, CustomizeOptions};
+use cat::sched::{run_edpu, run_stage, Stage};
+use cat::sim::scenario::{EdgeSpec, NodeSpec, PortSpec, PuTiming, Scenario};
+use cat::util::check::property;
+use cat::util::prng::Prng;
+use cat::workload::layer_workload;
+
+fn random_model(rng: &mut Prng) -> ModelConfig {
+    let heads = *rng.choose(&[1usize, 2, 4, 8, 12, 16]);
+    let head_dim = *rng.choose(&[32usize, 64, 128]);
+    let embed = heads * head_dim;
+    ModelConfig {
+        name: "random".into(),
+        heads,
+        embed_dim: embed,
+        dff: embed * *rng.choose(&[2usize, 4]),
+        seq_len: rng.range(16, 1024),
+        layers: rng.range(1, 24),
+        bits: 8,
+    }
+}
+
+fn random_hw(rng: &mut Prng) -> HardwareConfig {
+    let mut hw = HardwareConfig::vck5000();
+    hw.total_aie = *rng.choose(&[4usize, 16, 64, 128, 256, 400, 800]);
+    hw.window_bytes = *rng.choose(&[8usize, 16, 32, 64]) * 1024;
+    hw
+}
+
+#[test]
+fn customization_always_feasible() {
+    // For ANY model x hardware combination the engine must produce a plan
+    // that fits the AIE budget and the padded shapes.
+    property("customize/feasible", 200, |rng| {
+        let model = random_model(rng);
+        let hw = random_hw(rng);
+        let plan = customize(&model, &hw, &CustomizeOptions::default())
+            .map_err(|e| format!("customize failed: {e}"))?;
+        if plan.cores_deployed() > hw.total_aie {
+            return Err(format!(
+                "deployed {} > budget {}",
+                plan.cores_deployed(),
+                hw.total_aie
+            ));
+        }
+        if plan.mmsz == 0 || !plan.mmsz.is_power_of_two() {
+            return Err(format!("bad mmsz {}", plan.mmsz));
+        }
+        if plan.p_atb < 1 || plan.p_atb > model.heads {
+            return Err(format!("bad p_atb {}", plan.p_atb));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eq3_respects_window_quarter() {
+    property("eq3/window_quarter", 200, |rng| {
+        let mut hw = HardwareConfig::vck5000();
+        hw.window_bytes = rng.range(64, 1 << 20);
+        let bytes = *rng.choose(&[1usize, 2, 4]);
+        let mmsz = eq3_mmsz(&hw, bytes);
+        if mmsz * mmsz * bytes > hw.window_bytes / 4 && mmsz > 1 {
+            return Err(format!(
+                "mmsz {mmsz} x {bytes}B exceeds quarter window {}",
+                hw.window_bytes / 4
+            ));
+        }
+        // maximality: doubling must overflow
+        if (2 * mmsz) * (2 * mmsz) * bytes <= hw.window_bytes / 4 {
+            return Err(format!("mmsz {mmsz} not maximal"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_ops_independent_of_linear_mode() {
+    // Merging QKV reorganizes but never *adds* compute; per-head linears
+    // additionally pad head_dim up to the tile edge, so they can only be
+    // >= the merged count, with equality when head_dim is tile-aligned.
+    property("workload/ops_conserved", 100, |rng| {
+        let model = random_model(rng);
+        let merged = layer_workload(&model, 64, true).total_ops();
+        let per_head = layer_workload(&model, 64, false).total_ops();
+        if merged > per_head {
+            return Err(format!("merged {merged} > per-head {per_head}"));
+        }
+        if model.head_dim() % 64 == 0 && merged != per_head {
+            return Err(format!("aligned dims but {merged} != {per_head}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn more_aies_never_slower() {
+    // monotonicity: growing the AIE budget must not increase latency
+    property("sched/monotone_in_aies", 12, |rng| {
+        let model = ModelConfig::bert_base();
+        let budgets = [64usize, 128, 400];
+        let batch = rng.range(1, 4);
+        let mut last = f64::INFINITY;
+        for b in budgets {
+            let hw = HardwareConfig::vck5000_limited(b);
+            let plan = customize(&model, &hw, &CustomizeOptions::default())
+                .map_err(|e| e.to_string())?;
+            let r = run_edpu(&plan, batch).map_err(|e| e.to_string())?;
+            if r.makespan_ns() > last * 1.02 {
+                return Err(format!("{b} AIEs slower: {} > {last}", r.makespan_ns()));
+            }
+            last = r.makespan_ns();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_throughput_monotone() {
+    property("sched/batch_monotone", 6, |rng| {
+        let model = if rng.bool() {
+            ModelConfig::bert_base()
+        } else {
+            ModelConfig::vit_base()
+        };
+        let plan = customize(&model, &HardwareConfig::vck5000(), &CustomizeOptions::default())
+            .map_err(|e| e.to_string())?;
+        let mut last = 0.0;
+        for batch in [1usize, 4, 16] {
+            let r = run_edpu(&plan, batch).map_err(|e| e.to_string())?;
+            let tops = r.tops();
+            if tops < last * 0.98 {
+                return Err(format!("batch {batch}: {tops} < {last}"));
+            }
+            last = tops;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_flow_conservation_random_pipelines() {
+    // random 2-4 node chains: the engine must complete them (no deadlock)
+    // and makespan must be >= the slowest node's lower bound.
+    property("sim/random_chains", 150, |rng| {
+        let n_nodes = rng.range(2, 4);
+        let mut sc = Scenario::default();
+        let mut prev: Option<(usize, usize)> = None; // (node, n_inv)
+        for i in 0..n_nodes {
+            let n_inv = rng.range(1, 12);
+            let t = PuTiming {
+                t_send_ns: rng.range(0, 5) as f64,
+                t_calc_ns: rng.range(1, 20) as f64,
+                t_recv_ns: rng.range(0, 5) as f64,
+            };
+            let node = sc.add_node(NodeSpec {
+                name: format!("n{i}"),
+                pus: vec![t; rng.range(1, 3)],
+                pipelined: rng.bool(),
+                n_inv,
+                cores: 1,
+                inputs: vec![],
+                outputs: vec![],
+            });
+            if let Some((p, p_inv)) = prev {
+                // conserve flow exactly: total = lcm-ish product unit
+                let unit = rng.range(1, 64) as u64;
+                let total = unit * p_inv as u64 * n_inv as u64;
+                let e = sc.add_edge(EdgeSpec::wire(total.max(1)));
+                sc.nodes[p].outputs.push(PortSpec {
+                    edge: e,
+                    bytes_per_inv: total / p_inv as u64,
+                });
+                sc.nodes[node].inputs.push(PortSpec {
+                    edge: e,
+                    bytes_per_inv: total / n_inv as u64,
+                });
+            }
+            prev = Some((node, n_inv));
+        }
+        let r = cat::sim::run(&sc).map_err(|e| format!("sim: {e}"))?;
+        // lower bound: any node's serial work / its PU count
+        for (i, n) in sc.nodes.iter().enumerate() {
+            let beat = n.pus[0].beat_ns(n.pipelined);
+            let lower = beat * (n.n_inv as f64 / n.pus.len() as f64).floor();
+            if r.makespan_ns + 1e-6 < lower {
+                return Err(format!("node {i}: makespan {} < bound {lower}", r.makespan_ns));
+            }
+        }
+        // determinism
+        let r2 = cat::sim::run(&sc).map_err(|e| format!("sim: {e}"))?;
+        if (r.makespan_ns - r2.makespan_ns).abs() > 1e-12 {
+            return Err("non-deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stage_ops_conserved_across_modes() {
+    // the same workload must report the same op count whatever the mode
+    property("sched/ops_mode_invariant", 8, |_rng| {
+        let model = ModelConfig::bert_base();
+        let hw = HardwareConfig::vck5000();
+        let mut plans = Vec::new();
+        for mode in [ParallelMode::FullyPipelined, ParallelMode::SerialHybrid] {
+            let opts = CustomizeOptions {
+                force_mha_mode: Some(mode),
+                ..Default::default()
+            };
+            plans.push(customize(&model, &hw, &opts).map_err(|e| e.to_string())?);
+        }
+        let ops: Vec<u64> = plans
+            .iter()
+            .map(|p| run_stage(p, Stage::Mha, 2).map(|r| r.ops))
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        if ops.windows(2).any(|w| w[0] != w[1]) {
+            return Err(format!("{ops:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn useful_ops_never_exceed_padded_peak() {
+    property("metrics/tops_below_peak", 30, |rng| {
+        let model = random_model(rng);
+        let hw = HardwareConfig::vck5000();
+        let plan = customize(&model, &hw, &CustomizeOptions::default())
+            .map_err(|e| e.to_string())?;
+        let r = run_edpu(&plan, 4).map_err(|e| e.to_string())?;
+        // no accelerator can beat the array's sustained-MM peak
+        if r.tops() > hw.peak_tops() {
+            return Err(format!("{} TOPS > peak {}", r.tops(), hw.peak_tops()));
+        }
+        Ok(())
+    });
+}

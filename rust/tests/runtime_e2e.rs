@@ -1,0 +1,225 @@
+//! End-to-end PJRT runtime tests (need `make artifacts`; each test skips
+//! gracefully when the artifact directory is absent).
+//!
+//! These are the repo's ground-truth numerics checks: the EDPU-tiled
+//! (Pallas/AIE-MM-PU schedule) encoder must be bit-identical on the int8
+//! path to the fused encoder, and the two-stage decomposition must
+//! compose exactly.
+
+use cat::config::ModelConfig;
+use cat::coordinator::{synthetic_request, Host, HostConfig};
+use cat::runtime::{EncoderWeights, Runtime, Tensor};
+
+fn artifacts() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pallas_tiling_is_arithmetically_invisible() {
+    let Some(dir) = artifacts() else { return };
+    let model = ModelConfig::bert_base();
+    let mut rt = Runtime::open(dir).unwrap();
+    let req = synthetic_request(&model, 64, 0, 11);
+    let w = EncoderWeights::synthetic(&model, 5);
+    let (f_fused, q_fused, s_fused) = rt
+        .encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &w)
+        .unwrap();
+    let (f_pal, q_pal, s_pal) = rt
+        .encoder_layer("encoder_layer_pallas", &req.x_q, req.x_scale, &w)
+        .unwrap();
+    assert_eq!(q_fused.as_i8().unwrap(), q_pal.as_i8().unwrap());
+    assert!((s_fused - s_pal).abs() < 1e-7);
+    let max = f_fused
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(f_pal.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-4, "max diff {max}");
+}
+
+#[test]
+fn stage_decomposition_composes_exactly() {
+    let Some(dir) = artifacts() else { return };
+    let model = ModelConfig::bert_base();
+    let mut rt = Runtime::open(dir).unwrap();
+    let req = synthetic_request(&model, 64, 1, 23);
+    let w = EncoderWeights::synthetic(&model, 9);
+
+    let (full, _, _) = rt
+        .encoder_layer("encoder_layer_pallas", &req.x_q, req.x_scale, &w)
+        .unwrap();
+
+    let mut mha_in = vec![req.x_q.clone(), Tensor::scalar_f32(req.x_scale)];
+    mha_in.extend([
+        w.wqkv.clone(),
+        Tensor::scalar_f32(w.sqkv),
+        w.bqkv.clone(),
+        w.wproj.clone(),
+        Tensor::scalar_f32(w.sproj),
+        w.bproj.clone(),
+        w.ln1_g.clone(),
+        w.ln1_b.clone(),
+    ]);
+    let h1 = rt.run("mha_stage", &mha_in).unwrap().remove(0);
+    let mut ffn_in = vec![h1];
+    ffn_in.extend([
+        w.w1.clone(),
+        Tensor::scalar_f32(w.s1),
+        w.b1.clone(),
+        w.w2.clone(),
+        Tensor::scalar_f32(w.s2),
+        w.b2.clone(),
+        w.ln2_g.clone(),
+        w.ln2_b.clone(),
+    ]);
+    let composed = rt.run("ffn_stage", &ffn_in).unwrap().remove(0);
+
+    let max = full
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(composed.as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-4, "stage composition diverged: {max}");
+}
+
+#[test]
+fn pu_artifacts_compute_identity_matmuls() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    for (name, m, k) in [
+        ("mm_pu_large", 256usize, 256usize),
+        ("mm_pu_standard", 128, 256),
+        ("mm_pu_small", 64, 256),
+    ] {
+        // a = [I | 0] so a @ b = top k-rows of b's first m columns...
+        // simpler: a = identity-padded, b = ramp; check row 0.
+        let info = rt.manifest().artifact(name).unwrap().clone();
+        let (ma, ka) = (info.params[0].shape[0], info.params[0].shape[1]);
+        let (kb, nb) = (info.params[1].shape[0], info.params[1].shape[1]);
+        assert_eq!((ma, ka), (m, k));
+        let mut a = vec![0i8; ma * ka];
+        for i in 0..ma.min(ka) {
+            a[i * ka + i] = 1;
+        }
+        let b: Vec<i8> = (0..kb * nb).map(|i| (i % 125) as i8 - 62).collect();
+        let out = rt
+            .run(
+                name,
+                &[
+                    Tensor::I8 { data: a, shape: vec![ma, ka] },
+                    Tensor::I8 { data: b.clone(), shape: vec![kb, nb] },
+                ],
+            )
+            .unwrap();
+        let got = match &out[0] {
+            Tensor::I32 { data, .. } => data.clone(),
+            other => panic!("{name}: unexpected {other:?}"),
+        };
+        // with a = I (padded), out rows 0..min(m,k) == b rows 0..min
+        for r in 0..ma.min(ka).min(4) {
+            for c in 0..nb {
+                assert_eq!(got[r * nb + c], b[r * nb + c] as i32, "{name} at ({r},{c})");
+            }
+        }
+    }
+}
+
+#[test]
+fn pl_operator_artifacts_behave() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::open(dir).unwrap();
+    // softmax rows sum to one
+    let x = Tensor::F32 { data: vec![0.5; 256 * 256], shape: vec![256, 256] };
+    let out = rt.run("softmax_row", &[x]).unwrap().remove(0);
+    let v = out.as_f32().unwrap();
+    for r in 0..4 {
+        let s: f32 = v[r * 256..(r + 1) * 256].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+    }
+    // layernorm of constant rows is beta
+    let x = Tensor::F32 { data: vec![3.0; 256 * 768], shape: vec![256, 768] };
+    let g = Tensor::F32 { data: vec![2.0; 768], shape: vec![768] };
+    let b = Tensor::F32 { data: vec![0.25; 768], shape: vec![768] };
+    let out = rt.run("layernorm", &[x, g, b]).unwrap().remove(0);
+    let v = out.as_f32().unwrap();
+    assert!(v.iter().take(768).all(|x| (x - 0.25).abs() < 1e-3));
+    // gelu(0) == 0
+    let x = Tensor::F32 { data: vec![0.0; 256 * 3072], shape: vec![256, 3072] };
+    let out = rt.run("gelu", &[x]).unwrap().remove(0);
+    assert!(out.as_f32().unwrap().iter().all(|v| v.abs() < 1e-7));
+}
+
+#[test]
+fn multi_layer_chaining_is_stable() {
+    let Some(dir) = artifacts() else { return };
+    let model = ModelConfig::bert_base();
+    let mut rt = Runtime::open(dir).unwrap();
+    let req = synthetic_request(&model, 64, 2, 31);
+    let ws: Vec<EncoderWeights> =
+        (0..3).map(|i| EncoderWeights::synthetic(&model, 100 + i)).collect();
+    let out = rt
+        .encoder_forward("encoder_layer_fused", req.x_q, req.x_scale, &ws)
+        .unwrap();
+    let v = out.as_f32().unwrap();
+    assert!(v.iter().all(|x| x.is_finite()));
+    // LayerNorm-ed output: per-row mean ~0
+    let mean: f32 = v[..768].iter().sum::<f32>() / 768.0;
+    assert!(mean.abs() < 1e-2, "mean {mean}");
+}
+
+#[test]
+fn host_serves_batches_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let model = ModelConfig::bert_base();
+    let mut cfg = HostConfig::new(model.clone());
+    cfg.artifact_dir = dir.to_string();
+    cfg.layers = 1;
+    cfg.workers = 2;
+    cfg.max_batch = 3;
+    let mut host = Host::start(cfg).unwrap();
+    let n = 7;
+    for i in 0..n {
+        host.submit(synthetic_request(&model, 64, i, 900 + i));
+    }
+    let (responses, stats) = host.drain().unwrap();
+    assert_eq!(responses.len(), n as usize);
+    assert_eq!(stats.completed, n as usize);
+    // ids preserved and sorted
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.output.shape(), &[256, 768]);
+    }
+    // identical inputs must give identical outputs across workers
+    let mut cfg2 = HostConfig::new(model.clone());
+    cfg2.artifact_dir = dir.to_string();
+    cfg2.layers = 1;
+    cfg2.workers = 1;
+    cfg2.max_batch = 1;
+    let mut host2 = Host::start(cfg2).unwrap();
+    host2.submit(synthetic_request(&model, 64, 0, 900));
+    let (r2, _) = host2.drain().unwrap();
+    assert_eq!(
+        responses[0].output.as_f32().unwrap(),
+        r2[0].output.as_f32().unwrap()
+    );
+}
+
+#[test]
+fn host_reports_worker_errors() {
+    let Some(_) = artifacts() else { return };
+    let model = ModelConfig::bert_base();
+    let mut cfg = HostConfig::new(model.clone());
+    cfg.artifact_dir = "nonexistent-dir".into();
+    let mut host = Host::start(cfg).unwrap();
+    host.submit(synthetic_request(&model, 64, 0, 1));
+    assert!(host.drain().is_err());
+}
