@@ -24,6 +24,9 @@ fn main() {
 
     let (_, bert, hw) = &three_accelerators()[0];
     bench("fig5/bert_sweep_6_batches", 1, 5, || {
+        // reset so every iteration simulates instead of hitting the
+        // stage-sim cache (keeps rows comparable with the seed trajectory)
+        cat::sched::reset_stage_cache();
         let _ = fig5_series(bert, hw).unwrap();
     });
 }

@@ -1,45 +1,122 @@
-//! §Perf — microbenchmarks of the L3 hot paths (used by the performance
-//! pass; before/after numbers recorded in EXPERIMENTS.md §Perf):
+//! §Perf — microbenchmarks of the L3 hot paths:
 //!
-//! * DES engine throughput (events/s) on the BERT MHA scenario,
-//! * full EDPU simulation latency at several batch sizes,
+//! * DES engine throughput on the BERT MHA scenario, fast vs exact
+//!   (`engine/*` rows isolate the simulator fast path from the caches),
+//! * full EDPU simulation latency at several batch sizes (stage-sim cache
+//!   reset inside the timed closure, so the engine is what's measured),
+//! * the stage-sim cache hit path,
 //! * customization engine latency,
 //! * PJRT runtime: encoder-layer execution + literal marshalling
 //!   (skipped when artifacts are absent).
+//!
+//! Modes:
+//!   `cargo bench --bench hotpath -- --json BENCH_hotpath.json`
+//!       also writes the machine-readable trajectory record;
+//!   `CAT_BENCH_SMOKE=1` shrinks iteration counts for CI smoke runs.
+//!
+//! The run *asserts* fast-vs-exact engine parity (≤0.1% makespan
+//! deviation, equal bytes moved) before timing anything, so a fast-path
+//! correctness regression fails the bench — and CI — loudly.
+
+use std::collections::BTreeMap;
 
 use cat::config::{HardwareConfig, ModelConfig};
 use cat::customize::{customize, CustomizeOptions};
-use cat::sched::{run_edpu, run_stage, Stage};
-use cat::util::bench::{bench, black_box};
+use cat::sched::{build_mha_pipelined, reset_stage_cache, run_edpu, run_stage, Stage};
+use cat::sim;
+use cat::util::bench::{bench, bench_doc, black_box, write_json, Stats};
+use cat::util::cli;
+use cat::util::json::Json;
+use cat::workload::layer_workload;
 
 fn main() {
+    let args = cli::parse(std::env::args().skip(1), &["json"]);
+    let smoke = std::env::var("CAT_BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+
     let model = ModelConfig::bert_base();
     let hw = HardwareConfig::vck5000();
     let plan = customize(&model, &hw, &CustomizeOptions::default()).unwrap();
+    let wl = layer_workload(&plan.model, plan.mmsz, plan.independent_linear);
 
-    println!("=== hot-path microbenchmarks ===\n");
+    println!("=== hot-path microbenchmarks ({}) ===\n", if smoke { "smoke" } else { "full" });
 
-    bench("customize/bert_on_vck5000", 10, 100, || {
+    // --- correctness gate: the fast engine must match the exact engine ---
+    let sc64 = build_mha_pipelined(&plan, &wl, 64, true).unwrap();
+    let fast = sim::run(&sc64).unwrap();
+    let exact = sim::run_exact(&sc64).unwrap();
+    let parity = (fast.makespan_ns - exact.makespan_ns).abs() / exact.makespan_ns.max(1e-9);
+    assert!(
+        parity <= 1e-3,
+        "fast path deviates from exact DES: {} vs {} ({parity:.2e} rel)",
+        fast.makespan_ns,
+        exact.makespan_ns
+    );
+    assert_eq!(fast.bytes_moved, exact.bytes_moved, "fast path lost bytes");
+    println!(
+        "  parity gate: batch-64 MHA makespan fast {:.1} µs vs exact {:.1} µs \
+         (rel dev {parity:.2e}); {} / {} invocations fast-forwarded\n",
+        fast.makespan_ns / 1e3,
+        exact.makespan_ns / 1e3,
+        fast.fast_forwarded,
+        sc64.total_invocations(),
+    );
+
+    // One helper owns the (warmup, iters) smoke-shrink, the timing, and
+    // the row recording, so a row name can't diverge from its record.
+    let mut rows: Vec<(String, Stats)> = Vec::new();
+    let mut run_row = |name: &str, warmup: u32, iters: u32, f: &mut dyn FnMut()| -> Stats {
+        let (w, i) = if smoke { (0, iters.min(2)) } else { (warmup, iters) };
+        let s = bench(name, w, i, f);
+        rows.push((name.to_string(), s));
+        s
+    };
+
+    run_row("customize/bert_on_vck5000", 10, 100, &mut || {
         black_box(customize(&model, &hw, &CustomizeOptions::default()).unwrap());
     });
 
+    // --- engine rows: the same scenario object, fast vs exact ---
+    let fast_med = run_row("engine/mha_scenario_batch64_fast", 2, 10, &mut || {
+        black_box(sim::run(&sc64).unwrap());
+    })
+    .median_ns();
+    let exact_med = run_row("engine/mha_scenario_batch64_exact", 1, 5, &mut || {
+        black_box(sim::run_exact(&sc64).unwrap());
+    })
+    .median_ns();
+
+    // --- scheduler rows: cache reset inside the closure so every
+    //     iteration pays the real simulation, not a lookup ---
+    reset_stage_cache();
     let r = run_stage(&plan, Stage::Mha, 8).unwrap();
     println!(
-        "  (MHA batch-8 scenario: {} events, {:.1} µs simulated)",
+        "  (MHA batch-8 scenario: {} events, {} fast-forwarded, {:.1} µs simulated)",
         r.sim.events,
+        r.sim.fast_forwarded,
         r.makespan_ns / 1e3
     );
-    bench("sim/mha_stage_batch8", 3, 30, || {
+    run_row("sim/mha_stage_batch8", 3, 30, &mut || {
+        reset_stage_cache();
         black_box(run_stage(&plan, Stage::Mha, 8).unwrap());
     });
-    bench("sim/edpu_batch1", 3, 30, || {
+    run_row("sim/edpu_batch1", 3, 30, &mut || {
+        reset_stage_cache();
         black_box(run_edpu(&plan, 1).unwrap());
     });
-    bench("sim/edpu_batch16", 3, 20, || {
+    run_row("sim/edpu_batch16", 3, 20, &mut || {
+        reset_stage_cache();
         black_box(run_edpu(&plan, 16).unwrap());
     });
-    bench("sim/edpu_batch64", 1, 5, || {
+    run_row("sim/edpu_batch64", 1, 5, &mut || {
+        reset_stage_cache();
         black_box(run_edpu(&plan, 64).unwrap());
+    });
+
+    // --- cache row: identical call, warm cache ---
+    reset_stage_cache();
+    let _ = run_edpu(&plan, 16).unwrap(); // warm
+    run_row("cache/edpu_batch16_hit", 3, 30, &mut || {
+        black_box(run_edpu(&plan, 16).unwrap());
     });
 
     // PJRT hot path (needs artifacts)
@@ -49,20 +126,44 @@ fn main() {
         let mut rt = Runtime::open("artifacts").unwrap();
         rt.compile("encoder_layer_fused").unwrap();
         let req = synthetic_request(&model, 64, 0, 1);
-        let w = EncoderWeights::synthetic(&model, 7);
-        bench("pjrt/encoder_layer_fused", 1, 5, || {
+        let wts = EncoderWeights::synthetic(&model, 7);
+        run_row("pjrt/encoder_layer_fused", 1, 5, &mut || {
             black_box(
-                rt.encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &w)
+                rt.encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &wts)
                     .unwrap(),
             );
         });
         let tile_a = cat::runtime::Tensor::I8 { data: vec![1; 64 * 64], shape: vec![64, 64] };
         let tile_b = tile_a.clone();
         rt.compile("mm_tile").unwrap();
-        bench("pjrt/mm_tile_64", 3, 50, || {
+        run_row("pjrt/mm_tile_64", 3, 50, &mut || {
             black_box(rt.run("mm_tile", &[tile_a.clone(), tile_b.clone()]).unwrap());
         });
     } else {
         println!("  (artifacts/ missing — run `make artifacts` for PJRT benches)");
+    }
+
+    let engine_speedup = exact_med / fast_med.max(1.0);
+    println!("\n  engine fast-path speedup on batch-64 MHA: {engine_speedup:.2}x (exact/fast)");
+
+    if let Some(path) = args.opt("json") {
+        let mut derived = BTreeMap::new();
+        derived.insert(
+            "engine_speedup_mha_batch64".to_string(),
+            Json::Num((engine_speedup * 100.0).round() / 100.0),
+        );
+        derived.insert("parity_rel_dev_mha_batch64".to_string(), Json::Num(parity));
+        derived.insert(
+            "fast_forwarded_mha_batch64".to_string(),
+            Json::Num(fast.fast_forwarded as f64),
+        );
+        derived.insert("smoke".to_string(), Json::Bool(smoke));
+        derived.insert(
+            "regenerate".to_string(),
+            Json::Str("cargo bench --bench hotpath -- --json BENCH_hotpath.json".into()),
+        );
+        let doc = bench_doc("hotpath", &rows, derived);
+        write_json(path, &doc).expect("writing bench json");
+        println!("  wrote {path}");
     }
 }

@@ -28,6 +28,9 @@ fn main() {
     }
     // timing of the experiment itself (simulator throughput)
     bench("table2/full_ablation", 1, 5, || {
+        // reset so every iteration simulates instead of hitting the
+        // stage-sim cache (keeps rows comparable with the seed trajectory)
+        cat::sched::reset_stage_cache();
         let _ = table2_rows().unwrap();
     });
 }

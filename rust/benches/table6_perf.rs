@@ -34,6 +34,9 @@ fn main() {
     }
 
     bench("table6/simulate_all_three_batch16", 1, 5, || {
+        // reset so every iteration simulates instead of hitting the
+        // stage-sim cache (keeps rows comparable with the seed trajectory)
+        cat::sched::reset_stage_cache();
         let _ = table6_rows().unwrap();
     });
 }

@@ -49,6 +49,9 @@ fn main() {
     );
 
     bench("table7/full_comparison", 1, 5, || {
+        // reset so every iteration simulates instead of hitting the
+        // stage-sim cache (keeps rows comparable with the seed trajectory)
+        cat::sched::reset_stage_cache();
         let _ = table7_data().unwrap();
     });
 }

@@ -274,6 +274,35 @@ impl AcceleratorPlan {
         self.mha.cores_deployed().max(self.ffn.cores_deployed())
     }
 
+    /// Semantic fingerprint of everything that can influence a simulation
+    /// of this plan (model dims, hardware timing parameters, and the full
+    /// PRG/PU allocation).  Keyed on the complete `Debug` rendering so a
+    /// new plan field can never silently escape the key; used by the
+    /// scheduler's stage-simulation cache.  Stable within a process run,
+    /// which is all an in-memory cache needs.
+    ///
+    /// Recomputed per call (not memoized on the plan): tests mutate plans
+    /// in place after `customize` (e.g. swapping `hw`), and a stale
+    /// stored fingerprint would alias two different plans in the cache.
+    /// The formatter streams straight into the hasher, so the cost is one
+    /// Debug-format pass with no allocation — trivial next to even a
+    /// cache-hit's clone.
+    pub fn fingerprint(&self) -> u64 {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::Hasher;
+
+        struct HashWriter(DefaultHasher);
+        impl std::fmt::Write for HashWriter {
+            fn write_str(&mut self, s: &str) -> std::fmt::Result {
+                self.0.write(s.as_bytes());
+                Ok(())
+            }
+        }
+        let mut w = HashWriter(DefaultHasher::new());
+        let _ = std::fmt::write(&mut w, format_args!("{self:?}"));
+        w.0.finish()
+    }
+
     /// Eq. 1: deployed / total.
     pub fn deployment_rate(&self) -> f64 {
         self.cores_deployed() as f64 / self.hw.total_aie as f64

@@ -44,6 +44,16 @@ impl Batcher {
             .unwrap_or(false)
     }
 
+    /// How long until the oldest pending request goes stale (`None` when
+    /// nothing is pending; `Some(ZERO)` when already stale).  Drives the
+    /// host's condvar wait so timeout flushes fire promptly instead of on
+    /// a fixed polling grid.
+    pub fn time_until_stale(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .first()
+            .map(|(_, t)| self.cfg.timeout.saturating_sub(now.duration_since(*t)))
+    }
+
     /// Emit whatever is pending (stream end / timer tick).
     pub fn flush(&mut self) -> Option<Vec<(Request, Instant)>> {
         if self.pending.is_empty() {
@@ -114,5 +124,25 @@ mod tests {
     #[should_panic(expected = "max_batch")]
     fn zero_batch_rejected() {
         Batcher::new(BatcherConfig { max_batch: 0, timeout: Duration::ZERO });
+    }
+
+    #[test]
+    fn time_until_stale_counts_down() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 10,
+            timeout: Duration::from_millis(8),
+        });
+        let t0 = Instant::now();
+        assert_eq!(b.time_until_stale(t0), None);
+        b.push(req(1), t0);
+        assert_eq!(b.time_until_stale(t0), Some(Duration::from_millis(8)));
+        assert_eq!(
+            b.time_until_stale(t0 + Duration::from_millis(5)),
+            Some(Duration::from_millis(3))
+        );
+        // past the deadline: saturates at zero and reads as stale
+        let late = t0 + Duration::from_millis(20);
+        assert_eq!(b.time_until_stale(late), Some(Duration::ZERO));
+        assert!(b.is_stale(late));
     }
 }

@@ -122,6 +122,10 @@ struct Shared {
     queue: Mutex<VecDeque<(Vec<(Request, Instant)>, usize)>>,
     available: Condvar,
     done: Mutex<Vec<Response>>,
+    /// Signaled (paired with `done`) whenever a worker completes a
+    /// request or records an error, so `drain` wakes immediately instead
+    /// of sleep-polling.
+    completed: Condvar,
     stop: AtomicBool,
     errors: Mutex<Vec<String>>,
 }
@@ -145,6 +149,7 @@ impl Host {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             done: Mutex::new(Vec::new()),
+            completed: Condvar::new(),
             stop: AtomicBool::new(false),
             errors: Mutex::new(Vec::new()),
         });
@@ -189,6 +194,29 @@ impl Host {
         }
     }
 
+    /// Dispatch the pending batch if its oldest request has exceeded the
+    /// batch timeout.  Callers with request gaps longer than the timeout
+    /// should tick this so partially filled batches don't sit waiting for
+    /// the next submit.
+    pub fn poll(&mut self) {
+        if self.batcher.is_stale(Instant::now()) {
+            if let Some(batch) = self.batcher.flush() {
+                self.dispatch(batch);
+            }
+        }
+    }
+
+    /// How long a serving loop may sleep before the next [`Host::poll`]
+    /// tick is due (`None`: nothing pending, sleep on request arrival).
+    pub fn time_until_stale(&self) -> Option<Duration> {
+        self.batcher.time_until_stale(Instant::now())
+    }
+
+    /// Requests accumulated in the batcher but not yet dispatched.
+    pub fn pending_len(&self) -> usize {
+        self.batcher.pending_len()
+    }
+
     fn dispatch(&self, batch: Vec<(Request, Instant)>) {
         let n = batch.len();
         let mut q = self.shared.queue.lock().unwrap();
@@ -199,22 +227,43 @@ impl Host {
 
     /// Wait until every submitted request has completed; returns all
     /// responses (sorted by id) and the serving stats.
+    ///
+    /// §Perf: completion is condvar-driven (workers signal `completed`),
+    /// not a 1 ms sleep-poll.  The initial `flush()` empties the batcher
+    /// and `drain` consumes the host, so no batch can go stale during the
+    /// wait — timeout-driven flushing on a live request stream is
+    /// [`Host::poll`]'s job (its wait budget comes from
+    /// [`Batcher::time_until_stale`]).  The wait timeout here is only a
+    /// backstop for the error path's separate mutex.
     pub fn drain(mut self) -> Result<(Vec<Response>, ServeStats)> {
         self.flush();
-        loop {
-            {
-                let done = self.shared.done.lock().unwrap();
+        {
+            let mut done = self.shared.done.lock().unwrap();
+            loop {
                 if done.len() as u64 >= self.submitted {
                     break;
                 }
-                let errs = self.shared.errors.lock().unwrap();
-                if !errs.is_empty() {
-                    return Err(anyhow!("worker error: {}", errs.join("; ")));
+                // On a worker error, break (not return): the shutdown
+                // below must still run so surviving workers are joined
+                // rather than leaked; the post-join error check reports.
+                if !self.shared.errors.lock().unwrap().is_empty() {
+                    break;
                 }
+                done = self
+                    .shared
+                    .completed
+                    .wait_timeout(done, Duration::from_millis(50))
+                    .unwrap()
+                    .0;
             }
-            std::thread::sleep(Duration::from_millis(1));
         }
-        self.shared.stop.store(true, Ordering::SeqCst);
+        // Set stop under the queue lock: a worker checks `stop` while
+        // holding that lock before waiting, so the notify below can never
+        // slip between its check and its wait.
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+        }
         self.shared.available.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -248,15 +297,20 @@ impl Host {
 }
 
 fn worker_loop(_wid: usize, cfg: HostConfig, sh: Arc<Shared>) {
+    let fail = |sh: &Shared, msg: String| {
+        sh.errors.lock().unwrap().push(msg);
+        // wake drain() so the error surfaces immediately
+        sh.completed.notify_all();
+    };
     let mut rt = match Runtime::open(&cfg.artifact_dir) {
         Ok(rt) => rt,
         Err(e) => {
-            sh.errors.lock().unwrap().push(format!("runtime open: {e}"));
+            fail(&sh, format!("runtime open: {e}"));
             return;
         }
     };
     if let Err(e) = rt.compile(&cfg.variant) {
-        sh.errors.lock().unwrap().push(format!("compile: {e}"));
+        fail(&sh, format!("compile: {e}"));
         return;
     }
     let weights: Vec<EncoderWeights> = (0..cfg.layers)
@@ -264,6 +318,11 @@ fn worker_loop(_wid: usize, cfg: HostConfig, sh: Arc<Shared>) {
         .collect();
 
     loop {
+        // Idle workers park on the `available` condvar until a batch is
+        // queued or stop is raised (raised under this same lock, so the
+        // notify cannot be missed).  The long timeout is a belt-and-braces
+        // re-check, not a polling cadence — §Perf: idle workers no longer
+        // wake 50 times a second.
         let job = {
             let mut q = sh.queue.lock().unwrap();
             loop {
@@ -273,12 +332,13 @@ fn worker_loop(_wid: usize, cfg: HostConfig, sh: Arc<Shared>) {
                 if sh.stop.load(Ordering::SeqCst) {
                     break None;
                 }
-                q = sh.available.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+                q = sh.available.wait_timeout(q, Duration::from_millis(500)).unwrap().0;
             }
         };
         let Some((batch, batch_size)) = job else { return };
 
-        // simulated board latency for this batch (once per batch)
+        // simulated board latency for this batch (once per batch; the
+        // stage-sim cache makes repeats of the same batch size free)
         let sim_ns = cfg
             .plan
             .as_ref()
@@ -301,9 +361,10 @@ fn worker_loop(_wid: usize, cfg: HostConfig, sh: Arc<Shared>) {
                         batch_size,
                         simulated_batch_ns: sim_ns,
                     });
+                    sh.completed.notify_all();
                 }
                 Err(e) => {
-                    sh.errors.lock().unwrap().push(format!("req {}: {e}", req.id));
+                    fail(&sh, format!("req {}: {e}", req.id));
                     return;
                 }
             }
@@ -352,6 +413,27 @@ mod tests {
         assert_eq!(r.x_q.shape(), &[256, 768]);
         assert!(r.x_scale > 0.0);
         assert_eq!(r.id, 3);
+    }
+
+    #[test]
+    fn poll_flushes_stale_partial_batch() {
+        // Host-side batching needs no runtime: workers fail to open the
+        // bogus artifact dir and exit, which is irrelevant here — poll()
+        // operates on the batcher/queue only.
+        let m = ModelConfig::bert_base();
+        let mut cfg = HostConfig::new(m.clone());
+        cfg.artifact_dir = "nonexistent-artifacts".into();
+        cfg.max_batch = 100;
+        cfg.batch_timeout = Duration::from_millis(1);
+        cfg.workers = 1;
+        let mut host = Host::start(cfg).unwrap();
+        host.submit(synthetic_request(&m, 64, 0, 7));
+        assert_eq!(host.pending_len(), 1);
+        assert!(host.time_until_stale().is_some());
+        std::thread::sleep(Duration::from_millis(5));
+        host.poll();
+        assert_eq!(host.pending_len(), 0, "stale partial batch must dispatch");
+        assert_eq!(host.time_until_stale(), None);
     }
 
     // end-to-end host tests live in rust/tests/ (they need artifacts)

@@ -11,23 +11,24 @@ use crate::metrics::{summarize, PerfSummary};
 use crate::report::{AblationRow, BatchPoint, CatRow};
 use crate::sched::{run_edpu, run_stage_opts, Stage};
 use crate::sim::scenario::{NodeSpec, PuTiming, Scenario};
+use crate::util::par::try_par_map;
 use anyhow::Result;
 
 /// EXP-T2 — Table II: the five ablation labs.  Same PU specifications in
 /// every lab ("to ensure fairness ... the same scale AIE MM PU"),
-/// toggling only the three customization attributes.
+/// toggling only the three customization attributes.  The labs are
+/// independent design points, so they simulate in parallel (§Perf).
 pub fn table2_rows() -> Result<Vec<AblationRow>> {
     let model = ModelConfig::vit_base();
     let hw = HardwareConfig::vck5000();
-    let labs: [(&'static str, bool, &'static str, usize, bool); 5] = [
+    let labs: Vec<(&'static str, bool, &'static str, usize, bool)> = vec![
         ("Lab 1", false, "N/A", 1, false),
         ("Lab 2", false, "Pipeline Parallel", 1, true),
         ("Lab 3", true, "N/A", 4, false),
         ("Lab 4", false, "Pipeline Parallel", 4, true),
         ("Lab 5", true, "Pipeline Parallel", 4, true),
     ];
-    let mut rows = Vec::new();
-    for (lab, indep, mode_name, p_atb, atb_pipelined) in labs {
+    try_par_map(labs, |(lab, indep, mode_name, p_atb, atb_pipelined)| {
         let opts = CustomizeOptions {
             independent_linear: Some(indep),
             p_atb: Some(p_atb),
@@ -36,15 +37,14 @@ pub fn table2_rows() -> Result<Vec<AblationRow>> {
         };
         let plan = customize(&model, &hw, &opts)?;
         let r = run_stage_opts(&plan, Stage::Mha, 8, atb_pipelined)?;
-        rows.push(AblationRow {
+        Ok(AblationRow {
             lab,
             independent_linear: indep,
             atb_parallel_mode: mode_name,
             atb_parallelism: p_atb,
             makespan_ns: r.makespan_ns,
-        });
-    }
-    Ok(rows)
+        })
+    })
 }
 
 /// The paper's three accelerators (Table IV configurations).
@@ -61,26 +61,24 @@ pub fn three_accelerators() -> Vec<(&'static str, ModelConfig, HardwareConfig)> 
 }
 
 /// EXP-T5 — Table V: the three customized plans (resource estimates live
-/// on the plans themselves).
+/// on the plans themselves), derived in parallel.
 pub fn table5_plans() -> Result<Vec<(&'static str, crate::arch::AcceleratorPlan)>> {
-    three_accelerators()
-        .into_iter()
-        .map(|(name, m, hw)| Ok((name, customize(&m, &hw, &CustomizeOptions::default())?)))
-        .collect()
+    try_par_map(three_accelerators(), |(name, m, hw)| {
+        Ok((name, customize(&m, &hw, &CustomizeOptions::default())?))
+    })
 }
 
 /// EXP-T6 — Table VI: peak performance + energy for the three
-/// accelerators (batch 16 = saturation per Fig. 5).
+/// accelerators (batch 16 = saturation per Fig. 5), simulated in
+/// parallel — they are independent design points.
 pub fn table6_rows() -> Result<Vec<PerfSummary>> {
-    let mut rows = Vec::new();
-    for (name, m, hw) in three_accelerators() {
+    try_par_map(three_accelerators(), |(name, m, hw)| {
         let plan = customize(&m, &hw, &CustomizeOptions::default())?;
         let r = run_edpu(&plan, 16)?;
         let mut s = summarize(&plan, &r);
         s.model = name.to_string();
-        rows.push(s);
-    }
-    Ok(rows)
+        Ok(s)
+    })
 }
 
 /// EXP-T7 — Table VII: CAT's measured rows plus the scheduling-style
@@ -108,20 +106,20 @@ pub fn table7_data() -> Result<Table7Data> {
     })
 }
 
-/// EXP-F5 — Figure 5: the batch sweep for one accelerator.
+/// EXP-F5 — Figure 5: the batch sweep for one accelerator.  Batch sizes
+/// are independent design points, so they simulate in parallel (§Perf).
 pub fn fig5_series(model: &ModelConfig, hw: &HardwareConfig) -> Result<Vec<BatchPoint>> {
     let plan = customize(model, hw, &CustomizeOptions::default())?;
-    let mut pts = Vec::new();
-    for batch in [1usize, 2, 4, 8, 16, 32] {
-        let r = run_edpu(&plan, batch)?;
-        pts.push(BatchPoint {
+    let plan = &plan;
+    try_par_map(vec![1usize, 2, 4, 8, 16, 32], |batch| {
+        let r = run_edpu(plan, batch)?;
+        Ok(BatchPoint {
             batch,
             mha_tops: r.mha.tops(),
             ffn_tops: r.ffn.tops(),
             sys_tops: r.tops(),
-        });
-    }
-    Ok(pts)
+        })
+    })
 }
 
 /// EXP-O1 — Observation 1: serial vs pipelined send/compute/receive on

@@ -1,0 +1,95 @@
+//! Stage-simulation memoization (§Perf).
+//!
+//! Every experiment driver, bench, multi-EDPU organizer, and coordinator
+//! worker funnels through [`run_stage_opts`](super::run_stage_opts), and
+//! most of them re-simulate *identical* stage scenarios: the same plan,
+//! stage, batch size, and ATB-pipelining toggle.  The simulator is fully
+//! deterministic, so the [`StageReport`] is a pure function of that
+//! tuple — memoizing it is semantically invisible.
+//!
+//! The key is `(plan fingerprint, stage, batch, atb_pipelined)` where the
+//! fingerprint hashes the **complete** plan (model dims, hardware timing
+//! parameters, PRG/PU allocation — see
+//! [`AcceleratorPlan::fingerprint`](crate::arch::AcceleratorPlan::fingerprint)),
+//! so two plans that differ anywhere that could affect the schedule can
+//! never collide on purpose.  Invalidation is therefore structural: a new
+//! plan hashes to a new key; the cache itself never needs flushing for
+//! correctness, only for memory (a simple clear-at-capacity bound) and
+//! for benchmarking (see [`reset_stage_cache`]).
+//!
+//! Set `CAT_SIM_CACHE=0` to disable the cache process-wide (used by the
+//! hotpath bench to time the engine itself).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::{Stage, StageReport};
+
+/// Cache key: everything that determines a stage simulation's outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct StageKey {
+    pub plan_fp: u64,
+    pub stage: Stage,
+    pub batch: usize,
+    pub atb_pipelined: bool,
+}
+
+/// Bound on retained entries; at capacity the map is cleared (simple and
+/// deterministic — the workloads that matter re-populate in one sweep).
+const MAX_ENTRIES: usize = 256;
+
+static CACHE: OnceLock<Mutex<HashMap<StageKey, StageReport>>> = OnceLock::new();
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn cache() -> &'static Mutex<HashMap<StageKey, StageReport>> {
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+pub(crate) fn enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("CAT_SIM_CACHE").map(|v| v != "0").unwrap_or(true))
+}
+
+pub(crate) fn lookup(key: &StageKey) -> Option<StageReport> {
+    if !enabled() {
+        return None;
+    }
+    let hit = cache().lock().unwrap().get(key).cloned();
+    match &hit {
+        Some(_) => HITS.fetch_add(1, Ordering::Relaxed),
+        None => MISSES.fetch_add(1, Ordering::Relaxed),
+    };
+    hit
+}
+
+pub(crate) fn insert(key: StageKey, report: &StageReport) {
+    if !enabled() {
+        return;
+    }
+    let mut map = cache().lock().unwrap();
+    if map.len() >= MAX_ENTRIES {
+        map.clear();
+    }
+    map.insert(key, report.clone());
+}
+
+/// `(hits, misses)` since process start (or the last
+/// [`reset_stage_cache`]).
+pub fn stage_cache_stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+/// Number of currently cached stage reports.
+pub fn stage_cache_len() -> usize {
+    cache().lock().unwrap().len()
+}
+
+/// Drop every cached entry and zero the hit/miss counters (benchmarks do
+/// this between iterations to time the engine rather than the cache).
+pub fn reset_stage_cache() {
+    cache().lock().unwrap().clear();
+    HITS.store(0, Ordering::Relaxed);
+    MISSES.store(0, Ordering::Relaxed);
+}

@@ -124,16 +124,18 @@ pub fn run_multi_edpu(
 
 /// Sweep EDPU counts for a fixed total budget: how many EDPUs should the
 /// HOST deploy? (the "adjusted freely according to hardware resources
-/// and acceleration requirements" knob).
+/// and acceleration requirements" knob).  The counts are independent
+/// design points, so they evaluate in parallel; the stage-sim cache
+/// dedups the many repeated per-share simulations underneath (§Perf).
 pub fn edpu_count_sweep(
     plan: &AcceleratorPlan,
     batch: usize,
     mode: MultiEdpuMode,
 ) -> Result<Vec<MultiEdpuReport>> {
     let max_n = (plan.hw.total_aie / plan.cores_deployed().max(1)).max(1);
-    (1..=max_n)
-        .map(|n| run_multi_edpu(plan, n, batch, mode))
-        .collect()
+    crate::util::par::try_par_map((1..=max_n).collect(), |n| {
+        run_multi_edpu(plan, n, batch, mode)
+    })
 }
 
 #[cfg(test)]

@@ -16,5 +16,5 @@ pub mod engine;
 pub mod power;
 pub mod scenario;
 
-pub use engine::{run, NodeStats, SimReport};
+pub use engine::{run, run_exact, run_with, EngineConfig, NodeStats, SimReport};
 pub use scenario::{EdgeSpec, NodeSpec, PortSpec, Scenario};

@@ -91,6 +91,20 @@ pub struct Scenario {
 }
 
 impl Scenario {
+    /// Pre-size the node/edge vectors (scenario builders know their shape
+    /// up front; avoids re-allocation churn on the hot build path).
+    pub fn with_capacity(nodes: usize, edges: usize) -> Scenario {
+        Scenario {
+            nodes: Vec::with_capacity(nodes),
+            edges: Vec::with_capacity(edges),
+        }
+    }
+
+    /// Total invocations across all nodes (fast-path sizing heuristics).
+    pub fn total_invocations(&self) -> usize {
+        self.nodes.iter().map(|n| n.n_inv).sum()
+    }
+
     pub fn add_edge(&mut self, e: EdgeSpec) -> usize {
         self.edges.push(e);
         self.edges.len() - 1

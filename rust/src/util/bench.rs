@@ -1,8 +1,13 @@
 //! Minimal timing harness for the `harness = false` benches (criterion is
 //! not vendored for offline builds).  Median-of-N with warmup; prints one
-//! line per benchmark in a stable, grep-able format.
+//! line per benchmark in a stable, grep-able format, and serializes to
+//! the `BENCH_*.json` trajectory format via [`Stats::to_json`] /
+//! [`write_json`] so perf regressions are machine-checkable.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Timing statistics over the measured iterations.
 #[derive(Debug, Clone, Copy)]
@@ -18,6 +23,41 @@ impl Stats {
     pub fn median_ns(&self) -> f64 {
         self.median.as_nanos() as f64
     }
+
+    /// Serialize as a `BENCH_*.json` row object.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        m.insert("median_ns".into(), Json::Num(self.median.as_nanos() as f64));
+        m.insert("mean_ns".into(), Json::Num(self.mean.as_nanos() as f64));
+        m.insert("min_ns".into(), Json::Num(self.min.as_nanos() as f64));
+        m.insert("max_ns".into(), Json::Num(self.max.as_nanos() as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Assemble the standard `BENCH_*.json` document: named rows plus free-form
+/// derived metrics (speedups, parity deviations, provenance notes).
+pub fn bench_doc(
+    bench_name: &str,
+    rows: &[(String, Stats)],
+    derived: BTreeMap<String, Json>,
+) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str("cat-bench-v1".into()));
+    root.insert("bench".into(), Json::Str(bench_name.into()));
+    let mut rowmap = BTreeMap::new();
+    for (name, s) in rows {
+        rowmap.insert(name.clone(), s.to_json());
+    }
+    root.insert("rows".into(), Json::Obj(rowmap));
+    root.insert("derived".into(), Json::Obj(derived));
+    Json::Obj(root)
+}
+
+/// Write a JSON document to disk (one line, trailing newline).
+pub fn write_json(path: &str, doc: &Json) -> std::io::Result<()> {
+    std::fs::write(path, format!("{doc}\n"))
 }
 
 /// Time `f` with `warmup` unmeasured and `iters` measured runs.
@@ -95,5 +135,22 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
         assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_doc_roundtrips() {
+        let s = time(0, 4, || {
+            black_box((0..100).sum::<u64>());
+        });
+        let mut derived = BTreeMap::new();
+        derived.insert("speedup".to_string(), Json::Num(5.5));
+        let doc = bench_doc("hotpath", &[("sim/x".to_string(), s)], derived);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("cat-bench-v1"));
+        assert_eq!(
+            parsed.path(&["rows", "sim/x", "iters"]).unwrap().as_usize(),
+            Some(4)
+        );
+        assert_eq!(parsed.path(&["derived", "speedup"]).unwrap().as_f64(), Some(5.5));
     }
 }

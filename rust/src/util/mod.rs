@@ -5,5 +5,6 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod table;

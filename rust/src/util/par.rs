@@ -1,0 +1,139 @@
+//! Minimal data-parallel map over scoped threads (rayon is not vendored
+//! for offline builds).
+//!
+//! [`par_map`] fans a work list out over `min(len, parallelism)` scoped
+//! worker threads with an atomic work-stealing cursor, preserving input
+//! order in the output.  Design points:
+//!
+//! * results land in per-slot mutexes, each touched exactly once — no
+//!   `unsafe`, no result reordering, no contention on the hot path;
+//! * a panic inside `f` propagates out of the scope (so test assertions
+//!   behave exactly as they would serially);
+//! * `CAT_THREADS=<n>` caps the pool (set `CAT_THREADS=1` to force serial
+//!   execution, e.g. when profiling a single design point).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+// OnceLock is only used for the process-wide thread budget; result slots
+// use Mutex so `par_map` needs no `Sync` bound on outputs.
+
+/// Worker-thread budget: `CAT_THREADS` if set, else the machine's
+/// available parallelism.
+pub fn thread_budget() -> usize {
+    static BUDGET: OnceLock<usize> = OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        if let Ok(v) = std::env::var("CAT_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Apply `f` to every item, possibly in parallel, preserving order.
+pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    let workers = thread_budget().min(n);
+    if n <= 1 || workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Items move into worker threads one at a time through per-slot
+    // mutexes; each slot is touched exactly once (the cursor hands out
+    // unique indices), so the locks are uncontended.  Mutex rather than
+    // OnceLock for the results too: `Mutex<T>: Sync` needs only
+    // `T: Send`, which keeps the bounds minimal.
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("slot taken twice");
+                let r = f(item);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|cell| {
+            cell.into_inner()
+                .expect("result mutex poisoned")
+                .expect("worker left a slot empty")
+        })
+        .collect()
+}
+
+/// [`par_map`] over a fallible `f`: stops delivering the first `Err` in
+/// input order (all items still run; short-circuiting across threads is
+/// not worth the coordination for our list sizes).
+pub fn try_par_map<T, U, E, F>(items: Vec<T>, f: F) -> Result<Vec<U>, E>
+where
+    T: Send,
+    U: Send,
+    E: Send,
+    F: Fn(T) -> Result<U, E> + Sync,
+{
+    par_map(items, f).into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let v: Vec<usize> = (0..257).collect();
+        let out = par_map(v, |x| x * 2);
+        assert_eq!(out.len(), 257);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(par_map(vec![41], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn moves_non_clone_items() {
+        struct NoClone(String);
+        let items = vec![NoClone("a".into()), NoClone("b".into())];
+        let out = par_map(items, |x| x.0);
+        assert_eq!(out, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn try_variant_surfaces_first_error() {
+        let r: Result<Vec<u32>, String> = try_par_map((0..16).collect(), |x| {
+            if x == 5 {
+                Err(format!("bad {x}"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert_eq!(r.unwrap_err(), "bad 5");
+    }
+
+    #[test]
+    fn actually_runs_on_many_threads_without_loss() {
+        // 1000 trivial items: whatever the scheduling, every result lands.
+        let out = par_map((0..1000).collect::<Vec<u64>>(), |x| x);
+        let sum: u64 = out.iter().sum();
+        assert_eq!(sum, 999 * 1000 / 2);
+    }
+}

@@ -6,7 +6,7 @@ use cat::config::{HardwareConfig, ModelConfig};
 use cat::customize::{customize, eq3_mmsz, CustomizeOptions};
 use cat::sched::{run_edpu, run_stage, Stage};
 use cat::sim::scenario::{EdgeSpec, NodeSpec, PortSpec, PuTiming, Scenario};
-use cat::util::check::property;
+use cat::util::check::{close, property};
 use cat::util::prng::Prng;
 use cat::workload::layer_workload;
 
@@ -222,6 +222,138 @@ fn stage_ops_conserved_across_modes() {
             .map_err(|e| e.to_string())?;
         if ops.windows(2).any(|w| w[0] != w[1]) {
             return Err(format!("{ops:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Fast-vs-exact parity on randomized edge-less nodes: the isolated-node
+/// analytic schedule must reproduce the event-driven reference bit for
+/// bit on makespan (both are integer picoseconds underneath) and to
+/// float-accumulation noise on busy time.
+#[test]
+fn sim_isolated_fast_path_matches_exact() {
+    property("sim/fast_vs_exact_isolated", 40, |rng| {
+        let p = rng.range(1, 5);
+        let uniform = rng.bool();
+        let mk = |rng: &mut Prng| PuTiming {
+            t_send_ns: rng.range(0, 4) as f64 * 0.5,
+            t_calc_ns: rng.range(1, 12) as f64,
+            t_recv_ns: rng.range(0, 4) as f64 * 0.5,
+        };
+        let base = mk(rng);
+        let pus: Vec<PuTiming> =
+            (0..p).map(|_| if uniform { base } else { mk(rng) }).collect();
+        let mut sc = Scenario::default();
+        sc.add_node(NodeSpec {
+            name: "solo".into(),
+            pus,
+            pipelined: rng.bool(),
+            n_inv: rng.range(1, 3000),
+            cores: 1,
+            inputs: vec![],
+            outputs: vec![],
+        });
+        let fast = cat::sim::run(&sc).map_err(|e| format!("fast: {e}"))?;
+        let exact = cat::sim::run_exact(&sc).map_err(|e| format!("exact: {e}"))?;
+        if fast.makespan_ns != exact.makespan_ns {
+            return Err(format!(
+                "makespan {} != exact {}",
+                fast.makespan_ns, exact.makespan_ns
+            ));
+        }
+        if fast.fast_forwarded != sc.nodes[0].n_inv as u64 {
+            return Err(format!(
+                "isolated fast path did not engage: ff {}",
+                fast.fast_forwarded
+            ));
+        }
+        let (f, x) = (&fast.nodes[0], &exact.nodes[0]);
+        close(f.busy_ns, x.busy_ns, 1e-9)?;
+        if f.finish_ns != x.finish_ns {
+            return Err(format!("finish {} != {}", f.finish_ns, x.finish_ns));
+        }
+        if f.first_start_ns != x.first_start_ns {
+            return Err(format!("first_start {} != {}", f.first_start_ns, x.first_start_ns));
+        }
+        Ok(())
+    });
+}
+
+/// Fast-vs-exact parity on randomized pipelines, including tight buffers
+/// (binding backpressure), PL latency, and finite-bandwidth edges — the
+/// regimes the steady-state cycle fast-forward must survive.  The
+/// acceptance tolerance for the fast path is 0.1% on makespan; the
+/// implementation is exact by construction, so we assert far tighter,
+/// plus identical `bytes_moved` and per-node invocation counts.
+#[test]
+fn sim_fast_path_matches_exact_des() {
+    property("sim/fast_vs_exact_chains", 18, |rng| {
+        let n_nodes = rng.range(2, 4);
+        let mut sc = Scenario::default();
+        let mut prev: Option<(usize, usize)> = None;
+        for i in 0..n_nodes {
+            let n_inv = rng.range(300, 1200);
+            let t = PuTiming {
+                t_send_ns: rng.range(0, 3) as f64,
+                t_calc_ns: rng.range(1, 9) as f64,
+                t_recv_ns: rng.range(0, 3) as f64,
+            };
+            let node = sc.add_node(NodeSpec {
+                name: format!("n{i}"),
+                pus: vec![t; rng.range(1, 3)],
+                pipelined: rng.bool(),
+                n_inv,
+                cores: 1,
+                inputs: vec![],
+                outputs: vec![],
+            });
+            if let Some((p, p_inv)) = prev {
+                let unit = rng.range(1, 16) as u64;
+                let total = unit * p_inv as u64 * n_inv as u64;
+                let prod_grain = total / p_inv as u64;
+                let cons_grain = total / n_inv as u64;
+                // capacity >= prod + cons grains is the deadlock-freedom
+                // floor (residue argument in sched::connect); small
+                // multiples keep backpressure binding, large ones leave
+                // the producer free-running.
+                let cap = (prod_grain + cons_grain) * rng.range(1, 5) as u64;
+                let edge = if rng.bool() {
+                    EdgeSpec::wire(cap)
+                } else {
+                    EdgeSpec {
+                        capacity_bytes: cap,
+                        latency_ns: rng.range(0, 20) as f64,
+                        bw_bytes_per_ns: if rng.bool() {
+                            f64::INFINITY
+                        } else {
+                            rng.range(1, 50) as f64
+                        },
+                    }
+                };
+                let e = sc.add_edge(edge);
+                sc.nodes[p].outputs.push(PortSpec { edge: e, bytes_per_inv: prod_grain });
+                sc.nodes[node].inputs.push(PortSpec { edge: e, bytes_per_inv: cons_grain });
+            }
+            prev = Some((node, n_inv));
+        }
+        let fast = cat::sim::run(&sc).map_err(|e| format!("fast: {e}"))?;
+        let exact = cat::sim::run_exact(&sc).map_err(|e| format!("exact: {e}"))?;
+        close(fast.makespan_ns, exact.makespan_ns, 1e-9)
+            .map_err(|e| format!("makespan: {e}"))?;
+        if fast.bytes_moved != exact.bytes_moved {
+            return Err(format!(
+                "bytes_moved {} != exact {}",
+                fast.bytes_moved, exact.bytes_moved
+            ));
+        }
+        for (f, x) in fast.nodes.iter().zip(&exact.nodes) {
+            if f.n_inv != x.n_inv {
+                return Err(format!("{}: n_inv {} != {}", f.name, f.n_inv, x.n_inv));
+            }
+            close(f.busy_ns, x.busy_ns, 1e-6).map_err(|e| format!("{} busy: {e}", f.name))?;
+            close(f.finish_ns, x.finish_ns, 1e-9)
+                .map_err(|e| format!("{} finish: {e}", f.name))?;
         }
         Ok(())
     });

@@ -1,0 +1,62 @@
+//! Integration: the scheduler's stage-simulation cache.
+//!
+//! `run_edpu` called twice with the same plan/batch must hit the
+//! [`StageSimCache`](cat::sched::cache) on the second call — one hit per
+//! stage — and the cached report must be indistinguishable from a fresh
+//! simulation (the engine is deterministic).  Kept to a single `#[test]`
+//! because the hit/miss counters are process-global and the libtest
+//! harness runs sibling tests concurrently.
+
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::customize::{customize, CustomizeOptions};
+use cat::sched::{reset_stage_cache, run_edpu, stage_cache_len, stage_cache_stats};
+
+#[test]
+fn run_edpu_memoizes_stage_simulations() {
+    if std::env::var("CAT_SIM_CACHE").as_deref() == Ok("0") {
+        eprintln!("skipping: CAT_SIM_CACHE=0");
+        return;
+    }
+    let plan = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000(),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+
+    reset_stage_cache();
+    let first = run_edpu(&plan, 4).unwrap();
+    let (h0, m0) = stage_cache_stats();
+    assert_eq!(h0, 0, "cold cache cannot hit");
+    assert_eq!(m0, 2, "MHA + FFN should each miss once");
+    assert_eq!(stage_cache_len(), 2);
+
+    let second = run_edpu(&plan, 4).unwrap();
+    let (h1, m1) = stage_cache_stats();
+    assert_eq!(h1, 2, "repeat run must hit once per stage");
+    assert_eq!(m1, 2, "repeat run must not miss");
+
+    // cached report == fresh report, bit for bit where it matters
+    assert_eq!(first.makespan_ns(), second.makespan_ns());
+    assert_eq!(first.ops(), second.ops());
+    assert_eq!(first.mha.sim.events, second.mha.sim.events);
+    assert_eq!(first.ffn.sim.bytes_moved, second.ffn.sim.bytes_moved);
+
+    // a different batch is a different key
+    let _ = run_edpu(&plan, 8).unwrap();
+    let (h2, m2) = stage_cache_stats();
+    assert_eq!(h2, 2);
+    assert_eq!(m2, 4);
+
+    // a different plan is a different fingerprint, even at equal batch
+    let limited = customize(
+        &ModelConfig::bert_base(),
+        &HardwareConfig::vck5000_limited(64),
+        &CustomizeOptions::default(),
+    )
+    .unwrap();
+    let _ = run_edpu(&limited, 4).unwrap();
+    let (h3, m3) = stage_cache_stats();
+    assert_eq!(h3, 2, "limited-AIE plan must not hit the full plan's entries");
+    assert_eq!(m3, 6);
+}

@@ -1,0 +1,304 @@
+//! In-memory stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links `libxla_extension.so`, which cannot be vendored
+//! for offline builds.  This stub keeps the **host-side** pieces fully
+//! functional — [`Literal`] construction, shape queries, and typed
+//! readback, which the tensor round-trip tests exercise — while every
+//! PJRT entry point ([`PjRtClient::cpu`], compilation, execution) returns
+//! a descriptive error.  All call sites that need a live PJRT runtime are
+//! gated on the presence of an `artifacts/` directory and skip cleanly,
+//! so `cargo test` passes with this stub and upgrades transparently when
+//! the real bindings are swapped back in.
+
+use std::fmt;
+
+/// Error type matching the surface the codebase uses (`Display` only).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_runtime<T>() -> Result<T> {
+    Err(Error(
+        "vendored `xla` stub has no PJRT runtime (rebuild against real \
+         xla-rs and run `make artifacts` to enable the PJRT path)"
+            .to_string(),
+    ))
+}
+
+/// XLA element types (subset + padding so downstream `other =>` match arms
+/// stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A shape is either an array or a tuple of shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Element types readable out of a [`Literal`] via [`Literal::to_vec`].
+pub trait NativeType: Sized {
+    const TY: ElementType;
+    const SIZE: usize;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+    const SIZE: usize = 1;
+    fn from_le(bytes: &[u8]) -> Self {
+        bytes[0] as i8
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    const SIZE: usize = 4;
+    fn from_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    const SIZE: usize = 4;
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+    const SIZE: usize = 8;
+    fn from_le(bytes: &[u8]) -> Self {
+        i64::from_le_bytes(bytes[..8].try_into().unwrap())
+    }
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+    const SIZE: usize = 8;
+    fn from_le(bytes: &[u8]) -> Self {
+        f64::from_le_bytes(bytes[..8].try_into().unwrap())
+    }
+}
+
+/// A host literal: untyped bytes plus shape metadata (or a tuple).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.byte_size() {
+            return Err(Error(format!(
+                "literal data length {} does not match shape {:?} of {:?} ({} bytes expected)",
+                data.len(),
+                dims,
+                ty,
+                n * ty.byte_size()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|d| *d as i64).collect(),
+            bytes: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::Pred, dims: vec![], bytes: vec![], tuple: Some(parts) }
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        match &self.tuple {
+            Some(parts) => Ok(Shape::Tuple(
+                parts
+                    .iter()
+                    .map(|p| p.shape())
+                    .collect::<Result<Vec<_>>>()?,
+            )),
+            None => Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty: self.ty })),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on a tuple literal".to_string()));
+        }
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "to_vec element type mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self.bytes.chunks_exact(T::SIZE).map(T::from_le).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(parts) => Ok(parts.clone()),
+            None => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (opaque; parsing requires the real bindings).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        no_runtime()
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client stub — construction fails with a descriptive error.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        no_runtime()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        no_runtime()
+    }
+}
+
+/// Compiled executable stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_runtime()
+    }
+}
+
+/// Device buffer stub.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_runtime()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<u8> = [1.0f32, -2.5, 0.0, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &data).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 0.0, 3.25]);
+        match lit.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[2, 2]);
+                assert_eq!(a.ty(), ElementType::F32);
+            }
+            other => panic!("unexpected shape {other:?}"),
+        }
+    }
+
+    #[test]
+    fn literal_rejects_bad_length() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[3], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::S8, &[2], &[1, 2]).unwrap();
+        let t = Literal::tuple(vec![a.clone()]);
+        assert_eq!(t.to_tuple().unwrap(), vec![a]);
+        assert!(t.to_vec::<i8>().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
