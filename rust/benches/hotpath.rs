@@ -22,7 +22,8 @@ use std::collections::BTreeMap;
 
 use cat::config::{HardwareConfig, ModelConfig};
 use cat::customize::{customize, CustomizeOptions};
-use cat::sched::{build_mha_pipelined, reset_stage_cache, run_edpu, run_stage, Stage};
+use cat::dse::{ExploreConfig, SpaceSpec};
+use cat::sched::{build_mha_pipelined, reset_stage_cache, run_edpu, run_stage, MultiEdpuMode, Stage};
 use cat::sim;
 use cat::util::bench::{bench, bench_doc, black_box, write_json, Stats};
 use cat::util::cli;
@@ -119,6 +120,38 @@ fn main() {
         black_box(run_edpu(&plan, 16).unwrap());
     });
 
+    // --- dse row: a compact exhaustive exploration (enumerate -> prune
+    //     -> simulate -> frontier), cache reset inside the closure so
+    //     every iteration pays the real design-point simulations ---
+    let mut dse_cfg = ExploreConfig::new(model.clone(), hw.clone());
+    dse_cfg.sample_budget = None;
+    dse_cfg.space = SpaceSpec {
+        independent_linear: vec![true],
+        mha_modes: vec![None],
+        ffn_modes: vec![None],
+        p_atb: vec![4],
+        batches: vec![4],
+        edpu_budgets: vec![400, 100, 64],
+        deployments: vec![
+            (1, MultiEdpuMode::Parallel),
+            (2, MultiEdpuMode::Parallel),
+            (3, MultiEdpuMode::Parallel),
+        ],
+    };
+    let mut dse_points = 0usize;
+    let dse_med = run_row("dse/explore_9pt_space", 1, 5, &mut || {
+        reset_stage_cache();
+        let r = cat::dse::explore(&dse_cfg).unwrap();
+        dse_points = r.stats.evaluated;
+        black_box(r);
+    })
+    .median_ns();
+    let dse_points_per_sec = dse_points as f64 / (dse_med / 1e9).max(1e-12);
+    println!(
+        "\n  dse: {dse_points} design points evaluated per pass \
+         ({dse_points_per_sec:.1} points/s cold-cache)"
+    );
+
     // PJRT hot path (needs artifacts)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         use cat::coordinator::synthetic_request;
@@ -157,6 +190,11 @@ fn main() {
             "fast_forwarded_mha_batch64".to_string(),
             Json::Num(fast.fast_forwarded as f64),
         );
+        derived.insert(
+            "dse_points_per_sec".to_string(),
+            Json::Num((dse_points_per_sec * 10.0).round() / 10.0),
+        );
+        derived.insert("dse_points_evaluated".to_string(), Json::Num(dse_points as f64));
         derived.insert("smoke".to_string(), Json::Bool(smoke));
         derived.insert(
             "regenerate".to_string(),

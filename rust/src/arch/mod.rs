@@ -229,6 +229,17 @@ impl PlResources {
         }
     }
 
+    /// Resources for `n` independent replicas (multi-EDPU deployment:
+    /// each EDPU instance carries its own movers, operators and buffers).
+    pub fn scale(&self, n: usize) -> PlResources {
+        PlResources {
+            luts: self.luts * n,
+            ffs: self.ffs * n,
+            brams: self.brams * n,
+            urams: self.urams * n,
+        }
+    }
+
     /// Shared-resource union (two stages sharing hardware: the overall
     /// consumption is less than the sum — paper Table V discussion).
     pub fn union_shared(&self, o: &PlResources, shared_fraction: f64) -> PlResources {
@@ -420,6 +431,15 @@ mod tests {
         // 64x64x256: A 64x256 + B 256x64 = 32 KiB in, 64x64x4 = 16 KiB out
         assert_eq!(small.in_bytes(64), 32 * 1024);
         assert_eq!(small.out_bytes(64), 16 * 1024);
+    }
+
+    #[test]
+    fn scale_replicates_every_pool() {
+        let a = PlResources { luts: 100, ffs: 200, brams: 10, urams: 4 };
+        let s = a.scale(3);
+        assert_eq!((s.luts, s.ffs, s.brams, s.urams), (300, 600, 30, 12));
+        let id = a.scale(1);
+        assert_eq!(id, a);
     }
 
     #[test]

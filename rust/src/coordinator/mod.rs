@@ -55,6 +55,9 @@ pub struct Response {
 pub struct ServeStats {
     pub completed: usize,
     pub batches: usize,
+    /// Completed-request latencies, **sorted ascending** — sorted once at
+    /// snapshot time ([`Host::drain`]) so [`ServeStats::percentile`] can
+    /// index directly instead of cloning and re-sorting per call.
     pub latencies: Vec<Duration>,
     pub wall: Duration,
 }
@@ -67,14 +70,28 @@ impl ServeStats {
         self.completed as f64 / self.wall.as_secs_f64()
     }
 
+    /// Latency percentile with linear interpolation between adjacent
+    /// ranks; `p` is clamped to `[0, 1]`.  `latencies` is sorted at
+    /// snapshot time, so this is a pure index (no clone, no sort).
     pub fn percentile(&self, p: f64) -> Duration {
+        debug_assert!(
+            self.latencies.windows(2).all(|w| w[0] <= w[1]),
+            "ServeStats.latencies must be sorted"
+        );
         if self.latencies.is_empty() {
             return Duration::ZERO;
         }
-        let mut v = self.latencies.clone();
-        v.sort();
-        let idx = ((v.len() - 1) as f64 * p).round() as usize;
-        v[idx]
+        let v = &self.latencies;
+        let pos = (v.len() - 1) as f64 * p.clamp(0.0, 1.0);
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            return v[lo];
+        }
+        let frac = pos - lo as f64;
+        let a = v[lo].as_nanos() as f64;
+        let b = v[hi].as_nanos() as f64;
+        Duration::from_nanos((a + (b - a) * frac).round() as u64)
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -281,7 +298,12 @@ impl Host {
                 },
             )
             .len(),
-            latencies: out.iter().map(|r| r.latency).collect(),
+            latencies: {
+                // sorted once here so every percentile() call is O(1)
+                let mut v: Vec<Duration> = out.iter().map(|r| r.latency).collect();
+                v.sort_unstable();
+                v
+            },
             wall: self.started.elapsed(),
         };
         let errs = self.shared.errors.lock().unwrap();
@@ -404,6 +426,43 @@ mod tests {
         assert_eq!(stats.percentile(1.0), Duration::from_millis(100));
         assert_eq!(stats.throughput_rps(), 4.0);
         assert_eq!(stats.mean_batch(), 2.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases_and_interpolation() {
+        let with = |lat: Vec<Duration>| ServeStats {
+            completed: lat.len(),
+            batches: 1,
+            latencies: lat,
+            wall: Duration::from_secs(1),
+        };
+        // empty: every percentile is zero
+        let empty = with(vec![]);
+        for p in [0.0, 0.5, 1.0] {
+            assert_eq!(empty.percentile(p), Duration::ZERO);
+        }
+        // one element: every percentile is that element, and out-of-range
+        // p clamps instead of indexing out of bounds
+        let one = with(vec![Duration::from_millis(7)]);
+        for p in [-0.5, 0.0, 0.37, 1.0, 2.0] {
+            assert_eq!(one.percentile(p), Duration::from_millis(7));
+        }
+        // interpolation edge: p50 of [0ms, 10ms] sits exactly between
+        let two = with(vec![Duration::ZERO, Duration::from_millis(10)]);
+        assert_eq!(two.percentile(0.5), Duration::from_millis(5));
+        assert_eq!(two.percentile(0.25), Duration::from_micros(2500));
+        assert_eq!(two.percentile(0.0), Duration::ZERO);
+        assert_eq!(two.percentile(1.0), Duration::from_millis(10));
+        // exact-rank positions need no interpolation
+        let three = with(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(9),
+        ]);
+        assert_eq!(three.percentile(0.5), Duration::from_millis(2));
+        // and an interpolated rank between the 2nd and 3rd samples:
+        // pos = 2 * 0.75 = 1.5 -> (2 + 9) / 2 = 5.5 ms
+        assert_eq!(three.percentile(0.75), Duration::from_micros(5500));
     }
 
     #[test]

@@ -15,6 +15,52 @@ use crate::config::{HardwareConfig, ModelConfig};
 use crate::workload::{layer_workload, MmSite};
 use anyhow::{anyhow, Result};
 
+/// Enumeration-friendly domains of the customizable attributes for one
+/// model/board pair — what the [`dse`](crate::dse) subsystem sweeps.
+///
+/// A `None` entry in a mode domain means "let Eq. 5/6 decide"; the forced
+/// entries explore the Table II-style overrides.  `p_atb` covers every
+/// divisor of the head count (the shapes a head-partitioned ATB array can
+/// take) plus the Eq. 7/8-derived value, so the plan `customize` would
+/// pick on its own is always a point of the enumerated space.
+#[derive(Debug, Clone)]
+pub struct KnobDomains {
+    pub independent_linear: Vec<bool>,
+    pub mha_modes: Vec<Option<ParallelMode>>,
+    pub ffn_modes: Vec<Option<ParallelMode>>,
+    pub p_atb: Vec<usize>,
+}
+
+/// The joint customization domains for `model` on `hw` (see [`KnobDomains`]).
+pub fn knob_domains(model: &ModelConfig, hw: &HardwareConfig) -> KnobDomains {
+    let mut p_atb: Vec<usize> = (1..=model.heads)
+        .filter(|p| model.heads % p == 0)
+        .collect();
+    let bytes = model.bytes_per_elem();
+    let mmsz = eq3_mmsz(hw, bytes);
+    let plio = eq4_plio_aie(hw, mmsz, bytes);
+    let derived = derived_p_atb(model, hw, mmsz, plio);
+    if !p_atb.contains(&derived) {
+        p_atb.push(derived);
+        p_atb.sort_unstable();
+    }
+    KnobDomains {
+        independent_linear: vec![true, false],
+        mha_modes: vec![
+            None,
+            Some(ParallelMode::FullyPipelined),
+            Some(ParallelMode::SerialHybrid),
+            Some(ParallelMode::Serial),
+        ],
+        ffn_modes: vec![
+            None,
+            Some(ParallelMode::FullyPipelined),
+            Some(ParallelMode::Serial),
+        ],
+        p_atb,
+    }
+}
+
 /// Ablation / override knobs (Table II toggles these; normal use leaves
 /// everything `None` and lets Eq. 3–8 decide).
 #[derive(Debug, Clone, Copy, Default)]
@@ -138,6 +184,21 @@ pub fn eq7_p_atb(model: &ModelConfig, mmsz: usize, plio: usize) -> Option<usize>
     }
 }
 
+/// The `P_ATB` value the strategy derives when none is forced: Eq. 7's
+/// integer head-ratio, falling back to Eq. 8's throughput ratio, clamped
+/// to the head count.  Shared by [`customize`] and [`knob_domains`] so
+/// the derived plan is always a point of the enumerated space.
+pub fn derived_p_atb(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    mmsz: usize,
+    plio: usize,
+) -> usize {
+    eq7_p_atb(model, mmsz, plio)
+        .unwrap_or_else(|| eq8_p_atb(model, hw, mmsz, plio))
+        .clamp(1, model.heads)
+}
+
 /// Eq. 8 fallback: throughput ratio.
 pub fn eq8_p_atb(model: &ModelConfig, hw: &HardwareConfig, mmsz: usize, plio: usize) -> usize {
     // QKV LB throughput on one Large PU vs one ATB chain's throughput on
@@ -247,11 +308,10 @@ pub fn customize(
     let independent_linear = opts.independent_linear.unwrap_or(true);
 
     // --- Eq. 7 / Eq. 8: ATB parallelism ---
-    let p_atb_unclamped = opts
-        .p_atb
-        .or_else(|| eq7_p_atb(model, mmsz, plio))
-        .unwrap_or_else(|| eq8_p_atb(model, hw, mmsz, plio));
-    let p_atb = p_atb_unclamped.clamp(1, model.heads);
+    let p_atb = match opts.p_atb {
+        Some(p) => p.clamp(1, model.heads),
+        None => derived_p_atb(model, hw, mmsz, plio),
+    };
 
     // --- Eq. 5 / Eq. 6: parallel modes ---
     let f1_mha = factor1_mha(model, hw, mmsz, plio);
@@ -483,6 +543,23 @@ mod tests {
         assert!(!plan.independent_linear);
         assert_eq!(plan.p_atb, 1);
         assert_eq!(plan.mha.mode, ParallelMode::SerialHybrid);
+    }
+
+    #[test]
+    fn knob_domains_cover_the_derived_plan() {
+        let d = knob_domains(&bert(), &vck());
+        // head divisors of 12 (the Eq. 7 value 4 is one of them)
+        assert_eq!(d.p_atb, vec![1, 2, 3, 4, 6, 12]);
+        assert!(d.independent_linear.contains(&true));
+        assert!(d.mha_modes.contains(&None));
+        assert!(d.ffn_modes.contains(&None));
+        // a model whose Eq. 8 fallback is not a head divisor still appears
+        let mut m = bert();
+        m.heads = 11;
+        m.embed_dim = 704; // head_dim 64
+        let d2 = knob_domains(&m, &vck());
+        assert!(d2.p_atb.contains(&4), "{:?}", d2.p_atb); // 256/64 via Eq. 7
+        assert!(d2.p_atb.windows(2).all(|w| w[0] < w[1]));
     }
 
     #[test]

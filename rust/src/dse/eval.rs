@@ -1,0 +1,168 @@
+//! Candidate evaluation: simulate one pruned survivor end to end and
+//! reduce it to the multi-objective vector the frontier is selected on.
+//!
+//! Every candidate — including single-EDPU ones — goes through
+//! [`run_multi_edpu`](crate::sched::run_multi_edpu) so throughput and
+//! latency are whole-model (all encoder layers) and comparable across
+//! deployment shapes.  Power comes from the calibrated
+//! [`sim::power`](crate::sim::power) model via
+//! [`metrics::multi_edpu_power_w`](crate::metrics::multi_edpu_power_w).
+
+use std::collections::BTreeMap;
+
+use super::space::Candidate;
+use crate::arch::{AcceleratorPlan, ParallelMode};
+use crate::metrics::multi_edpu_power_w;
+use crate::sched::run_multi_edpu;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// One evaluated design point: the candidate, the plan summary, and the
+/// measured (simulated) metrics.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub cand: Candidate,
+    // -- derived plan summary --
+    pub mmsz: usize,
+    pub plio_aie: usize,
+    pub independent_linear: bool,
+    pub p_atb: usize,
+    pub mha_mode: ParallelMode,
+    pub ffn_mode: ParallelMode,
+    pub cores_per_edpu: usize,
+    /// AIE cores across all EDPU instances.
+    pub total_cores: usize,
+    /// PL resources across all EDPU instances (Table V estimate).
+    pub pl_luts: usize,
+    pub pl_brams: usize,
+    pub pl_urams: usize,
+    // -- simulated metrics --
+    pub tops: f64,
+    /// Per-item end-to-end latency, whole model (ms).
+    pub latency_ms: f64,
+    pub gops_per_aie: f64,
+    pub power_w: f64,
+    pub gops_per_w: f64,
+}
+
+impl DesignPoint {
+    /// Maximize-all objective vector for the Pareto selection:
+    /// `(TOPS, −latency_ms, GOPS/W, −AIE cores, −PL LUTs)`.
+    pub fn objectives(&self) -> [f64; 5] {
+        [
+            self.tops,
+            -self.latency_ms,
+            self.gops_per_w,
+            -(self.total_cores as f64),
+            -(self.pl_luts as f64),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mode = |m: Option<ParallelMode>| match m {
+            None => Json::Str("auto".into()),
+            Some(m) => Json::Str(m.to_string()),
+        };
+        let mut m = BTreeMap::new();
+        m.insert("index".into(), Json::Num(self.cand.index as f64));
+        m.insert("independent_linear".into(), Json::Bool(self.independent_linear));
+        m.insert("forced_mha_mode".into(), mode(self.cand.opts.force_mha_mode));
+        m.insert("forced_ffn_mode".into(), mode(self.cand.opts.force_ffn_mode));
+        m.insert("mha_mode".into(), Json::Str(self.mha_mode.to_string()));
+        m.insert("ffn_mode".into(), Json::Str(self.ffn_mode.to_string()));
+        m.insert("p_atb".into(), Json::Num(self.p_atb as f64));
+        m.insert("batch".into(), Json::Num(self.cand.batch as f64));
+        m.insert("edpu_budget".into(), Json::Num(self.cand.edpu_budget as f64));
+        m.insert("n_edpu".into(), Json::Num(self.cand.n_edpu as f64));
+        m.insert(
+            "multi_mode".into(),
+            Json::Str(format!("{:?}", self.cand.multi_mode).to_lowercase()),
+        );
+        m.insert("mmsz".into(), Json::Num(self.mmsz as f64));
+        m.insert("plio_aie".into(), Json::Num(self.plio_aie as f64));
+        m.insert("cores_per_edpu".into(), Json::Num(self.cores_per_edpu as f64));
+        m.insert("total_cores".into(), Json::Num(self.total_cores as f64));
+        m.insert("pl_luts".into(), Json::Num(self.pl_luts as f64));
+        m.insert("pl_brams".into(), Json::Num(self.pl_brams as f64));
+        m.insert("pl_urams".into(), Json::Num(self.pl_urams as f64));
+        m.insert("tops".into(), Json::Num(self.tops));
+        m.insert("latency_ms".into(), Json::Num(self.latency_ms));
+        m.insert("gops_per_aie".into(), Json::Num(self.gops_per_aie));
+        m.insert("power_w".into(), Json::Num(self.power_w));
+        m.insert("gops_per_w".into(), Json::Num(self.gops_per_w));
+        Json::Obj(m)
+    }
+}
+
+/// Simulate one pruned survivor.  `plan.hw` must already be the
+/// deployment board (the caller swaps it in after customizing against
+/// the per-EDPU budget), so the multi-EDPU budget check and the power
+/// model both see the real part.
+pub fn evaluate(plan: &AcceleratorPlan, cand: &Candidate) -> Result<DesignPoint> {
+    let r = run_multi_edpu(plan, cand.n_edpu, cand.batch, cand.multi_mode)?;
+    let power_w = multi_edpu_power_w(plan, &r);
+    let total_cores = cand.n_edpu * plan.cores_deployed();
+    let pl = plan.res_overall.scale(cand.n_edpu);
+    let gops = r.ops as f64 / r.makespan_ns; // ops/ns == GOPS
+    Ok(DesignPoint {
+        cand: *cand,
+        mmsz: plan.mmsz,
+        plio_aie: plan.plio_aie,
+        independent_linear: plan.independent_linear,
+        p_atb: plan.p_atb,
+        mha_mode: plan.mha.mode,
+        ffn_mode: plan.ffn.mode,
+        cores_per_edpu: plan.cores_deployed(),
+        total_cores,
+        pl_luts: pl.luts,
+        pl_brams: pl.brams,
+        pl_urams: pl.urams,
+        tops: r.tops(),
+        latency_ms: r.latency_ns / 1e6,
+        gops_per_aie: gops / total_cores.max(1) as f64,
+        power_w,
+        gops_per_w: gops / power_w,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+    use crate::customize::{customize, CustomizeOptions};
+    use crate::sched::MultiEdpuMode;
+
+    #[test]
+    fn evaluate_matches_the_underlying_multi_edpu_run() {
+        let plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000(),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        let cand = Candidate {
+            index: 0,
+            opts: CustomizeOptions::default(),
+            batch: 8,
+            edpu_budget: 400,
+            n_edpu: 1,
+            multi_mode: MultiEdpuMode::Parallel,
+        };
+        let p = evaluate(&plan, &cand).unwrap();
+        let r = run_multi_edpu(&plan, 1, 8, MultiEdpuMode::Parallel).unwrap();
+        assert!((p.tops - r.tops()).abs() < 1e-12);
+        assert!((p.latency_ms - r.latency_ns / 1e6).abs() < 1e-12);
+        assert_eq!(p.total_cores, plan.cores_deployed());
+        assert_eq!(p.pl_luts, plan.res_overall.luts);
+        assert!(p.power_w > 0.0 && p.gops_per_w > 0.0);
+        // objective vector orientation: better TOPS -> larger objective,
+        // more cores -> smaller objective
+        let o = p.objectives();
+        assert_eq!(o[0], p.tops);
+        assert_eq!(o[3], -(p.total_cores as f64));
+        // JSON carries the headline numbers
+        let j = p.to_json();
+        assert_eq!(j.get("total_cores").unwrap().as_usize(), Some(352));
+        assert!(j.get("tops").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

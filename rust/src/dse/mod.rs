@@ -1,0 +1,244 @@
+//! Design-space exploration (the `cat explore` subsystem).
+//!
+//! The paper's central claim is that CAT *derives a customized
+//! accelerator family* by letting "the underlying hardware and the upper
+//! model jointly constrain and decide" the customizable attributes.  This
+//! module makes that derivation systematic instead of hand-picked:
+//!
+//! 1. **Enumerate** ([`space`]) the joint space — the §IV knobs
+//!    (`independent_linear` × MHA/FFN [`ParallelMode`](crate::arch::ParallelMode)
+//!    × `P_ATB`) × batch × per-EDPU AIE budget × HOST deployment
+//!    (`n_edpu` × [`MultiEdpuMode`](crate::sched::MultiEdpuMode)) — as a
+//!    mixed-radix indexed iterator, with a deterministic seeded sampler
+//!    for spaces too large to sweep exhaustively.
+//! 2. **Prune** ([`prune`]) infeasible points against board budgets
+//!    (AIE cores, Table V PL estimate) before any simulation.
+//! 3. **Evaluate** ([`eval`]) survivors in parallel through
+//!    `customize → run_multi_edpu`, riding the stage-sim cache and
+//!    `util::par` (§Perf).
+//! 4. **Select** ([`pareto`]) the multi-objective Pareto frontier over
+//!    (TOPS, per-item latency, GOPS/W, AIE cores, PL LUTs), plus
+//!    scalarized best-under-constraint queries (max TOPS s.t. latency ≤
+//!    SLO / cores ≤ N).
+//!
+//! Results are deterministic: the sampler is seeded, the simulator is
+//! exact, and `par_map` preserves input order, so the same config yields
+//! bit-identical frontiers regardless of thread count.
+
+mod eval;
+mod pareto;
+mod prune;
+mod space;
+
+pub use eval::{evaluate, DesignPoint};
+pub use pareto::{best_tops_under, dominates, frontier_indices, ParetoResult, Query};
+pub use prune::{check_budgets, PruneStats, Reject};
+pub use space::{Candidate, SpaceSpec};
+
+use std::collections::BTreeMap;
+
+use crate::arch::AcceleratorPlan;
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::customize::customize;
+use crate::util::json::Json;
+use crate::util::par::par_map;
+use anyhow::Result;
+
+/// One exploration request.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    pub model: ModelConfig,
+    pub hw: HardwareConfig,
+    /// Board-level AIE cap (the paper's Limited-AIE scenario): the whole
+    /// search sees a board with `min(total_aie, max_cores)` cores.
+    pub max_cores: Option<usize>,
+    /// Per-item whole-model latency SLO (ms) for the scalarized query.
+    pub slo_ms: Option<f64>,
+    /// Max candidates to *consider*; larger spaces are sampled
+    /// deterministically with `seed`.  `None` = exhaustive.
+    pub sample_budget: Option<usize>,
+    pub seed: u64,
+    pub space: SpaceSpec,
+}
+
+impl ExploreConfig {
+    /// Defaults: the full joint space for the pair, sampled down to 256
+    /// candidates (seeded), no constraints.
+    pub fn new(model: ModelConfig, hw: HardwareConfig) -> Self {
+        let space = SpaceSpec::for_model(&model, &hw);
+        ExploreConfig {
+            model,
+            hw,
+            max_cores: None,
+            slo_ms: None,
+            sample_budget: Some(256),
+            seed: 0xCA7,
+            space,
+        }
+    }
+
+    /// The board the search actually targets (`max_cores` applied).
+    pub fn board(&self) -> HardwareConfig {
+        match self.max_cores {
+            Some(n) if n < self.hw.total_aie => {
+                let mut hw = self.hw.clone();
+                hw.total_aie = n;
+                hw.name = format!("{}-limited-{n}", self.hw.name);
+                hw
+            }
+            _ => self.hw.clone(),
+        }
+    }
+}
+
+/// One exploration outcome: every surviving design point, the frontier,
+/// and the accounting of where the rest of the space went.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    /// Size of the effective joint space (per-EDPU budgets above the
+    /// board collapse before enumeration — see [`explore`]).
+    pub space_size: usize,
+    /// True when the space was subsampled rather than swept.
+    pub sampled: bool,
+    /// Evaluated points, in candidate-index order.
+    pub points: Vec<DesignPoint>,
+    /// Indices into `points` of the Pareto frontier.
+    pub frontier: Vec<usize>,
+    pub dominated: usize,
+    pub duplicates: usize,
+    pub stats: PruneStats,
+    /// The latency SLO the scalarized query ran with (`None` = the query
+    /// was a plain TOPS maximum).
+    pub slo_ms: Option<f64>,
+    /// Index into `points` of the best-TOPS point satisfying the SLO
+    /// query (every point already satisfies the board budgets).
+    pub best_constrained: Option<usize>,
+}
+
+impl ExploreResult {
+    pub fn frontier_points(&self) -> impl Iterator<Item = &DesignPoint> {
+        self.frontier.iter().map(|&i| &self.points[i])
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::Str("cat-dse-v1".into()));
+        m.insert("space_size".into(), Json::Num(self.space_size as f64));
+        m.insert("sampled".into(), Json::Bool(self.sampled));
+        let s = &self.stats;
+        let mut pruned = BTreeMap::new();
+        pruned.insert("considered".into(), Json::Num(s.sampled as f64));
+        pruned.insert("customize_rejected".into(), Json::Num(s.customize_rejected as f64));
+        pruned.insert("aie_rejected".into(), Json::Num(s.aie_rejected as f64));
+        pruned.insert("pl_rejected".into(), Json::Num(s.pl_rejected as f64));
+        pruned.insert("sim_failed".into(), Json::Num(s.sim_failed as f64));
+        pruned.insert("evaluated".into(), Json::Num(s.evaluated as f64));
+        m.insert("pruning".into(), Json::Obj(pruned));
+        m.insert("dominated".into(), Json::Num(self.dominated as f64));
+        m.insert("duplicates".into(), Json::Num(self.duplicates as f64));
+        m.insert(
+            "frontier".into(),
+            Json::Arr(self.frontier_points().map(DesignPoint::to_json).collect()),
+        );
+        m.insert(
+            "slo_ms".into(),
+            match self.slo_ms {
+                Some(x) => Json::Num(x),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "best_constrained".into(),
+            match self.best_constrained {
+                Some(i) => self.points[i].to_json(),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Run one exploration: enumerate/sample → customize+prune → simulate in
+/// parallel → select the frontier.
+pub fn explore(cfg: &ExploreConfig) -> Result<ExploreResult> {
+    let board = cfg.board();
+    // Effective space: per-EDPU budgets above the (possibly `max_cores`-
+    // capped) board all clamp to the same board-sized budget, so collapse
+    // them before enumeration — otherwise a capped board turns the budget
+    // dimension into identical candidates that waste the sample budget.
+    let mut space = cfg.space.clone();
+    space.edpu_budgets = {
+        let mut budgets = Vec::new();
+        for b in &space.edpu_budgets {
+            let b = (*b).min(board.total_aie);
+            if !budgets.contains(&b) {
+                budgets.push(b);
+            }
+        }
+        budgets
+    };
+    let n = space.size();
+    let indices: Vec<usize> = match cfg.sample_budget {
+        Some(k) if k < n => space.sample_indices(k, cfg.seed),
+        _ => (0..n).collect(),
+    };
+    let sampled = indices.len() < n;
+    let mut stats = PruneStats { sampled: indices.len(), ..PruneStats::default() };
+
+    // Stage 1 — customize + budget-prune (cheap: Eq. 3–8 arithmetic and
+    // the Table V estimate; no discrete-event simulation).
+    let mut survivors: Vec<(Candidate, AcceleratorPlan)> = Vec::new();
+    for idx in indices {
+        let cand = space.candidate(idx);
+        // customize against the per-EDPU budget, deploy on the board
+        let mut edpu_hw = board.clone();
+        if cand.edpu_budget < edpu_hw.total_aie {
+            edpu_hw.total_aie = cand.edpu_budget;
+            edpu_hw.name = format!("{}-edpu-{}", board.name, cand.edpu_budget);
+        }
+        let mut plan = match customize(&cfg.model, &edpu_hw, &cand.opts) {
+            Ok(p) => p,
+            Err(_) => {
+                stats.customize_rejected += 1;
+                continue;
+            }
+        };
+        plan.hw = board.clone();
+        match check_budgets(&plan, &board, cand.n_edpu) {
+            Ok(()) => survivors.push((cand, plan)),
+            Err(Reject::Aie) => stats.aie_rejected += 1,
+            Err(Reject::Pl) => stats.pl_rejected += 1,
+        }
+    }
+
+    // Stage 2 — simulate survivors in parallel (stage-sim cache dedups
+    // repeated per-share stage runs underneath).
+    let evaluated: Vec<Result<DesignPoint>> =
+        par_map(survivors, |(cand, plan)| evaluate(&plan, &cand));
+    let mut points = Vec::new();
+    for r in evaluated {
+        match r {
+            Ok(p) => points.push(p),
+            Err(_) => stats.sim_failed += 1,
+        }
+    }
+    stats.evaluated = points.len();
+
+    // Stage 3 — multi-objective selection + the scalarized query.
+    let objs: Vec<Vec<f64>> = points.iter().map(|p| p.objectives().to_vec()).collect();
+    let pr = frontier_indices(&objs);
+    let query = Query { max_latency_ms: cfg.slo_ms, ..Query::default() };
+    let best_constrained = best_tops_under(&points, &query);
+
+    Ok(ExploreResult {
+        space_size: n,
+        sampled,
+        points,
+        frontier: pr.frontier,
+        dominated: pr.dominated,
+        duplicates: pr.duplicates,
+        stats,
+        slo_ms: cfg.slo_ms,
+        best_constrained,
+    })
+}

@@ -1,0 +1,135 @@
+//! Multi-objective selection: Pareto frontier + scalarized queries.
+//!
+//! Objectives are maximize-all `f64` vectors (minimized quantities enter
+//! negated — see [`DesignPoint::objectives`](super::DesignPoint::objectives)),
+//! so one `dominates` predicate serves every caller.
+
+use super::eval::DesignPoint;
+
+/// `a` dominates `b`: at least as good everywhere, strictly better
+/// somewhere (maximize-all convention).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Frontier extraction result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParetoResult {
+    /// Indices (into the input slice) of the non-dominated set, in input
+    /// order.  Exact-duplicate objective vectors keep only their first
+    /// occurrence.
+    pub frontier: Vec<usize>,
+    /// Points strictly dominated by some other point.
+    pub dominated: usize,
+    /// Later exact duplicates of a frontier point.
+    pub duplicates: usize,
+}
+
+/// O(n²) frontier scan — fine for the few thousand survivors a sweep
+/// produces (the expensive part is the simulation, not the selection).
+pub fn frontier_indices(objs: &[Vec<f64>]) -> ParetoResult {
+    let mut frontier = Vec::new();
+    let mut dominated = 0usize;
+    let mut duplicates = 0usize;
+    'outer: for (i, a) in objs.iter().enumerate() {
+        for (j, b) in objs.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            if dominates(b, a) {
+                dominated += 1;
+                continue 'outer;
+            }
+            if j < i && a == b {
+                duplicates += 1;
+                continue 'outer;
+            }
+        }
+        frontier.push(i);
+    }
+    ParetoResult { frontier, dominated, duplicates }
+}
+
+/// A scalarized "best under constraint" question: maximize TOPS subject
+/// to the stated ceilings.  Unset fields don't constrain.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Query {
+    /// Per-item end-to-end latency SLO (ms, whole model).
+    pub max_latency_ms: Option<f64>,
+    /// Total AIE cores across all EDPU instances.
+    pub max_total_cores: Option<usize>,
+    /// Board power ceiling (W).
+    pub max_power_w: Option<f64>,
+}
+
+impl Query {
+    pub fn admits(&self, p: &DesignPoint) -> bool {
+        self.max_latency_ms.map_or(true, |m| p.latency_ms <= m)
+            && self.max_total_cores.map_or(true, |m| p.total_cores <= m)
+            && self.max_power_w.map_or(true, |m| p.power_w <= m)
+    }
+}
+
+/// Index of the highest-TOPS point admitted by `q` (`None` when nothing
+/// qualifies).
+pub fn best_tops_under(points: &[DesignPoint], q: &Query) -> Option<usize> {
+    points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| q.admits(p))
+        .max_by(|a, b| a.1.tops.total_cmp(&b.1.tops))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[2.0, 1.0], &[1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal: not strict
+        assert!(!dominates(&[2.0, 0.5], &[1.0, 1.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[2.0, 1.0]));
+    }
+
+    #[test]
+    fn frontier_drops_dominated_and_dedupes() {
+        let objs = vec![
+            vec![1.0, 1.0], // dominated by 2
+            vec![3.0, 0.0], // frontier (best x)
+            vec![2.0, 2.0], // frontier
+            vec![2.0, 2.0], // duplicate of 2
+            vec![0.0, 3.0], // frontier (best y)
+        ];
+        let r = frontier_indices(&objs);
+        assert_eq!(r.frontier, vec![1, 2, 4]);
+        assert_eq!(r.dominated, 1);
+        assert_eq!(r.duplicates, 1);
+        // mutual non-domination on the frontier
+        for &i in &r.frontier {
+            for &j in &r.frontier {
+                if i != j {
+                    assert!(!dominates(&objs[i], &objs[j]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_frontier() {
+        let r = frontier_indices(&[]);
+        assert!(r.frontier.is_empty());
+        assert_eq!((r.dominated, r.duplicates), (0, 0));
+    }
+}

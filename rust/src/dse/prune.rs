@@ -1,0 +1,107 @@
+//! Early feasibility pruning — everything that can reject a candidate
+//! *before* any discrete-event simulation is spent on it.
+//!
+//! Order (cheapest first, see ROADMAP §Design-space exploration):
+//! 1. `customize` itself (Eq. 3–8 + the PRG allocation invariants) — a
+//!    forced mode the board cannot host errors out here;
+//! 2. AIE budget: `n_edpu * cores_deployed() <= Total_AIE`, the same
+//!    check [`run_multi_edpu`](crate::sched::run_multi_edpu) enforces;
+//! 3. PL budget: the Table V estimate, replicated per EDPU instance,
+//!    must fit the board's LUT/FF/BRAM/URAM pools.
+
+use crate::arch::AcceleratorPlan;
+use crate::config::HardwareConfig;
+
+/// Why a candidate was rejected without simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reject {
+    /// AIE cores: the EDPU replicas do not fit the array.
+    Aie,
+    /// PL resources: the replicated movers/operators/buffers do not fit.
+    Pl,
+}
+
+/// Exploration accounting: where every *considered* point went
+/// (`sampled = customize_rejected + aie_rejected + pl_rejected +
+/// sim_failed + evaluated`; the space size itself lives on
+/// [`ExploreResult::space_size`](super::ExploreResult::space_size)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Points actually considered (== the space size unless sampled).
+    pub sampled: usize,
+    /// `customize` returned an error (infeasible forced attributes).
+    pub customize_rejected: usize,
+    /// Rejected by the AIE core budget.
+    pub aie_rejected: usize,
+    /// Rejected by the PL resource budget.
+    pub pl_rejected: usize,
+    /// Survived pruning but the simulator errored (should be rare; the
+    /// budgets above are pre-checked).
+    pub sim_failed: usize,
+    /// Points that produced a design point (simulated successfully).
+    pub evaluated: usize,
+}
+
+/// Check the post-`customize` budgets for an `n_edpu`-instance deployment
+/// of `plan` on `board`.
+pub fn check_budgets(
+    plan: &AcceleratorPlan,
+    board: &HardwareConfig,
+    n_edpu: usize,
+) -> Result<(), Reject> {
+    if n_edpu == 0 || n_edpu * plan.cores_deployed() > board.total_aie {
+        return Err(Reject::Aie);
+    }
+    let pl = plan.res_overall.scale(n_edpu);
+    if pl.luts > board.pl_luts
+        || pl.ffs > board.pl_ffs
+        || pl.brams > board.pl_brams
+        || pl.urams > board.pl_urams
+    {
+        return Err(Reject::Pl);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::customize::{customize, CustomizeOptions};
+
+    #[test]
+    fn budgets_reject_oversized_deployments() {
+        let hw = HardwareConfig::vck5000();
+        let plan = customize(
+            &ModelConfig::bert_base(),
+            &hw,
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        // 352-core EDPU: one fits, two exceed the 400-AIE array
+        assert_eq!(check_budgets(&plan, &hw, 1), Ok(()));
+        assert_eq!(check_budgets(&plan, &hw, 2), Err(Reject::Aie));
+        assert_eq!(check_budgets(&plan, &hw, 0), Err(Reject::Aie));
+    }
+
+    #[test]
+    fn pl_budget_rejects_before_aie_runs_out() {
+        let hw = HardwareConfig::vck5000();
+        // the compact 64-core serial EDPU: AIE-wise 6 fit (384 <= 400),
+        // but its replicated PL estimate runs out of BRAM first.
+        let mut plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000_limited(64),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        plan.hw = hw.clone();
+        assert_eq!(check_budgets(&plan, &hw, 3), Ok(()));
+        let per = plan.res_overall;
+        let aie_max = hw.total_aie / plan.cores_deployed();
+        let bram_max = hw.pl_brams / per.brams.max(1);
+        assert!(bram_max < aie_max, "fixture drifted: {bram_max} vs {aie_max}");
+        assert_eq!(check_budgets(&plan, &hw, bram_max + 1), Err(Reject::Pl));
+        assert_eq!(check_budgets(&plan, &hw, aie_max + 1), Err(Reject::Aie));
+    }
+}

@@ -1,0 +1,215 @@
+//! Candidate enumeration: the joint customization × deployment space.
+//!
+//! A point of the space is one complete accelerator-family decision:
+//! the three §IV customizable attributes (as [`CustomizeOptions`]
+//! overrides), the per-EDPU AIE budget the customization engine is asked
+//! to target, the batch size, and the HOST-level deployment (how many
+//! EDPU instances, parallel or pipelined).  The space is addressed by a
+//! single mixed-radix index so that exhaustive iteration, deterministic
+//! sampling, and resume-from-index all share one decoder.
+
+use crate::arch::ParallelMode;
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::customize::{knob_domains, CustomizeOptions};
+use crate::sched::MultiEdpuMode;
+use crate::util::prng::Prng;
+
+/// The domains the explorer sweeps (one `Vec` per knob; the space is
+/// their Cartesian product).
+#[derive(Debug, Clone)]
+pub struct SpaceSpec {
+    /// Merged-QKV organization on/off.
+    pub independent_linear: Vec<bool>,
+    /// MHA stage mode override (`None` = Eq. 5 decides).
+    pub mha_modes: Vec<Option<ParallelMode>>,
+    /// FFN stage mode override (`None` = Eq. 6 decides).
+    pub ffn_modes: Vec<Option<ParallelMode>>,
+    /// `P_ATB` values.
+    pub p_atb: Vec<usize>,
+    /// Batch sizes per EDPU execution.
+    pub batches: Vec<usize>,
+    /// Per-EDPU AIE core budgets handed to `customize` — smaller budgets
+    /// yield compact EDPUs that the HOST can replicate (§III.A families).
+    pub edpu_budgets: Vec<usize>,
+    /// HOST deployments: (EDPU count, organization).  `n_edpu = 1` is
+    /// listed once (the organization is irrelevant for a single EDPU).
+    pub deployments: Vec<(usize, MultiEdpuMode)>,
+}
+
+/// One decoded candidate design point.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Mixed-radix index of this point in its [`SpaceSpec`].
+    pub index: usize,
+    pub opts: CustomizeOptions,
+    pub batch: usize,
+    pub edpu_budget: usize,
+    pub n_edpu: usize,
+    pub multi_mode: MultiEdpuMode,
+}
+
+impl SpaceSpec {
+    /// The default joint space for one model/board pair: the §IV knob
+    /// domains ([`knob_domains`]) × batches `{1,4,8,16,32}` × per-EDPU
+    /// budgets `{total, total/2, total/4, 64}` × deployments of up to 4
+    /// EDPUs in both HOST organizations.
+    pub fn for_model(model: &ModelConfig, hw: &HardwareConfig) -> Self {
+        let k = knob_domains(model, hw);
+        let total = hw.total_aie;
+        let mut edpu_budgets = vec![total];
+        for b in [total / 2, total / 4, 64] {
+            if b >= 4 && !edpu_budgets.contains(&b) {
+                edpu_budgets.push(b);
+            }
+        }
+        let mut deployments = vec![(1, MultiEdpuMode::Parallel)];
+        for n in 2..=4 {
+            deployments.push((n, MultiEdpuMode::Parallel));
+            deployments.push((n, MultiEdpuMode::Pipelined));
+        }
+        SpaceSpec {
+            independent_linear: k.independent_linear,
+            mha_modes: k.mha_modes,
+            ffn_modes: k.ffn_modes,
+            p_atb: k.p_atb,
+            batches: vec![1, 4, 8, 16, 32],
+            edpu_budgets,
+            deployments,
+        }
+    }
+
+    /// Number of points in the space (product of the domain sizes).
+    pub fn size(&self) -> usize {
+        self.independent_linear.len()
+            * self.mha_modes.len()
+            * self.ffn_modes.len()
+            * self.p_atb.len()
+            * self.batches.len()
+            * self.edpu_budgets.len()
+            * self.deployments.len()
+    }
+
+    /// Decode one mixed-radix index into a candidate.  Deployment varies
+    /// fastest, `independent_linear` slowest.
+    pub fn candidate(&self, index: usize) -> Candidate {
+        assert!(index < self.size(), "candidate index out of range");
+        let mut rem = index;
+        let mut next = |len: usize| {
+            let r = rem % len;
+            rem /= len;
+            r
+        };
+        let (n_edpu, multi_mode) = self.deployments[next(self.deployments.len())];
+        let edpu_budget = self.edpu_budgets[next(self.edpu_budgets.len())];
+        let batch = self.batches[next(self.batches.len())];
+        let p_atb = self.p_atb[next(self.p_atb.len())];
+        let force_ffn_mode = self.ffn_modes[next(self.ffn_modes.len())];
+        let force_mha_mode = self.mha_modes[next(self.mha_modes.len())];
+        let independent_linear = self.independent_linear[next(self.independent_linear.len())];
+        Candidate {
+            index,
+            opts: CustomizeOptions {
+                independent_linear: Some(independent_linear),
+                force_mha_mode,
+                force_ffn_mode,
+                p_atb: Some(p_atb),
+            },
+            batch,
+            edpu_budget,
+            n_edpu,
+            multi_mode,
+        }
+    }
+
+    /// All candidates in index order.
+    pub fn iter(&self) -> impl Iterator<Item = Candidate> + '_ {
+        (0..self.size()).map(move |i| self.candidate(i))
+    }
+
+    /// `budget` distinct indices, uniformly without replacement, sorted
+    /// ascending — deterministic for a fixed `seed`.  Floyd's sampling
+    /// algorithm: O(budget) work and memory however large the space, so
+    /// widening the domains never makes drawing a sample expensive.  A
+    /// budget covering the whole space degenerates to exhaustive
+    /// enumeration.
+    pub fn sample_indices(&self, budget: usize, seed: u64) -> Vec<usize> {
+        let n = self.size();
+        if budget >= n {
+            return (0..n).collect();
+        }
+        let mut rng = Prng::new(seed);
+        let mut picked = std::collections::BTreeSet::new();
+        for i in (n - budget)..n {
+            let t = rng.below(i as u64 + 1) as usize;
+            if !picked.insert(t) {
+                picked.insert(i);
+            }
+        }
+        picked.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SpaceSpec {
+        SpaceSpec::for_model(&ModelConfig::bert_base(), &HardwareConfig::vck5000())
+    }
+
+    #[test]
+    fn default_space_shape() {
+        let s = spec();
+        // 2 indep × 4 mha × 3 ffn × 6 p_atb × 5 batches × 4 budgets × 7 deployments
+        assert_eq!(s.size(), 2 * 4 * 3 * 6 * 5 * 4 * 7);
+        assert!(s.p_atb.contains(&4)); // the Eq. 7 value for BERT-Base
+        assert_eq!(s.edpu_budgets, vec![400, 200, 100, 64]);
+        assert_eq!(s.deployments.len(), 7);
+    }
+
+    #[test]
+    fn decode_roundtrip_covers_every_knob() {
+        let s = spec();
+        // first point: all domains at position 0
+        let c0 = s.candidate(0);
+        assert_eq!(c0.index, 0);
+        assert_eq!(c0.opts.independent_linear, Some(true));
+        assert_eq!(c0.opts.force_mha_mode, None);
+        assert_eq!(c0.n_edpu, 1);
+        // last point: all domains at their final position
+        let last = s.candidate(s.size() - 1);
+        assert_eq!(last.opts.independent_linear, Some(false));
+        assert_eq!(last.opts.p_atb, Some(12));
+        assert_eq!(last.batch, 32);
+        assert_eq!(last.edpu_budget, 64);
+        assert_eq!((last.n_edpu, last.multi_mode), (4, MultiEdpuMode::Pipelined));
+        // every index decodes, and indices are distinct along the walk
+        let mut seen_batches = std::collections::BTreeSet::new();
+        for c in s.iter().take(1000) {
+            seen_batches.insert(c.batch);
+        }
+        assert!(seen_batches.len() > 1);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_sorted_and_unique() {
+        let s = spec();
+        let a = s.sample_indices(16, 7);
+        let b = s.sample_indices(16, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.iter().all(|&i| i < s.size()));
+        // budget >= size degenerates to exhaustive
+        let tiny = SpaceSpec {
+            independent_linear: vec![true],
+            mha_modes: vec![None],
+            ffn_modes: vec![None],
+            p_atb: vec![4],
+            batches: vec![8],
+            edpu_budgets: vec![64],
+            deployments: vec![(1, MultiEdpuMode::Parallel), (2, MultiEdpuMode::Parallel)],
+        };
+        assert_eq!(tiny.sample_indices(99, 3), vec![0, 1]);
+    }
+}

@@ -122,6 +122,27 @@ pub fn fig5_series(model: &ModelConfig, hw: &HardwareConfig) -> Result<Vec<Batch
     })
 }
 
+/// EXP-DSE — the `cat explore` driver: derive the Pareto-optimal
+/// accelerator family for one model/board pair over the default joint
+/// space (see [`dse`](crate::dse)).  `budget` caps how many candidates
+/// are simulated (`None` = exhaustive — only sensible on reduced
+/// spaces); `max_cores`/`slo_ms` pose the constrained variants.
+pub fn explore(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    budget: Option<usize>,
+    seed: u64,
+    max_cores: Option<usize>,
+    slo_ms: Option<f64>,
+) -> Result<crate::dse::ExploreResult> {
+    let mut cfg = crate::dse::ExploreConfig::new(model.clone(), hw.clone());
+    cfg.sample_budget = budget;
+    cfg.seed = seed;
+    cfg.max_cores = max_cores;
+    cfg.slo_ms = slo_ms;
+    crate::dse::explore(&cfg)
+}
+
 /// EXP-O1 — Observation 1: serial vs pipelined send/compute/receive on
 /// the PL side.  Returns (serial_ns, pipelined_ns).
 pub fn obs1_times() -> Result<(f64, f64)> {

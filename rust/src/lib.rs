@@ -8,6 +8,8 @@
 //! * [`arch`] — the abstract accelerator architecture: PU specs, PRGs,
 //!   ATB/LB, EDPU stages (§III);
 //! * [`customize`] — the Eq. 3–8 customization strategy (§IV);
+//! * [`dse`] — design-space exploration: Pareto-optimal accelerator
+//!   families over the joint customization × deployment space;
 //! * [`sim`] — discrete-event Versal ACAP substrate (AIE/PLIO/PL/power);
 //! * [`sched`] — Algorithm 1: EDPU stage execution over the simulator;
 //! * [`metrics`] — AIE utilization rates (Eq. 1–2), TOPS, GOPS/W;
@@ -26,6 +28,7 @@ pub mod config;
 pub mod experiments;
 pub mod coordinator;
 pub mod customize;
+pub mod dse;
 pub mod metrics;
 pub mod report;
 pub mod runtime;

@@ -23,12 +23,14 @@ use cat::util::cli;
 
 const VALUED: &[&str] = &[
     "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
+    "max-cores", "slo-ms", "budget",
 ];
 
 fn main() {
     let args = cli::parse(std::env::args().skip(1), VALUED);
     let result = match args.subcommand.as_deref() {
         Some("customize") => cmd_customize(&args),
+        Some("explore") => cmd_explore(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("table") => cmd_table(&args),
         Some("fig5") => cmd_fig5(&args),
@@ -53,6 +55,11 @@ cat — Customized Transformer Accelerator framework (Versal ACAP, simulated)
 
 subcommands:
   customize --model <m> --hw <h> [--json]   derive an accelerator plan
+  explore   --model <m> --hw <h> [--max-cores N] [--slo-ms X]
+            [--budget K|all] [--seed S] [--json]
+                                            sweep the joint customization x
+                                            deployment space and report the
+                                            Pareto-optimal accelerator family
   simulate  --model <m> --hw <h> [--batch N]  run the EDPU simulator
   table <2|5|6|7>                           reproduce a paper table
   fig5                                      reproduce Figure 5
@@ -112,6 +119,44 @@ fn cmd_customize(args: &cli::Args) -> Result<()> {
                 prg.kind, prg.atb_index, prg.pus, prg.cores()
             );
         }
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &cli::Args) -> Result<()> {
+    let model = model_of(args)?;
+    let hw = hw_of(args)?;
+    let mut cfg = cat::dse::ExploreConfig::new(model, hw);
+    if let Some(s) = args.opt("max-cores") {
+        cfg.max_cores =
+            Some(s.parse().map_err(|_| anyhow!("--max-cores expects an integer, got '{s}'"))?);
+    }
+    if let Some(s) = args.opt("slo-ms") {
+        cfg.slo_ms =
+            Some(s.parse().map_err(|_| anyhow!("--slo-ms expects a number, got '{s}'"))?);
+    }
+    if let Some(s) = args.opt("budget") {
+        cfg.sample_budget = if s == "all" {
+            None
+        } else {
+            match s.parse() {
+                Ok(k) if k > 0 => Some(k),
+                _ => {
+                    return Err(anyhow!(
+                        "--budget expects a positive integer or 'all', got '{s}'"
+                    ))
+                }
+            }
+        };
+    }
+    if let Some(s) = args.opt("seed") {
+        cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
+    }
+    let res = cat::dse::explore(&cfg)?;
+    if args.flag("json") {
+        println!("{}", res.to_json());
+    } else {
+        print!("{}", report::explore(&res));
     }
     Ok(())
 }

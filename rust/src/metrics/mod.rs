@@ -2,7 +2,7 @@
 //! performance / energy-efficiency metrics (Table VI columns).
 
 use crate::arch::AcceleratorPlan;
-use crate::sched::EdpuReport;
+use crate::sched::{EdpuReport, MultiEdpuMode, MultiEdpuReport};
 use crate::sim::power::{power, PowerBreakdownInput};
 
 /// Eq. 1: `AIE_deployment_rate = deployed / total`.
@@ -74,6 +74,39 @@ pub fn summarize(plan: &AcceleratorPlan, r: &EdpuReport) -> PerfSummary {
     }
 }
 
+/// Board power (W) for a multi-EDPU deployment — the power-model input
+/// scaled to `n_edpu` instances: every instance's cores are deployed
+/// (clocked), the active average sums the instances that actually run,
+/// and the PL logic replicates per instance.  At `n_edpu = 1` this
+/// agrees exactly with [`summarize`]'s power (the per-layer activation
+/// traffic rate is invariant to running all `layers` layers).
+pub fn multi_edpu_power_w(plan: &AcceleratorPlan, r: &MultiEdpuReport) -> f64 {
+    let running_avg = match r.mode {
+        // independent instances run concurrently: their busy cores add up
+        MultiEdpuMode::Parallel => r.per_edpu.iter().map(EdpuReport::running_avg).sum(),
+        // each chain stage re-runs the same per-layer profile
+        MultiEdpuMode::Pipelined => {
+            r.per_edpu.first().map(EdpuReport::running_avg).unwrap_or(0.0)
+                * r.n_edpu.min(plan.model.layers) as f64
+        }
+    };
+    let l = plan.model.padded_seq_len(plan.mmsz) as f64;
+    let e = plan.model.embed_dim as f64;
+    let layer_crossings = plan.model.layers as f64;
+    let dram_gbps =
+        2.0 * l * e * r.batch as f64 * layer_crossings / r.makespan_ns.max(1e-9);
+    power(
+        &plan.hw,
+        &PowerBreakdownInput {
+            aie_deployed: r.n_edpu * plan.cores_deployed(),
+            aie_running_avg: running_avg,
+            pl: plan.res_overall.scale(r.n_edpu),
+            dram_gbps,
+        },
+    )
+    .total_w()
+}
+
 /// Activations in/out over PCIe/DRAM during one EDPU run (GB/s estimate).
 fn estimate_dram_gbps(plan: &AcceleratorPlan, r: &EdpuReport) -> f64 {
     let l = plan.model.padded_seq_len(plan.mmsz) as f64;
@@ -103,6 +136,48 @@ mod tests {
     fn eq2_definition() {
         assert!((effective_utilization_rate(256, 352) - 0.727).abs() < 1e-3);
         assert_eq!(effective_utilization_rate(0, 0), 0.0);
+    }
+
+    #[test]
+    fn multi_power_agrees_with_summarize_at_one_edpu() {
+        let plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000(),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        let r1 = run_edpu(&plan, 8).unwrap();
+        let s = summarize(&plan, &r1);
+        let m = crate::sched::run_multi_edpu(&plan, 1, 8, MultiEdpuMode::Parallel).unwrap();
+        let p = multi_edpu_power_w(&plan, &m);
+        assert!(
+            (p - s.power_w).abs() / s.power_w < 1e-9,
+            "{p} vs {}",
+            s.power_w
+        );
+    }
+
+    #[test]
+    fn multi_power_grows_with_instances() {
+        // the compact 64-core EDPU hosted on the full board
+        let mut plan = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000_limited(64),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        plan.hw = HardwareConfig::vck5000();
+        let p1 = multi_edpu_power_w(
+            &plan,
+            &crate::sched::run_multi_edpu(&plan, 1, 8, MultiEdpuMode::Parallel).unwrap(),
+        );
+        let p2 = multi_edpu_power_w(
+            &plan,
+            &crate::sched::run_multi_edpu(&plan, 2, 8, MultiEdpuMode::Parallel).unwrap(),
+        );
+        assert!(p2 > p1, "{p2} vs {p1}");
+        // both stay in a physically plausible band
+        assert!(p1 > 5.0 && p2 < 120.0, "{p1} / {p2}");
     }
 
     #[test]

@@ -181,6 +181,70 @@ pub fn table7_group(group: &str, cat: &CatRow, extra_styles: &[(&str, BaselineRe
     t.render()
 }
 
+/// Render a design-space exploration result: the Pareto frontier table
+/// plus the accounting line (dominated/duplicate/pruned counts) and the
+/// scalarized best-under-constraint pick.
+pub fn explore(r: &crate::dse::ExploreResult) -> String {
+    let s = &r.stats;
+    let title = format!(
+        "CAT design-space exploration — Pareto frontier ({} of {} evaluated points; \
+         space {}{}, pruned: {} customize / {} AIE / {} PL, {} sim failure(s))",
+        r.frontier.len(),
+        s.evaluated,
+        r.space_size,
+        if r.sampled {
+            format!(", sampled {}", s.sampled)
+        } else {
+            String::new()
+        },
+        s.customize_rejected,
+        s.aie_rejected,
+        s.pl_rejected,
+        s.sim_failed,
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "IL", "MHA mode", "FFN mode", "P_ATB", "batch", "EDPUs", "cores", "PL LUT",
+            "TOPS", "lat(ms)", "GOPS/W", "GOPS/AIE",
+        ],
+    );
+    for p in r.frontier_points() {
+        t.row(&[
+            if p.independent_linear { "yes" } else { "no" }.into(),
+            p.mha_mode.to_string(),
+            p.ffn_mode.to_string(),
+            p.p_atb.to_string(),
+            p.cand.batch.to_string(),
+            format!("{}x{:?}", p.cand.n_edpu, p.cand.multi_mode),
+            p.total_cores.to_string(),
+            format!("{:.1}K", p.pl_luts as f64 / 1e3),
+            fmt_f(p.tops, 3),
+            fmt_f(p.latency_ms, 3),
+            fmt_f(p.gops_per_w, 1),
+            fmt_f(p.gops_per_aie, 1),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "  {} dominated point(s), {} duplicate(s) behind the frontier\n",
+        r.dominated, r.duplicates
+    ));
+    if let Some(i) = r.best_constrained {
+        let p = &r.points[i];
+        let label = match r.slo_ms {
+            Some(x) => format!("best under latency SLO {x} ms"),
+            None => "peak-TOPS point".to_string(),
+        };
+        out.push_str(&format!(
+            "  {label}: {:.3} TOPS at {:.3} ms/item, {} cores ({}x{:?}, batch {})\n",
+            p.tops, p.latency_ms, p.total_cores, p.cand.n_edpu, p.cand.multi_mode,
+            p.cand.batch
+        ));
+    }
+    out
+}
+
 /// Figure 5 series: throughput vs batch size for MHA / FFN / System.
 #[derive(Debug, Clone)]
 pub struct BatchPoint {

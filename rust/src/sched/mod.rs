@@ -17,7 +17,7 @@ pub mod cache;
 pub mod multi;
 
 pub use cache::{reset_stage_cache, stage_cache_len, stage_cache_stats};
-pub use multi::{edpu_count_sweep, run_multi_edpu, MultiEdpuMode, MultiEdpuReport};
+pub use multi::{edpu_count_sweep, max_deployable, run_multi_edpu, MultiEdpuMode, MultiEdpuReport};
 
 use crate::arch::{AcceleratorPlan, ParallelMode, Prg, PrgKind, PuSpec};
 use crate::config::HardwareConfig;

@@ -122,6 +122,13 @@ pub fn run_multi_edpu(
     }
 }
 
+/// How many instances of this plan's EDPU the board's AIE array can host
+/// (always at least 1 so a sweep has a starting point; the budget check
+/// in [`run_multi_edpu`] still rejects a plan that doesn't fit even once).
+pub fn max_deployable(plan: &AcceleratorPlan) -> usize {
+    (plan.hw.total_aie / plan.cores_deployed().max(1)).max(1)
+}
+
 /// Sweep EDPU counts for a fixed total budget: how many EDPUs should the
 /// HOST deploy? (the "adjusted freely according to hardware resources
 /// and acceleration requirements" knob).  The counts are independent
@@ -132,8 +139,7 @@ pub fn edpu_count_sweep(
     batch: usize,
     mode: MultiEdpuMode,
 ) -> Result<Vec<MultiEdpuReport>> {
-    let max_n = (plan.hw.total_aie / plan.cores_deployed().max(1)).max(1);
-    crate::util::par::try_par_map((1..=max_n).collect(), |n| {
+    crate::util::par::try_par_map((1..=max_deployable(plan)).collect(), |n| {
         run_multi_edpu(plan, n, batch, mode)
     })
 }
@@ -214,5 +220,98 @@ mod tests {
         let r = run_multi_edpu(&plan, 3, 7, MultiEdpuMode::Parallel).unwrap();
         let total: usize = r.per_edpu.iter().map(|e| e.batch).sum();
         assert_eq!(total, 7);
+    }
+
+    #[test]
+    fn parallel_makespan_is_exactly_the_slowest_share() {
+        // Invariant: non-interfering EDPUs finish when the largest batch
+        // share finishes — recompute the shares independently and demand
+        // exact agreement with the reported makespan.
+        let plan = small_plan();
+        let layers = plan.model.layers as f64;
+        for (n, batch) in [(2usize, 8usize), (3, 7), (4, 4)] {
+            let r = run_multi_edpu(&plan, n, batch, MultiEdpuMode::Parallel).unwrap();
+            let slowest = (0..n)
+                .map(|i| batch / n + usize::from(i < batch % n))
+                .filter(|s| *s > 0)
+                .map(|s| run_edpu(&plan, s).unwrap().makespan_ns() * layers)
+                .fold(0.0f64, f64::max);
+            assert!(
+                (r.makespan_ns - slowest).abs() <= 1e-9 * slowest,
+                "n={n} batch={batch}: {} vs {slowest}",
+                r.makespan_ns
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_never_beats_perfect_scaling() {
+        // Splitting a batch over n EDPUs can at best divide the wall time
+        // by n: the largest share is ceil(batch/n) items, and a share's
+        // invocation count is at least a 1/n-th of the whole batch's
+        // (ceil arithmetic can only round *up* per share).
+        let plan = small_plan();
+        let batch = 8;
+        let one = run_multi_edpu(&plan, 1, batch, MultiEdpuMode::Parallel).unwrap();
+        for n in 2..=4usize {
+            let r = run_multi_edpu(&plan, n, batch, MultiEdpuMode::Parallel).unwrap();
+            let bound = one.makespan_ns / n as f64;
+            assert!(
+                r.makespan_ns >= bound * (1.0 - 1e-9),
+                "n={n}: {} beats perfect scaling {bound}",
+                r.makespan_ns
+            );
+            // ops are conserved, so throughput gains are bounded too
+            assert_eq!(r.ops, one.ops);
+            assert!(r.tops() <= one.tops() * n as f64 * (1.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn pipelined_latency_pays_every_layer() {
+        // Invariant: the chain improves the initiation interval, never
+        // the single-batch end-to-end latency — a batch still crosses
+        // every encoder layer; the steady-state window is bounded below
+        // by the slowest EDPU's per-layer time.
+        let plan = small_plan();
+        let layers = plan.model.layers;
+        let per_layer = run_edpu(&plan, 4).unwrap().makespan_ns();
+        for n in [1usize, 2, 3, 5] {
+            let r = run_multi_edpu(&plan, n, 4, MultiEdpuMode::Pipelined).unwrap();
+            let full = per_layer * layers as f64;
+            assert!(
+                (r.latency_ns - full).abs() <= 1e-9 * full,
+                "n={n}: latency {} != {}",
+                r.latency_ns,
+                full
+            );
+            let window = per_layer * layers.div_ceil(n) as f64;
+            assert!(
+                (r.makespan_ns - window).abs() <= 1e-9 * window,
+                "n={n}: window {} != {window}",
+                r.makespan_ns
+            );
+            assert!(r.makespan_ns >= per_layer * (1.0 - 1e-9));
+        }
+    }
+
+    #[test]
+    fn budget_rejection_is_clean_and_matches_max_deployable() {
+        let big = customize(
+            &ModelConfig::bert_base(),
+            &HardwareConfig::vck5000(),
+            &CustomizeOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(max_deployable(&big), 1);
+        let err = run_multi_edpu(&big, 2, 8, MultiEdpuMode::Parallel).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("exceed"), "unexpected error text: {msg}");
+
+        let small = small_plan();
+        let max_n = max_deployable(&small);
+        assert_eq!(max_n, small.hw.total_aie / small.cores_deployed());
+        assert!(run_multi_edpu(&small, max_n, 4, MultiEdpuMode::Parallel).is_ok());
+        assert!(run_multi_edpu(&small, max_n + 1, 4, MultiEdpuMode::Parallel).is_err());
     }
 }

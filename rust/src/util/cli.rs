@@ -101,4 +101,64 @@ mod tests {
         let a = parse_strs(&["x", "--k=v"], &[]);
         assert_eq!(a.opt("k"), Some("v"));
     }
+
+    #[test]
+    fn unknown_valued_flag_keeps_its_argument_positional() {
+        // "--mystery" is not in the valued list: it parses as a boolean
+        // flag and "payload" stays a positional, not a swallowed value.
+        let a = parse_strs(&["run", "--mystery", "payload"], &[]);
+        assert!(a.flag("mystery"));
+        assert_eq!(a.opt("mystery"), None);
+        assert_eq!(a.positional, vec!["payload"]);
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree_for_valued_options() {
+        let valued = &["model"];
+        let a = parse_strs(&["x", "--model", "bert-base"], valued);
+        let b = parse_strs(&["x", "--model=bert-base"], valued);
+        assert_eq!(a.opt("model"), Some("bert-base"));
+        assert_eq!(a.opt("model"), b.opt("model"));
+        assert_eq!(a.positional, b.positional);
+    }
+
+    #[test]
+    fn repeated_options_last_wins_and_flags_accumulate() {
+        let a = parse_strs(
+            &["x", "--batch", "8", "--batch", "16", "--v", "--v"],
+            &["batch"],
+        );
+        assert_eq!(a.opt_usize("batch", 0), 16);
+        assert!(a.flag("v"));
+        assert_eq!(a.flags.iter().filter(|f| f.as_str() == "v").count(), 2);
+        // equals form also overrides an earlier space form
+        let b = parse_strs(&["x", "--hw", "vck190", "--hw=vck5000"], &["hw"]);
+        assert_eq!(b.opt("hw"), Some("vck5000"));
+    }
+
+    #[test]
+    fn trailing_valued_flag_without_value_degrades_to_flag() {
+        let a = parse_strs(&["x", "--model"], &["model"]);
+        assert!(a.flag("model"));
+        assert_eq!(a.opt("model"), None);
+    }
+
+    #[test]
+    fn explore_style_flag_mix() {
+        // the `cat explore` surface: several new valued flags + --json
+        let a = parse_strs(
+            &[
+                "explore", "--model", "bert-base", "--max-cores", "64",
+                "--slo-ms", "0.5", "--budget=128", "--json",
+            ],
+            &["model", "hw", "max-cores", "slo-ms", "budget"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("explore"));
+        assert_eq!(a.opt("model"), Some("bert-base"));
+        assert_eq!(a.opt_usize("max-cores", 0), 64);
+        assert!((a.opt_f64("slo-ms", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(a.opt_usize("budget", 0), 128);
+        assert!(a.flag("json"));
+        assert!(a.positional.is_empty());
+    }
 }
