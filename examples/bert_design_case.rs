@@ -42,7 +42,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- Eq. 7: P_ATB ---
     let p_atb = eq7_p_atb(&model, mmsz, plio).unwrap();
-    println!("Eq.7: P_ATB    = {p_atb}   (paper: 4 — QKV LB outputs 256x256, one head needs 256x64)");
+    println!(
+        "Eq.7: P_ATB    = {p_atb}   (paper: 4 — QKV LB outputs 256x256, one head needs 256x64)"
+    );
     assert_eq!(p_atb, 4);
 
     // --- Eq. 5: parallel mode ---

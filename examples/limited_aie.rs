@@ -17,7 +17,10 @@ fn main() -> anyhow::Result<()> {
     let model = ModelConfig::bert_base();
 
     println!("sweeping the AIE budget (simulating different Versal parts):\n");
-    println!("{:>6} {:>14} {:>10} {:>12} {:>12} {:>10}", "AIEs", "mode", "ms/item", "TOPS", "GOPS/AIE", "GOPS/W");
+    println!(
+        "{:>6} {:>14} {:>10} {:>12} {:>12} {:>10}",
+        "AIEs", "mode", "ms/item", "TOPS", "GOPS/AIE", "GOPS/W"
+    );
     for aies in [400usize, 256, 128, 64, 16] {
         let hw = HardwareConfig::vck5000_limited(aies);
         let plan = customize(&model, &hw, &CustomizeOptions::default())?;

@@ -23,7 +23,7 @@ use std::collections::BTreeMap;
 use cat::config::{HardwareConfig, ModelConfig};
 use cat::customize::{customize, CustomizeOptions};
 use cat::dse::{ExploreConfig, SpaceSpec};
-use cat::sched::{build_mha_pipelined, reset_stage_cache, run_edpu, run_stage, MultiEdpuMode, Stage};
+use cat::sched::{build_mha_pipelined, reset_stage_cache, run_edpu, run_stage, Stage};
 use cat::sim;
 use cat::util::bench::{bench, bench_doc, black_box, write_json, Stats};
 use cat::util::cli;
@@ -125,19 +125,7 @@ fn main() {
     //     every iteration pays the real design-point simulations ---
     let mut dse_cfg = ExploreConfig::new(model.clone(), hw.clone());
     dse_cfg.sample_budget = None;
-    dse_cfg.space = SpaceSpec {
-        independent_linear: vec![true],
-        mha_modes: vec![None],
-        ffn_modes: vec![None],
-        p_atb: vec![4],
-        batches: vec![4],
-        edpu_budgets: vec![400, 100, 64],
-        deployments: vec![
-            (1, MultiEdpuMode::Parallel),
-            (2, MultiEdpuMode::Parallel),
-            (3, MultiEdpuMode::Parallel),
-        ],
-    };
+    dse_cfg.space = SpaceSpec::compact_9pt();
     let mut dse_points = 0usize;
     let dse_med = run_row("dse/explore_9pt_space", 1, 5, &mut || {
         reset_stage_cache();
@@ -150,6 +138,33 @@ fn main() {
     println!(
         "\n  dse: {dse_points} design points evaluated per pass \
          ({dse_points_per_sec:.1} points/s cold-cache)"
+    );
+
+    // --- serve row: SLO-aware fleet routing over a pinned 2-backend
+    //     family (service profiles pre-simulated once; the timed loop is
+    //     pure virtual-clock routing/admission — the serving hot path) ---
+    let explored = cat::dse::explore(&dse_cfg).unwrap();
+    let mut serve_cfg = cat::serve::FleetConfig::new(model.clone(), hw.clone());
+    serve_cfg.rps = 2000.0;
+    serve_cfg.slo_ms = 50.0;
+    serve_cfg.n_requests = if smoke { 512 } else { 4096 };
+    serve_cfg.max_batch = 8;
+    serve_cfg.seed = 7;
+    let serve_fleet =
+        cat::serve::Fleet::select(&model, &hw, &explored, 2, serve_cfg.max_batch).unwrap();
+    let mut serve_shed_rate = 0.0;
+    let serve_med = run_row("serve/fleet_2backend_route", 2, 20, &mut || {
+        let r = cat::serve::serve_fleet_on(&serve_cfg, &serve_fleet).unwrap();
+        serve_shed_rate = r.admission.shed_rate();
+        black_box(r);
+    })
+    .median_ns();
+    let serve_reqs_per_sec = serve_cfg.n_requests as f64 / (serve_med / 1e9).max(1e-12);
+    println!(
+        "  serve: {} requests routed per pass across {} backends \
+         ({serve_reqs_per_sec:.0} req/s driver throughput, shed rate {serve_shed_rate:.3})",
+        serve_cfg.n_requests,
+        serve_fleet.len(),
     );
 
     // PJRT hot path (needs artifacts)
@@ -195,6 +210,11 @@ fn main() {
             Json::Num((dse_points_per_sec * 10.0).round() / 10.0),
         );
         derived.insert("dse_points_evaluated".to_string(), Json::Num(dse_points as f64));
+        derived.insert(
+            "serve_router_reqs_per_sec".to_string(),
+            Json::Num(serve_reqs_per_sec.round()),
+        );
+        derived.insert("serve_shed_rate".to_string(), Json::Num(serve_shed_rate));
         derived.insert("smoke".to_string(), Json::Bool(smoke));
         derived.insert(
             "regenerate".to_string(),

@@ -46,9 +46,30 @@ impl PuSpec {
     /// The paper's VCK5000 catalog (Fig. 4, `PLIO_AIE = 4`).
     pub fn catalog() -> Vec<PuSpec> {
         vec![
-            PuSpec { class: PuClass::Large, tiles_m: 4, tiles_n: 4, tiles_k: 4, in_plio: 8, out_plio: 4 },
-            PuSpec { class: PuClass::Standard, tiles_m: 2, tiles_n: 2, tiles_k: 4, in_plio: 4, out_plio: 1 },
-            PuSpec { class: PuClass::Small, tiles_m: 1, tiles_n: 1, tiles_k: 4, in_plio: 2, out_plio: 1 },
+            PuSpec {
+                class: PuClass::Large,
+                tiles_m: 4,
+                tiles_n: 4,
+                tiles_k: 4,
+                in_plio: 8,
+                out_plio: 4,
+            },
+            PuSpec {
+                class: PuClass::Standard,
+                tiles_m: 2,
+                tiles_n: 2,
+                tiles_k: 4,
+                in_plio: 4,
+                out_plio: 1,
+            },
+            PuSpec {
+                class: PuClass::Small,
+                tiles_m: 1,
+                tiles_n: 1,
+                tiles_k: 4,
+                in_plio: 2,
+                out_plio: 1,
+            },
         ]
     }
 
@@ -405,10 +426,15 @@ mod tests {
     fn stage_core_accounting() {
         // §V.C: 4 Large to LBs + per-ATB (2 Small + 1 Standard) x 4 = 352
         let lb = |kind| Prg { kind, atb_index: 0, pus: vec![(PuClass::Large, 1)] };
-        let mut prgs = vec![lb(PrgKind::QkvLb), lb(PrgKind::QLb), lb(PrgKind::KLb), lb(PrgKind::ProjLb)];
+        let mut prgs =
+            vec![lb(PrgKind::QkvLb), lb(PrgKind::QLb), lb(PrgKind::KLb), lb(PrgKind::ProjLb)];
         for i in 0..4 {
             prgs.push(Prg { kind: PrgKind::AtbPre, atb_index: i, pus: vec![(PuClass::Small, 2)] });
-            prgs.push(Prg { kind: PrgKind::AtbPost, atb_index: i, pus: vec![(PuClass::Standard, 1)] });
+            prgs.push(Prg {
+                kind: PrgKind::AtbPost,
+                atb_index: i,
+                pus: vec![(PuClass::Standard, 1)],
+            });
         }
         let stage = StagePlan { mode: ParallelMode::FullyPipelined, prgs };
         assert_eq!(stage.cores_deployed(), 4 * 64 + 4 * (2 * 4 + 16));

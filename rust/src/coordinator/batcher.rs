@@ -1,10 +1,12 @@
 //! Dynamic batcher: groups requests up to `max_batch` or until the oldest
 //! pending request has waited `timeout` (the host-side analogue of the
 //! EDPU batch loop — larger batches amortize pipeline fill, Fig. 5).
+//!
+//! Generic over the request type so the same staleness/flush logic serves
+//! both the PJRT [`Host`](super::Host) (`Batcher<Request>`) and the fleet
+//! coordinator's lightweight virtual-clock requests ([`crate::serve`]).
 
 use std::time::{Duration, Instant};
-
-use super::Request;
 
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
@@ -13,19 +15,19 @@ pub struct BatcherConfig {
 }
 
 /// Accumulates requests; emits a batch when full or stale.
-pub struct Batcher {
+pub struct Batcher<T> {
     cfg: BatcherConfig,
-    pending: Vec<(Request, Instant)>,
+    pending: Vec<(T, Instant)>,
 }
 
-impl Batcher {
-    pub fn new(cfg: BatcherConfig) -> Batcher {
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Batcher<T> {
         assert!(cfg.max_batch > 0, "max_batch must be positive");
         Batcher { cfg, pending: Vec::new() }
     }
 
     /// Add a request; returns a full batch if one is ready.
-    pub fn push(&mut self, req: Request, now: Instant) -> Option<Vec<(Request, Instant)>> {
+    pub fn push(&mut self, req: T, now: Instant) -> Option<Vec<(T, Instant)>> {
         self.pending.push((req, now));
         if self.pending.len() >= self.cfg.max_batch {
             return Some(std::mem::take(&mut self.pending));
@@ -55,7 +57,7 @@ impl Batcher {
     }
 
     /// Emit whatever is pending (stream end / timer tick).
-    pub fn flush(&mut self) -> Option<Vec<(Request, Instant)>> {
+    pub fn flush(&mut self) -> Option<Vec<(T, Instant)>> {
         if self.pending.is_empty() {
             None
         } else {
@@ -71,6 +73,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Request;
     use crate::runtime::Tensor;
 
     fn req(id: u64) -> Request {
@@ -123,7 +126,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "max_batch")]
     fn zero_batch_rejected() {
-        Batcher::new(BatcherConfig { max_batch: 0, timeout: Duration::ZERO });
+        Batcher::<Request>::new(BatcherConfig { max_batch: 0, timeout: Duration::ZERO });
     }
 
     #[test]

@@ -14,12 +14,12 @@
 //!   plan is attached, the *simulated board* latency for each batch.
 
 mod batcher;
+mod pool;
 
 pub use batcher::{Batcher, BatcherConfig};
+pub use pool::{Executor, ExecutorFactory, WorkerPool};
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::arch::AcceleratorPlan;
@@ -135,25 +135,21 @@ impl HostConfig {
     }
 }
 
-struct Shared {
-    queue: Mutex<VecDeque<(Vec<(Request, Instant)>, usize)>>,
-    available: Condvar,
-    done: Mutex<Vec<Response>>,
-    /// Signaled (paired with `done`) whenever a worker completes a
-    /// request or records an error, so `drain` wakes immediately instead
-    /// of sleep-polling.
-    completed: Condvar,
-    stop: AtomicBool,
-    errors: Mutex<Vec<String>>,
-}
+/// One queued unit of EDPU work: the batch and its size.
+type BatchJob = (Vec<(Request, Instant)>, usize);
 
 /// The HOST: accepts requests, batches them, runs them on the EDPU pool.
+///
+/// The thread/queue/shutdown machinery lives in the generic
+/// [`WorkerPool`]; `Host` contributes the PJRT executor (one runtime +
+/// pre-compiled variant + synthetic weights per worker) and the batching
+/// front end.
 pub struct Host {
     cfg: HostConfig,
-    shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
-    batcher: Batcher,
+    pool: WorkerPool<BatchJob, Response>,
+    batcher: Batcher<Request>,
     submitted: u64,
+    batches_dispatched: usize,
     started: Instant,
 }
 
@@ -162,35 +158,53 @@ impl Host {
     /// pre-compiles the model variant, so serving latency excludes
     /// compilation.
     pub fn start(cfg: HostConfig) -> Result<Host> {
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
-            done: Mutex::new(Vec::new()),
-            completed: Condvar::new(),
-            stop: AtomicBool::new(false),
-            errors: Mutex::new(Vec::new()),
+        let wcfg = cfg.clone();
+        let factory: ExecutorFactory<BatchJob, Response> = Arc::new(move |_wid| {
+            let cfg = wcfg.clone();
+            let mut rt =
+                Runtime::open(&cfg.artifact_dir).map_err(|e| anyhow!("runtime open: {e}"))?;
+            rt.compile(&cfg.variant).map_err(|e| anyhow!("compile: {e}"))?;
+            let weights: Vec<EncoderWeights> = (0..cfg.layers)
+                .map(|i| {
+                    EncoderWeights::synthetic(&cfg.model, cfg.weight_seed.wrapping_add(i as u64))
+                })
+                .collect();
+            Ok(Box::new(move |(batch, batch_size): BatchJob| {
+                // simulated board latency for this batch (once per batch;
+                // the stage-sim cache makes repeats of the same batch
+                // size free)
+                let sim_ns = cfg
+                    .plan
+                    .as_ref()
+                    .and_then(|p| sched::run_edpu(p, batch_size).ok())
+                    .map(|r| r.makespan_ns() * cfg.layers as f64);
+                let mut out = Vec::with_capacity(batch.len());
+                for (req, enq) in batch {
+                    let output = rt
+                        .encoder_forward(&cfg.variant, req.x_q.clone(), req.x_scale, &weights)
+                        .map_err(|e| anyhow!("req {}: {e}", req.id))?;
+                    out.push(Response {
+                        id: req.id,
+                        output,
+                        latency: enq.elapsed(),
+                        batch_size,
+                        simulated_batch_ns: sim_ns,
+                    });
+                }
+                Ok(out)
+            }) as Executor<BatchJob, Response>)
         });
-        let mut workers = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
-            let sh = Arc::clone(&shared);
-            let cfg2 = cfg.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("edpu-{wid}"))
-                    .spawn(move || worker_loop(wid, cfg2, sh))
-                    .map_err(|e| anyhow!("spawning worker: {e}"))?,
-            );
-        }
+        let pool = WorkerPool::start("edpu", cfg.workers.max(1), factory)?;
         let batcher = Batcher::new(BatcherConfig {
             max_batch: cfg.max_batch,
             timeout: cfg.batch_timeout,
         });
         Ok(Host {
             cfg,
-            shared,
-            workers,
+            pool,
             batcher,
             submitted: 0,
+            batches_dispatched: 0,
             started: Instant::now(),
         })
     }
@@ -234,163 +248,44 @@ impl Host {
         self.batcher.pending_len()
     }
 
-    fn dispatch(&self, batch: Vec<(Request, Instant)>) {
+    fn dispatch(&mut self, batch: Vec<(Request, Instant)>) {
         let n = batch.len();
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back((batch, n));
-        drop(q);
-        self.shared.available.notify_one();
+        self.batches_dispatched += 1;
+        self.pool.submit((batch, n));
     }
 
     /// Wait until every submitted request has completed; returns all
     /// responses (sorted by id) and the serving stats.
     ///
-    /// §Perf: completion is condvar-driven (workers signal `completed`),
+    /// §Perf: completion is condvar-driven ([`WorkerPool::wait_for_results`]),
     /// not a 1 ms sleep-poll.  The initial `flush()` empties the batcher
     /// and `drain` consumes the host, so no batch can go stale during the
     /// wait — timeout-driven flushing on a live request stream is
     /// [`Host::poll`]'s job (its wait budget comes from
-    /// [`Batcher::time_until_stale`]).  The wait timeout here is only a
-    /// backstop for the error path's separate mutex.
+    /// [`Batcher::time_until_stale`]).
     pub fn drain(mut self) -> Result<(Vec<Response>, ServeStats)> {
         self.flush();
-        {
-            let mut done = self.shared.done.lock().unwrap();
-            loop {
-                if done.len() as u64 >= self.submitted {
-                    break;
-                }
-                // On a worker error, break (not return): the shutdown
-                // below must still run so surviving workers are joined
-                // rather than leaked; the post-join error check reports.
-                if !self.shared.errors.lock().unwrap().is_empty() {
-                    break;
-                }
-                done = self
-                    .shared
-                    .completed
-                    .wait_timeout(done, Duration::from_millis(50))
-                    .unwrap()
-                    .0;
-            }
-        }
-        // Set stop under the queue lock: a worker checks `stop` while
-        // holding that lock before waiting, so the notify below can never
-        // slip between its check and its wait.
-        {
-            let _q = self.shared.queue.lock().unwrap();
-            self.shared.stop.store(true, Ordering::SeqCst);
-        }
-        self.shared.available.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-        let mut out = std::mem::take(&mut *self.shared.done.lock().unwrap());
+        self.pool.wait_for_results(self.submitted as usize);
+        let batches = self.batches_dispatched;
+        let wall = self.started.elapsed();
+        let mut out = self.pool.shutdown()?;
         out.sort_by_key(|r| r.id);
         let stats = ServeStats {
             completed: out.len(),
-            batches: out.iter().map(|r| (r.id, r.batch_size)).fold(
-                std::collections::BTreeSet::new(),
-                |mut s, (id, b)| {
-                    // count batches by their first member id bucket
-                    s.insert(id / b.max(1) as u64 * b.max(1) as u64);
-                    s
-                },
-            )
-            .len(),
+            batches,
             latencies: {
                 // sorted once here so every percentile() call is O(1)
                 let mut v: Vec<Duration> = out.iter().map(|r| r.latency).collect();
                 v.sort_unstable();
                 v
             },
-            wall: self.started.elapsed(),
+            wall,
         };
-        let errs = self.shared.errors.lock().unwrap();
-        if !errs.is_empty() {
-            return Err(anyhow!("worker error: {}", errs.join("; ")));
-        }
         Ok((out, stats))
     }
 
     pub fn config(&self) -> &HostConfig {
         &self.cfg
-    }
-}
-
-fn worker_loop(_wid: usize, cfg: HostConfig, sh: Arc<Shared>) {
-    let fail = |sh: &Shared, msg: String| {
-        sh.errors.lock().unwrap().push(msg);
-        // wake drain() so the error surfaces immediately
-        sh.completed.notify_all();
-    };
-    let mut rt = match Runtime::open(&cfg.artifact_dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            fail(&sh, format!("runtime open: {e}"));
-            return;
-        }
-    };
-    if let Err(e) = rt.compile(&cfg.variant) {
-        fail(&sh, format!("compile: {e}"));
-        return;
-    }
-    let weights: Vec<EncoderWeights> = (0..cfg.layers)
-        .map(|i| EncoderWeights::synthetic(&cfg.model, cfg.weight_seed.wrapping_add(i as u64)))
-        .collect();
-
-    loop {
-        // Idle workers park on the `available` condvar until a batch is
-        // queued or stop is raised (raised under this same lock, so the
-        // notify cannot be missed).  The long timeout is a belt-and-braces
-        // re-check, not a polling cadence — §Perf: idle workers no longer
-        // wake 50 times a second.
-        let job = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if let Some(j) = q.pop_front() {
-                    break Some(j);
-                }
-                if sh.stop.load(Ordering::SeqCst) {
-                    break None;
-                }
-                q = sh.available.wait_timeout(q, Duration::from_millis(500)).unwrap().0;
-            }
-        };
-        let Some((batch, batch_size)) = job else { return };
-
-        // simulated board latency for this batch (once per batch; the
-        // stage-sim cache makes repeats of the same batch size free)
-        let sim_ns = cfg
-            .plan
-            .as_ref()
-            .and_then(|p| sched::run_edpu(p, batch_size).ok())
-            .map(|r| r.makespan_ns() * cfg.layers as f64);
-
-        for (req, enq) in batch {
-            let result = rt.encoder_forward(
-                &cfg.variant,
-                req.x_q.clone(),
-                req.x_scale,
-                &weights,
-            );
-            match result {
-                Ok(output) => {
-                    sh.done.lock().unwrap().push(Response {
-                        id: req.id,
-                        output,
-                        latency: enq.elapsed(),
-                        batch_size,
-                        simulated_batch_ns: sim_ns,
-                    });
-                    sh.completed.notify_all();
-                }
-                Err(e) => {
-                    fail(&sh, format!("req {}: {e}", req.id));
-                    return;
-                }
-            }
-        }
     }
 }
 

@@ -1,0 +1,267 @@
+//! Generic HOST worker-pool machinery, extracted from [`Host`](super::Host)
+//! so the fleet coordinator can multi-instantiate pools (or bypass threads
+//! entirely) without paying for a PJRT runtime per logical backend.
+//!
+//! The pool owns the concurrency-sensitive pieces the PR 1 rework tuned:
+//!
+//! * idle workers park on a condvar (no polling cadence) with a long
+//!   belt-and-braces re-check timeout;
+//! * the stop flag is raised **under the queue lock**, so the shutdown
+//!   notify can never slip between a worker's stop check and its wait
+//!   (the missed-wakeup race);
+//! * workers drain the queue before honoring stop, so every job submitted
+//!   before [`WorkerPool::shutdown`] still completes;
+//! * result completion is signaled on a second condvar so
+//!   [`WorkerPool::wait_for_results`] wakes immediately instead of
+//!   sleep-polling.
+//!
+//! What runs inside a worker is the caller's business: an
+//! [`ExecutorFactory`] builds one [`Executor`] per worker thread, and the
+//! expensive per-worker state (a PJRT runtime, pre-compiled executables,
+//! synthetic weights) lives in that closure.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+/// Per-worker job executor: consumes one job and returns the results it
+/// produced (a job may yield several — e.g. one response per request of a
+/// batch).  An error poisons the pool: the worker records it and exits,
+/// and [`WorkerPool::shutdown`] surfaces it.
+pub type Executor<J, R> = Box<dyn FnMut(J) -> Result<Vec<R>> + Send>;
+
+/// Builds one [`Executor`] per worker thread (the worker index is passed
+/// for naming/sharding).  Returning an error marks the pool failed
+/// without panicking the thread.
+pub type ExecutorFactory<J, R> = Arc<dyn Fn(usize) -> Result<Executor<J, R>> + Send + Sync>;
+
+struct Shared<J, R> {
+    queue: Mutex<VecDeque<J>>,
+    available: Condvar,
+    done: Mutex<Vec<R>>,
+    /// Signaled (paired with `done`) whenever a worker completes a job or
+    /// records an error, so waiters wake immediately.
+    completed: Condvar,
+    stop: AtomicBool,
+    errors: Mutex<Vec<String>>,
+}
+
+/// A fixed set of worker threads pulling jobs from a shared queue.
+pub struct WorkerPool<J: Send + 'static, R: Send + 'static> {
+    shared: Arc<Shared<J, R>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
+    /// Spawn `workers.max(1)` threads named `{name}-{i}`, each running the
+    /// executor its factory call builds.
+    pub fn start(name: &str, workers: usize, factory: ExecutorFactory<J, R>) -> Result<Self> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            done: Mutex::new(Vec::new()),
+            completed: Condvar::new(),
+            stop: AtomicBool::new(false),
+            errors: Mutex::new(Vec::new()),
+        });
+        let mut handles = Vec::new();
+        for wid in 0..workers.max(1) {
+            let sh = Arc::clone(&shared);
+            let factory = Arc::clone(&factory);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-{wid}"))
+                    .spawn(move || worker_loop(wid, factory, sh))
+                    .map_err(|e| anyhow!("spawning worker: {e}"))?,
+            );
+        }
+        Ok(WorkerPool { shared, workers: handles })
+    }
+
+    /// Enqueue one job (non-blocking) and wake an idle worker.
+    pub fn submit(&self, job: J) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(job);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Results collected so far.
+    pub fn results_len(&self) -> usize {
+        self.shared.done.lock().unwrap().len()
+    }
+
+    /// True once any worker has recorded an error.
+    pub fn has_errors(&self) -> bool {
+        !self.shared.errors.lock().unwrap().is_empty()
+    }
+
+    /// Block until at least `n` results exist or a worker errored.
+    ///
+    /// §Perf: condvar-driven (workers signal `completed`), not a sleep
+    /// poll; the wait timeout is only a backstop for the error path's
+    /// separate mutex.
+    pub fn wait_for_results(&self, n: usize) {
+        let mut done = self.shared.done.lock().unwrap();
+        loop {
+            if done.len() >= n {
+                return;
+            }
+            // On a worker error, return (not hang): the caller's shutdown
+            // still joins the surviving workers and reports the error.
+            if self.has_errors() {
+                return;
+            }
+            done = self
+                .shared
+                .completed
+                .wait_timeout(done, Duration::from_millis(50))
+                .unwrap()
+                .0;
+        }
+    }
+
+    /// Stop the pool: raise the stop flag (under the queue lock — see the
+    /// module docs), join every worker, and return all results.  Jobs
+    /// already queued are completed first; worker errors surface as `Err`.
+    pub fn shutdown(mut self) -> Result<Vec<R>> {
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.stop.store(true, Ordering::SeqCst);
+        }
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let out = std::mem::take(&mut *self.shared.done.lock().unwrap());
+        let errs = self.shared.errors.lock().unwrap();
+        if !errs.is_empty() {
+            return Err(anyhow!("worker error: {}", errs.join("; ")));
+        }
+        Ok(out)
+    }
+}
+
+fn worker_loop<J: Send, R: Send>(
+    wid: usize,
+    factory: ExecutorFactory<J, R>,
+    sh: Arc<Shared<J, R>>,
+) {
+    let fail = |sh: &Shared<J, R>, msg: String| {
+        sh.errors.lock().unwrap().push(msg);
+        // wake any waiter so the error surfaces immediately
+        sh.completed.notify_all();
+    };
+    let mut exec = match factory(wid) {
+        Ok(e) => e,
+        Err(e) => {
+            fail(&sh, format!("{e}"));
+            return;
+        }
+    };
+    loop {
+        // Idle workers park on `available` until a job is queued or stop
+        // is raised (raised under this same lock, so the notify cannot be
+        // missed).  Jobs are drained before stop is honored.
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if sh.stop.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = sh.available.wait_timeout(q, Duration::from_millis(500)).unwrap().0;
+            }
+        };
+        let Some(job) = job else { return };
+        match exec(job) {
+            Ok(results) => {
+                let mut done = sh.done.lock().unwrap();
+                done.extend(results);
+                drop(done);
+                sh.completed.notify_all();
+            }
+            Err(e) => {
+                fail(&sh, format!("{e}"));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_factory() -> ExecutorFactory<u64, u64> {
+        Arc::new(|_wid| Ok(Box::new(|j: u64| Ok(vec![j])) as Executor<u64, u64>))
+    }
+
+    #[test]
+    fn completes_all_jobs_and_returns_them() {
+        let pool = WorkerPool::start("t", 3, echo_factory()).unwrap();
+        for j in 0..50u64 {
+            pool.submit(j);
+        }
+        pool.wait_for_results(50);
+        let mut out = pool.shutdown().unwrap();
+        out.sort_unstable();
+        assert_eq!(out, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_without_jobs_is_prompt() {
+        let pool = WorkerPool::<u64, u64>::start("t", 4, echo_factory()).unwrap();
+        assert_eq!(pool.results_len(), 0);
+        assert!(pool.shutdown().unwrap().is_empty());
+    }
+
+    #[test]
+    fn queued_jobs_survive_immediate_shutdown() {
+        // stop is only honored once the queue is empty, so jobs submitted
+        // before shutdown all complete even with no wait_for_results.
+        let pool = WorkerPool::start("t", 2, echo_factory()).unwrap();
+        for j in 0..20u64 {
+            pool.submit(j);
+        }
+        let mut out = pool.shutdown().unwrap();
+        out.sort_unstable();
+        assert_eq!(out.len(), 20);
+    }
+
+    #[test]
+    fn executor_error_poisons_the_pool() {
+        let factory: ExecutorFactory<u64, u64> = Arc::new(|_wid| {
+            Ok(Box::new(|j: u64| {
+                if j == 3 {
+                    Err(anyhow!("boom on {j}"))
+                } else {
+                    Ok(vec![j])
+                }
+            }) as Executor<u64, u64>)
+        });
+        let pool = WorkerPool::start("t", 1, factory).unwrap();
+        for j in 0..5u64 {
+            pool.submit(j);
+        }
+        pool.wait_for_results(5); // returns early on the error
+        let err = pool.shutdown().unwrap_err();
+        assert!(format!("{err}").contains("worker error"), "{err}");
+    }
+
+    #[test]
+    fn factory_error_poisons_the_pool() {
+        let factory: ExecutorFactory<u64, u64> =
+            Arc::new(|wid| Err(anyhow!("init failed on {wid}")));
+        let pool = WorkerPool::start("t", 2, factory).unwrap();
+        pool.submit(1);
+        pool.wait_for_results(1);
+        assert!(pool.has_errors());
+        assert!(pool.shutdown().is_err());
+    }
+}

@@ -158,6 +158,30 @@ impl ExploreResult {
     }
 }
 
+/// Frontier → deployable-backend conversion: re-derive the
+/// [`AcceleratorPlan`] for one candidate on `board` by customizing
+/// against the candidate's per-EDPU AIE budget, then swapping the full
+/// board back in (the budget caps the EDPU, the board hosts it — so the
+/// multi-EDPU budget check and the power model see the real part).
+///
+/// [`explore`] runs every candidate through this; the serving fleet
+/// ([`crate::serve`]) uses it to turn selected frontier points back into
+/// executable plans.
+pub fn deploy_plan(
+    model: &ModelConfig,
+    board: &HardwareConfig,
+    cand: &Candidate,
+) -> Result<AcceleratorPlan> {
+    let mut edpu_hw = board.clone();
+    if cand.edpu_budget < edpu_hw.total_aie {
+        edpu_hw.total_aie = cand.edpu_budget;
+        edpu_hw.name = format!("{}-edpu-{}", board.name, cand.edpu_budget);
+    }
+    let mut plan = customize(model, &edpu_hw, &cand.opts)?;
+    plan.hw = board.clone();
+    Ok(plan)
+}
+
 /// Run one exploration: enumerate/sample → customize+prune → simulate in
 /// parallel → select the frontier.
 pub fn explore(cfg: &ExploreConfig) -> Result<ExploreResult> {
@@ -191,19 +215,13 @@ pub fn explore(cfg: &ExploreConfig) -> Result<ExploreResult> {
     for idx in indices {
         let cand = space.candidate(idx);
         // customize against the per-EDPU budget, deploy on the board
-        let mut edpu_hw = board.clone();
-        if cand.edpu_budget < edpu_hw.total_aie {
-            edpu_hw.total_aie = cand.edpu_budget;
-            edpu_hw.name = format!("{}-edpu-{}", board.name, cand.edpu_budget);
-        }
-        let mut plan = match customize(&cfg.model, &edpu_hw, &cand.opts) {
+        let plan = match deploy_plan(&cfg.model, &board, &cand) {
             Ok(p) => p,
             Err(_) => {
                 stats.customize_rejected += 1;
                 continue;
             }
         };
-        plan.hw = board.clone();
         match check_budgets(&plan, &board, cand.n_edpu) {
             Ok(()) => survivors.push((cand, plan)),
             Err(Reject::Aie) => stats.aie_rejected += 1,

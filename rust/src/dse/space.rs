@@ -78,6 +78,27 @@ impl SpaceSpec {
         }
     }
 
+    /// The compact 9-point fixture shared by the hotpath bench's
+    /// `dse/explore_9pt_space` row, the serve property tests, and the
+    /// fleet unit tests: three per-EDPU budgets × up to three parallel
+    /// EDPU instances, everything else pinned to the Eq. 3–8 defaults.
+    /// One definition keeps bench and tests sweeping the same space.
+    pub fn compact_9pt() -> Self {
+        SpaceSpec {
+            independent_linear: vec![true],
+            mha_modes: vec![None],
+            ffn_modes: vec![None],
+            p_atb: vec![4],
+            batches: vec![4],
+            edpu_budgets: vec![400, 100, 64],
+            deployments: vec![
+                (1, MultiEdpuMode::Parallel),
+                (2, MultiEdpuMode::Parallel),
+                (3, MultiEdpuMode::Parallel),
+            ],
+        }
+    }
+
     /// Number of points in the space (product of the domain sizes).
     pub fn size(&self) -> usize {
         self.independent_linear.len()

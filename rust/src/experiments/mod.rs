@@ -143,6 +143,16 @@ pub fn explore(
     crate::dse::explore(&cfg)
 }
 
+/// EXP-SERVE — the `cat serve --rps` driver: derive a Pareto frontier
+/// for the pair in-process, deploy up to `cfg.max_backends` family
+/// members, and route `cfg.n_requests` seeded Poisson arrivals across
+/// them with SLO-aware admission ([`serve`](crate::serve)).  Fully
+/// deterministic for a fixed `cfg.seed` — the report's JSON is
+/// byte-identical across runs and thread counts.
+pub fn serve_fleet(cfg: &crate::serve::FleetConfig) -> Result<crate::serve::FleetReport> {
+    crate::serve::serve_fleet(cfg)
+}
+
 /// EXP-O1 — Observation 1: serial vs pipelined send/compute/receive on
 /// the PL side.  Returns (serial_ns, pipelined_ns).
 pub fn obs1_times() -> Result<(f64, f64)> {

@@ -16,6 +16,8 @@
 //! * [`baselines`] — CHARM/SSR-style and published GPU/FPGA comparators;
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas encoder;
 //! * [`coordinator`] — HOST-side request batching over an EDPU pool;
+//! * [`serve`] — SLO-aware fleet serving across an explore-derived
+//!   accelerator family (virtual-clock routing + admission control);
 //! * [`report`] — renderers for every paper table/figure.
 //!
 //! See DESIGN.md for the substitution map (real board → simulator) and
@@ -33,6 +35,7 @@ pub mod metrics;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workload;

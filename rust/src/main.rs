@@ -23,7 +23,7 @@ use cat::util::cli;
 
 const VALUED: &[&str] = &[
     "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
-    "max-cores", "slo-ms", "budget",
+    "max-cores", "slo-ms", "budget", "rps", "backends", "queue-cap",
 ];
 
 fn main() {
@@ -67,6 +67,11 @@ subcommands:
   verify [--artifacts <dir>]                check PJRT numerics end to end
   serve [--requests N] [--batch B] [--layers L] [--workers W]
                                             serve batched requests (PJRT)
+  serve --rps <r> --slo-ms <x> [--model <m>] [--hw <h>] [--backends K]
+        [--requests N] [--batch B] [--queue-cap Q] [--budget K]
+        [--seed S] [--json]                 SLO-aware fleet serving across
+                                            an explore-derived accelerator
+                                            family (virtual clock)
   codegen --model <m> --hw <h> [--json]     emit the AIE graph design
 models: bert-base | vit-base | <path>.json
 hardware: vck5000 | vck190 | vck5000-limited-<n> | <path>.json
@@ -233,9 +238,11 @@ fn cmd_verify(args: &cli::Args) -> Result<()> {
     let w = EncoderWeights::synthetic(&model, 7);
 
     println!("running encoder_layer_fused ...");
-    let (f_fused, q_fused, s_fused) = rt.encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &w)?;
+    let (f_fused, q_fused, s_fused) =
+        rt.encoder_layer("encoder_layer_fused", &req.x_q, req.x_scale, &w)?;
     println!("running encoder_layer_pallas (EDPU-tiled) ...");
-    let (f_pal, q_pal, s_pal) = rt.encoder_layer("encoder_layer_pallas", &req.x_q, req.x_scale, &w)?;
+    let (f_pal, q_pal, s_pal) =
+        rt.encoder_layer("encoder_layer_pallas", &req.x_q, req.x_scale, &w)?;
 
     let a = f_fused.as_f32()?;
     let b = f_pal.as_f32()?;
@@ -294,6 +301,11 @@ fn cmd_verify(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &cli::Args) -> Result<()> {
+    // --rps selects the fleet path (virtual-clock, frontier-backed);
+    // without it `serve` keeps its original single-host PJRT meaning.
+    if args.opt("rps").is_some() {
+        return cmd_serve_fleet(args);
+    }
     let model = model_of(args)?;
     let hw = hw_of(args)?;
     let n_requests = args.opt_usize("requests", 16);
@@ -317,7 +329,10 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     let (responses, stats) = host.drain()?;
     println!("  completed     : {}", stats.completed);
     println!("  wall time     : {:.2?}", stats.wall);
-    println!("  throughput    : {:.2} req/s (host CPU, interpret-mode XLA)", stats.throughput_rps());
+    println!(
+        "  throughput    : {:.2} req/s (host CPU, interpret-mode XLA)",
+        stats.throughput_rps()
+    );
     println!("  p50 latency   : {:.2?}", stats.percentile(0.5));
     println!("  p99 latency   : {:.2?}", stats.percentile(0.99));
     if let Some(sim) = responses.first().and_then(|r| r.simulated_batch_ns) {
@@ -326,6 +341,57 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
             sim / 1e6,
             args.opt_usize("layers", 2)
         );
+    }
+    Ok(())
+}
+
+fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
+    let model = model_of(args)?;
+    let hw = hw_of(args)?;
+    let mut cfg = cat::serve::FleetConfig::new(model, hw);
+    cfg.rps = args.opt_f64("rps", cfg.rps);
+    if cfg.rps <= 0.0 || cfg.rps.is_nan() {
+        return Err(anyhow!("--rps must be positive, got {}", cfg.rps));
+    }
+    cfg.slo_ms = args.opt_f64("slo-ms", cfg.slo_ms);
+    if cfg.slo_ms <= 0.0 || cfg.slo_ms.is_nan() {
+        return Err(anyhow!("--slo-ms must be positive, got {}", cfg.slo_ms));
+    }
+    cfg.n_requests = args.opt_usize("requests", cfg.n_requests);
+    cfg.max_backends = args.opt_usize("backends", cfg.max_backends);
+    if cfg.max_backends == 0 {
+        return Err(anyhow!("--backends must be positive"));
+    }
+    cfg.max_batch = args.opt_usize("batch", cfg.max_batch);
+    if cfg.max_batch == 0 {
+        return Err(anyhow!("--batch must be positive"));
+    }
+    cfg.queue_cap = args.opt_usize("queue-cap", cfg.queue_cap);
+    if cfg.queue_cap == 0 {
+        return Err(anyhow!("--queue-cap must be positive (0 would shed everything)"));
+    }
+    if let Some(s) = args.opt("seed") {
+        cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
+    }
+    if let Some(s) = args.opt("budget") {
+        cfg.explore_budget = if s == "all" {
+            None
+        } else {
+            match s.parse() {
+                Ok(k) if k > 0 => Some(k),
+                _ => {
+                    return Err(anyhow!(
+                        "--budget expects a positive integer or 'all', got '{s}'"
+                    ))
+                }
+            }
+        };
+    }
+    let r = experiments::serve_fleet(&cfg)?;
+    if args.flag("json") {
+        println!("{}", r.to_json());
+    } else {
+        print!("{}", report::serve_fleet(&r));
     }
     Ok(())
 }

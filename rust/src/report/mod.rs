@@ -245,6 +245,64 @@ pub fn explore(r: &crate::dse::ExploreResult) -> String {
     out
 }
 
+/// Render a fleet-serving report: one row per backend, then the
+/// fleet-level accounting (tail latencies, shed split, energy-weighted
+/// efficiency).
+pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
+    let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
+    let a = &r.admission;
+    let title = format!(
+        "CAT fleet serving — {} on {}: {} backend(s), {:.0} req/s offered, SLO {} ms, seed {}",
+        r.model, r.hw, r.n_backends, r.rps, r.slo_ms, r.seed,
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "BE", "EDPUs", "cores", "power(W)", "GOPS/W", "admitted", "batches", "mean b",
+            "util%", "p50(ms)", "p99(ms)",
+        ],
+    );
+    for b in &r.backends {
+        t.row(&[
+            b.id.to_string(),
+            format!("{}x{:?}", b.point.cand.n_edpu, b.point.cand.multi_mode),
+            b.point.total_cores.to_string(),
+            fmt_f(b.point.power_w, 1),
+            fmt_f(b.point.gops_per_w, 1),
+            b.admitted.to_string(),
+            b.stats.batches.to_string(),
+            fmt_f(b.stats.mean_batch(), 2),
+            fmt_f(b.utilization(r.wall_ns) * 100.0, 1),
+            fmt_f(ms(b.stats.percentile(0.50)), 3),
+            fmt_f(ms(b.stats.percentile(0.99)), 3),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "  {} submitted: {} completed, {} shed ({} SLO / {} capacity, rate {:.1}%)\n",
+        a.submitted,
+        a.completed,
+        a.shed(),
+        a.shed_slo,
+        a.shed_capacity,
+        a.shed_rate() * 100.0,
+    ));
+    let s = &r.fleet_stats;
+    out.push_str(&format!(
+        "  fleet p50/p95/p99: {:.3} / {:.3} / {:.3} ms (SLO {} ms, {} violation(s)); \
+         {:.0} req/s served over {:.1} ms; {:.1} GOPS/W energy-weighted\n",
+        ms(s.percentile(0.50)),
+        ms(s.percentile(0.95)),
+        ms(s.percentile(0.99)),
+        r.slo_ms,
+        r.slo_violations,
+        s.throughput_rps(),
+        r.wall_ns as f64 / 1e6,
+        r.fleet_gops_per_w,
+    ));
+    out
+}
+
 /// Figure 5 series: throughput vs batch size for MHA / FFN / System.
 #[derive(Debug, Clone)]
 pub struct BatchPoint {
@@ -289,8 +347,20 @@ mod tests {
     #[test]
     fn table2_ratios_relative_to_first() {
         let rows = vec![
-            AblationRow { lab: "Lab 1", independent_linear: false, atb_parallel_mode: "N/A", atb_parallelism: 1, makespan_ns: 100.0 },
-            AblationRow { lab: "Lab 2", independent_linear: false, atb_parallel_mode: "Pipeline", atb_parallelism: 1, makespan_ns: 25.0 },
+            AblationRow {
+                lab: "Lab 1",
+                independent_linear: false,
+                atb_parallel_mode: "N/A",
+                atb_parallelism: 1,
+                makespan_ns: 100.0,
+            },
+            AblationRow {
+                lab: "Lab 2",
+                independent_linear: false,
+                atb_parallel_mode: "Pipeline",
+                atb_parallelism: 1,
+                makespan_ns: 25.0,
+            },
         ];
         let s = table2(&rows);
         assert!(s.contains("1.00x"));

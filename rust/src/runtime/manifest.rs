@@ -1,6 +1,8 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and the
 //! rust runtime (parameter order, shapes, dtypes of every HLO artifact).
 
+use std::collections::BTreeMap;
+
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -35,7 +37,7 @@ pub struct ModelEntry {
 }
 
 /// Parsed `artifacts/manifest.json`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Manifest {
     pub mmsz: usize,
     pub artifacts: Vec<ArtifactInfo>,
@@ -88,7 +90,9 @@ impl Manifest {
                         .and_then(Json::as_str)
                         .ok_or_else(|| anyhow!("param missing name"))?
                         .to_string(),
-                    shape: parse_shape(p.get("shape").ok_or_else(|| anyhow!("param missing shape"))?)?,
+                    shape: parse_shape(
+                        p.get("shape").ok_or_else(|| anyhow!("param missing shape"))?,
+                    )?,
                     dtype: p
                         .get("dtype")
                         .and_then(Json::as_str)
@@ -133,6 +137,70 @@ impl Manifest {
         Ok(Manifest { mmsz, artifacts, models })
     }
 
+    /// Serialize back to the `manifest.json` schema.  [`Manifest::from_json`]
+    /// is the inverse: `from_json(&m.to_json()) == m` (models come back in
+    /// name order — the JSON object is sorted — so a manifest that
+    /// round-trips once is a fixed point).
+    pub fn to_json(&self) -> Json {
+        let shape = |s: &[usize]| Json::Arr(s.iter().map(|d| Json::Num(*d as f64)).collect());
+        let mut root = BTreeMap::new();
+        root.insert("mmsz".into(), Json::Num(self.mmsz as f64));
+        let mut models = BTreeMap::new();
+        for m in &self.models {
+            let mut e = BTreeMap::new();
+            e.insert("heads".into(), Json::Num(m.heads as f64));
+            e.insert("embed_dim".into(), Json::Num(m.embed_dim as f64));
+            e.insert("dff".into(), Json::Num(m.dff as f64));
+            e.insert("seq_len".into(), Json::Num(m.seq_len as f64));
+            e.insert("padded_seq_len".into(), Json::Num(m.padded_seq_len as f64));
+            e.insert("layers".into(), Json::Num(m.layers as f64));
+            models.insert(m.name.clone(), Json::Obj(e));
+        }
+        root.insert("models".into(), Json::Obj(models));
+        let artifacts = self
+            .artifacts
+            .iter()
+            .map(|a| {
+                let mut e = BTreeMap::new();
+                e.insert("name".into(), Json::Str(a.name.clone()));
+                e.insert("file".into(), Json::Str(a.file.clone()));
+                e.insert(
+                    "params".into(),
+                    Json::Arr(
+                        a.params
+                            .iter()
+                            .map(|p| {
+                                let mut pm = BTreeMap::new();
+                                pm.insert("name".into(), Json::Str(p.name.clone()));
+                                pm.insert("shape".into(), shape(&p.shape));
+                                pm.insert("dtype".into(), Json::Str(p.dtype.clone()));
+                                Json::Obj(pm)
+                            })
+                            .collect(),
+                    ),
+                );
+                e.insert(
+                    "outputs".into(),
+                    Json::Arr(
+                        a.output_shapes
+                            .iter()
+                            .zip(&a.output_dtypes)
+                            .map(|(s, d)| {
+                                let mut om = BTreeMap::new();
+                                om.insert("shape".into(), shape(s));
+                                om.insert("dtype".into(), Json::Str(d.clone()));
+                                Json::Obj(om)
+                            })
+                            .collect(),
+                    ),
+                );
+                Json::Obj(e)
+            })
+            .collect();
+        root.insert("artifacts".into(), Json::Arr(artifacts));
+        Json::Obj(root)
+    }
+
     pub fn artifact(&self, name: &str) -> Option<&ArtifactInfo> {
         self.artifacts.iter().find(|a| a.name == name)
     }
@@ -175,6 +243,89 @@ mod tests {
     fn rejects_incomplete() {
         let j = Json::parse(r#"{"artifacts": []}"#).unwrap();
         assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        // serialize -> parse -> equal (the whole structure, not a spot check)
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+        // and the JSON text itself is a fixed point after one round trip
+        assert_eq!(m.to_json().to_string(), back.to_json().to_string());
+        // a parse of the printed text also round-trips (printer emits
+        // valid JSON in the manifest schema)
+        let reparsed =
+            Manifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m, reparsed);
+    }
+
+    #[test]
+    fn roundtrip_preserves_empty_params_and_multiple_models() {
+        let m = Manifest {
+            mmsz: 32,
+            artifacts: vec![ArtifactInfo {
+                name: "softmax".into(),
+                file: "softmax.hlo.txt".into(),
+                params: vec![],
+                output_shapes: vec![vec![8, 8], vec![1]],
+                output_dtypes: vec!["f32".into(), "f32".into()],
+            }],
+            models: vec![
+                ModelEntry {
+                    name: "a".into(),
+                    heads: 2,
+                    embed_dim: 16,
+                    dff: 64,
+                    seq_len: 10,
+                    padded_seq_len: 32,
+                    layers: 1,
+                },
+                ModelEntry {
+                    name: "b".into(),
+                    heads: 4,
+                    embed_dim: 32,
+                    dff: 128,
+                    seq_len: 20,
+                    padded_seq_len: 32,
+                    layers: 2,
+                },
+            ],
+        };
+        let back = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.artifact("softmax").unwrap().output_shapes.len(), 2);
+    }
+
+    #[test]
+    fn malformed_manifests_name_the_missing_piece() {
+        let err = |src: &str| {
+            format!("{}", Manifest::from_json(&Json::parse(src).unwrap()).unwrap_err())
+        };
+        assert!(err(r#"{"artifacts": []}"#).contains("missing mmsz"));
+        assert!(err(r#"{"mmsz": 64}"#).contains("missing artifacts"));
+        assert!(err(r#"{"mmsz": 64, "artifacts": [{"file": "x"}]}"#).contains("missing name"));
+        assert!(
+            err(r#"{"mmsz": 64, "artifacts": [{"name": "x"}]}"#).contains("missing file")
+        );
+        // a bad shape dimension points at the dim, not a generic failure
+        let bad_dim = err(
+            r#"{"mmsz": 64, "artifacts": [{"name":"x","file":"f",
+                "params":[{"name":"a","shape":[64,-1],"dtype":"int8"}]}]}"#,
+        );
+        assert!(bad_dim.contains("bad dim"), "{bad_dim}");
+        // model entries name the model and the missing key
+        let bad_model = err(
+            r#"{"mmsz": 64, "artifacts": [],
+                "models": {"tiny": {"heads": 2}}}"#,
+        );
+        assert!(bad_model.contains("'tiny'") && bad_model.contains("embed_dim"), "{bad_model}");
+    }
+
+    #[test]
+    fn load_error_points_at_make_artifacts() {
+        let err = Manifest::load("definitely/not/a/manifest.json").unwrap_err();
+        assert!(format!("{err}").contains("make artifacts"), "{err}");
     }
 
     #[test]

@@ -693,7 +693,12 @@ pub fn run_stage_opts(
                 };
                 atb_sc.add_node(NodeSpec {
                     name: format!("{:?}{}", prg.kind, prg.atb_index),
-                    pus: prg_pu_timings(prg, hw, mmsz, if prg.kind == PrgKind::AtbPre { 4 } else { 1 }),
+                    pus: prg_pu_timings(
+                        prg,
+                        hw,
+                        mmsz,
+                        if prg.kind == PrgKind::AtbPre { 4 } else { 1 },
+                    ),
                     pipelined: atb_pipelined,
                     n_inv: batch * invocations(&prg.pus, mmsz, heads, mm.m, mm.n, mm.k),
                     cores: prg.cores(),

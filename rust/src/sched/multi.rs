@@ -44,6 +44,19 @@ impl MultiEdpuReport {
     pub fn tops(&self) -> f64 {
         self.ops as f64 / self.makespan_ns / 1e3
     }
+
+    /// Wall time from batch admission to batch completion when the
+    /// deployment serves batches back-to-back with no cross-batch overlap
+    /// (the serving fleet's conservative service model): Parallel EDPUs
+    /// finish when the slowest share does (the makespan); a Pipelined
+    /// chain must push the whole batch through every layer (the latency),
+    /// not just one steady-state window.
+    pub fn service_ns(&self) -> f64 {
+        match self.mode {
+            MultiEdpuMode::Parallel => self.makespan_ns,
+            MultiEdpuMode::Pipelined => self.latency_ns.max(self.makespan_ns),
+        }
+    }
 }
 
 /// Execute `plan.model.layers` encoder layers for `batch` items on
@@ -293,6 +306,20 @@ mod tests {
             );
             assert!(r.makespan_ns >= per_layer * (1.0 - 1e-9));
         }
+    }
+
+    #[test]
+    fn service_time_covers_batch_completion_in_both_modes() {
+        // Parallel: a batch is done when the slowest share is (makespan);
+        // Pipelined: a batch still crosses every layer, so its service
+        // time is the full latency even though the steady-state window
+        // (makespan) is shorter.
+        let plan = small_plan();
+        let par = run_multi_edpu(&plan, 2, 8, MultiEdpuMode::Parallel).unwrap();
+        assert_eq!(par.service_ns(), par.makespan_ns);
+        let pipe = run_multi_edpu(&plan, 3, 8, MultiEdpuMode::Pipelined).unwrap();
+        assert_eq!(pipe.service_ns(), pipe.latency_ns);
+        assert!(pipe.service_ns() >= pipe.makespan_ns);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! The accelerator fleet: deployable backends derived from an explore
+//! frontier.
+//!
+//! Each [`Backend`] is one frontier [`DesignPoint`] turned back into an
+//! executable deployment via [`deploy_plan`] — the same plan the
+//! explorer simulated — plus a pre-simulated **service profile**: the
+//! batch-completion time and useful-op count for every batch size the
+//! serving batcher can emit (1..=`max_batch`), obtained from
+//! [`run_multi_edpu`] riding the stage-sim cache.  The router then makes
+//! per-request decisions by table lookup; no DES runs on the serving
+//! hot path.
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::dse::{deploy_plan, DesignPoint, ExploreResult};
+use crate::sched::run_multi_edpu;
+use anyhow::{anyhow, Result};
+
+/// One deployed member of the accelerator family.  The re-derived plan
+/// is consumed at deploy time to build the service profile; serving
+/// itself only ever consults the profile and the design point.
+pub struct Backend {
+    /// Position in the fleet (cost order: cheapest first).
+    pub id: usize,
+    /// The frontier design point this backend deploys.
+    pub point: DesignPoint,
+    /// `profile[k-1]` = (service time ns, useful ops) for a batch of `k`.
+    profile: Vec<(u64, u64)>,
+}
+
+impl Backend {
+    /// Deploy one frontier point: re-derive its plan and pre-simulate the
+    /// service profile for batches `1..=max_batch`.
+    pub fn deploy(
+        model: &ModelConfig,
+        board: &HardwareConfig,
+        point: &DesignPoint,
+        max_batch: usize,
+    ) -> Result<Backend> {
+        assert!(max_batch > 0, "max_batch must be positive");
+        let plan = deploy_plan(model, board, &point.cand)?;
+        let mut profile = Vec::with_capacity(max_batch);
+        for k in 1..=max_batch {
+            let r = run_multi_edpu(&plan, point.cand.n_edpu, k, point.cand.multi_mode)?;
+            profile.push((r.service_ns().ceil() as u64, r.ops));
+        }
+        Ok(Backend { id: 0, point: point.clone(), profile })
+    }
+
+    /// Simulated completion time for a batch of `k` (1 ≤ k ≤ max_batch).
+    pub fn service_ns(&self, k: usize) -> u64 {
+        self.profile[k - 1].0
+    }
+
+    /// Useful MM ops a batch of `k` executes.
+    pub fn ops(&self, k: usize) -> u64 {
+        self.profile[k - 1].1
+    }
+
+    /// Worst-case service time over every batch size the batcher can
+    /// emit — the router's admission bound uses this so the bound holds
+    /// however the forming batch fills up.
+    pub fn max_service_ns(&self) -> u64 {
+        self.profile.iter().map(|p| p.0).max().unwrap_or(0)
+    }
+
+    /// Largest batch this backend's profile covers.
+    pub fn max_batch(&self) -> usize {
+        self.profile.len()
+    }
+
+    /// Routing cost: board power of this deployment (W) — "cheapest
+    /// backend that fits the SLO" minimizes energy, the Table VI currency.
+    pub fn power_w(&self) -> f64 {
+        self.point.power_w
+    }
+}
+
+/// The deployed family, sorted by [`Backend::power_w`] ascending so the
+/// router's first SLO-feasible hit is the cheapest one.
+pub struct Fleet {
+    pub backends: Vec<Backend>,
+}
+
+impl Fleet {
+    /// Select up to `k` diverse members of the explore frontier and
+    /// deploy them.
+    ///
+    /// Selection is deterministic: frontier points are sorted by power
+    /// ascending (ties broken by candidate index), exact duplicates by
+    /// (cores, latency) collapse, and `k ≥ 2` evenly spaced picks keep
+    /// both extremes — the frugal end serves relaxed requests cheaply,
+    /// the powerful end absorbs tight SLOs and bursts.  A fleet of one
+    /// deploys the **most powerful** member: a lone backend's first job
+    /// is meeting the SLO at all, not meeting it cheaply.
+    pub fn select(
+        model: &ModelConfig,
+        board: &HardwareConfig,
+        explored: &ExploreResult,
+        k: usize,
+        max_batch: usize,
+    ) -> Result<Fleet> {
+        let mut pts: Vec<&DesignPoint> = explored.frontier_points().collect();
+        if pts.is_empty() {
+            return Err(anyhow!("exploration produced an empty frontier — nothing to deploy"));
+        }
+        pts.sort_by(|a, b| {
+            a.power_w.total_cmp(&b.power_w).then(a.cand.index.cmp(&b.cand.index))
+        });
+        pts.dedup_by(|a, b| a.total_cores == b.total_cores && a.latency_ms == b.latency_ms);
+        let k = k.clamp(1, pts.len());
+        let picks: Vec<usize> = if k == pts.len() {
+            (0..k).collect()
+        } else if k == 1 {
+            vec![pts.len() - 1]
+        } else {
+            // evenly spaced over the sorted list, endpoints included;
+            // strictly increasing because k <= pts.len()
+            (0..k).map(|j| j * (pts.len() - 1) / (k - 1)).collect()
+        };
+        let mut backends = Vec::with_capacity(k);
+        for (id, &pi) in picks.iter().enumerate() {
+            let mut b = Backend::deploy(model, board, pts[pi], max_batch)?;
+            b.id = id;
+            backends.push(b);
+        }
+        Ok(Fleet { backends })
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+
+    /// Largest batch every member's service profile covers — the serving
+    /// loop clamps its batch cap to this, so profile lookups can't go out
+    /// of range however the fleet was built.
+    pub fn max_batch(&self) -> usize {
+        self.backends.iter().map(Backend::max_batch).min().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::customize::CustomizeOptions;
+    use crate::dse::{Candidate, SpaceSpec};
+    use crate::sched::MultiEdpuMode;
+
+    fn explored() -> ExploreResult {
+        let model = ModelConfig::bert_base();
+        let hw = HardwareConfig::vck5000();
+        let mut cfg = crate::dse::ExploreConfig::new(model, hw);
+        cfg.sample_budget = None;
+        cfg.space = SpaceSpec::compact_9pt();
+        crate::dse::explore(&cfg).unwrap()
+    }
+
+    #[test]
+    fn backend_profile_is_monotone_and_bounded_by_max() {
+        let model = ModelConfig::bert_base();
+        let hw = HardwareConfig::vck5000();
+        let cand = Candidate {
+            index: 0,
+            opts: CustomizeOptions::default(),
+            batch: 4,
+            edpu_budget: hw.total_aie,
+            n_edpu: 1,
+            multi_mode: MultiEdpuMode::Parallel,
+        };
+        let plan = deploy_plan(&model, &hw, &cand).unwrap();
+        let r = run_multi_edpu(&plan, 1, 4, MultiEdpuMode::Parallel).unwrap();
+        let point = crate::dse::evaluate(&plan, &cand).unwrap();
+        let be = Backend::deploy(&model, &hw, &point, 6).unwrap();
+        assert_eq!(be.max_batch(), 6);
+        // profile matches the underlying simulation at the probed batch
+        assert_eq!(be.service_ns(4), r.service_ns().ceil() as u64);
+        assert_eq!(be.ops(4), r.ops);
+        // service time grows with batch size; max covers every entry
+        for k in 2..=6 {
+            assert!(be.service_ns(k) >= be.service_ns(k - 1), "batch {k} shrank");
+        }
+        assert_eq!(be.max_service_ns(), be.service_ns(6));
+        assert!(be.power_w() > 0.0);
+    }
+
+    #[test]
+    fn select_orders_by_power_and_keeps_extremes() {
+        let model = ModelConfig::bert_base();
+        let hw = HardwareConfig::vck5000();
+        let ex = explored();
+        assert!(ex.frontier.len() >= 2, "compact space frontier too small");
+        let fleet = Fleet::select(&model, &hw, &ex, 2, 4).unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert!(fleet.backends[0].power_w() <= fleet.backends[1].power_w());
+        // ids are fleet positions
+        for (i, b) in fleet.backends.iter().enumerate() {
+            assert_eq!(b.id, i);
+        }
+        // asking for more backends than frontier points clamps
+        let big = Fleet::select(&model, &hw, &ex, 64, 4).unwrap();
+        assert!(big.len() <= ex.frontier.len());
+        assert!(!big.is_empty());
+        // a fleet of one deploys the most powerful member, not the
+        // cheapest — a lone backend must be able to meet tight SLOs
+        let solo = Fleet::select(&model, &hw, &ex, 1, 4).unwrap();
+        assert_eq!(solo.len(), 1);
+        for b in &big.backends {
+            assert!(solo.backends[0].power_w() >= b.power_w());
+        }
+    }
+}

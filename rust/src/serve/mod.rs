@@ -1,0 +1,523 @@
+//! SLO-aware fleet serving (`cat serve --rps ...`): route a live request
+//! stream across an explore-derived accelerator family.
+//!
+//! The paper derives a *family* of customized accelerators (§IV, Table
+//! VI); this module puts the family to work at runtime.  A fleet of
+//! logical backends — one per selected [`dse`](crate::dse) frontier point,
+//! re-derived via [`dse::deploy_plan`](crate::dse::deploy_plan) and
+//! pre-simulated into a per-batch-size service profile ([`fleet`]) — is
+//! driven by a **virtual-clock** serving loop:
+//!
+//! * a seeded open-loop Poisson generator ([`admission::TrafficGen`])
+//!   produces arrivals at `--rps`;
+//! * each arrival is routed ([`router`]) to the **cheapest** backend whose
+//!   worst-case completion bound fits `--slo-ms`, or shed
+//!   ([`admission`]) when no bounded queue can make the deadline;
+//! * per-backend continuous batching reuses the coordinator's
+//!   [`Batcher`] (staleness flushes fire at their exact virtual
+//!   deadlines, not on a polling grid);
+//! * batch service times come from the explorer's own
+//!   [`run_multi_edpu`](crate::sched::run_multi_edpu) machinery via the
+//!   stage-sim cache, so the serving loop itself never runs the DES.
+//!
+//! Everything is integer virtual nanoseconds from a fixed epoch — the
+//! loop is deterministic for a fixed seed and closed-form checkable
+//! (`rust/tests/serve_properties.rs` asserts request conservation,
+//! per-request latency lower bounds, and SLO compliance).
+
+mod admission;
+mod fleet;
+mod router;
+
+pub use admission::{AdmissionStats, ShedReason, TrafficGen};
+pub use fleet::{Backend, Fleet};
+pub use router::{route, BackendLoad, RouteDecision};
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::coordinator::{Batcher, BatcherConfig, ServeStats};
+use crate::dse;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// One fleet-serving experiment.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub model: ModelConfig,
+    pub hw: HardwareConfig,
+    /// Offered open-loop load (requests/second).
+    pub rps: f64,
+    /// Per-request completion SLO, arrival → response (ms).
+    pub slo_ms: f64,
+    /// Synthetic requests to generate.
+    pub n_requests: usize,
+    /// Fleet size cap (fewer deploy when the frontier is small).
+    pub max_backends: usize,
+    /// Per-backend serving batch cap.
+    pub max_batch: usize,
+    /// Admission bound: requests admitted but not yet completed, per
+    /// backend (forming batch + dispatched backlog).
+    pub queue_cap: usize,
+    /// How long a forming batch may wait for more requests before the
+    /// staleness flush dispatches it (`None` = SLO/8).
+    pub batch_wait: Option<Duration>,
+    /// Seed for the Poisson arrivals (and the in-process exploration).
+    pub seed: u64,
+    /// `cat explore` sampling budget for the in-process frontier
+    /// derivation (`None` = exhaustive).
+    pub explore_budget: Option<usize>,
+}
+
+impl FleetConfig {
+    pub fn new(model: ModelConfig, hw: HardwareConfig) -> FleetConfig {
+        FleetConfig {
+            model,
+            hw,
+            rps: 1000.0,
+            slo_ms: 50.0,
+            n_requests: 512,
+            max_backends: 3,
+            max_batch: 8,
+            queue_cap: 64,
+            batch_wait: None,
+            seed: 0xCA7,
+            explore_budget: Some(128),
+        }
+    }
+
+    /// Staleness budget for forming batches: explicit, or SLO/8 so
+    /// batching consumes a bounded slice of the deadline.  A
+    /// non-positive/NaN SLO degrades to a zero wait (every batch
+    /// dispatches immediately) instead of panicking in `Duration`.
+    pub fn resolved_batch_wait(&self) -> Duration {
+        self.batch_wait.unwrap_or_else(|| {
+            let w = self.slo_ms / 8.0 / 1e3;
+            Duration::from_secs_f64(if w.is_finite() && w > 0.0 { w } else { 0.0 })
+        })
+    }
+
+    pub fn slo_ns(&self) -> u64 {
+        (self.slo_ms * 1e6).round() as u64
+    }
+}
+
+/// One completed request (virtual-clock record).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetResponse {
+    pub id: u64,
+    /// Fleet position of the backend that served it.
+    pub backend: usize,
+    pub arrival_ns: u64,
+    pub completion_ns: u64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+    /// Simulated service time of that batch on its backend.
+    pub batch_service_ns: u64,
+}
+
+impl FleetResponse {
+    pub fn latency_ns(&self) -> u64 {
+        self.completion_ns - self.arrival_ns
+    }
+}
+
+/// One shed request.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub arrival_ns: u64,
+    pub reason: ShedReason,
+}
+
+/// Per-backend serving summary.
+#[derive(Debug, Clone)]
+pub struct BackendSummary {
+    pub id: usize,
+    pub point: dse::DesignPoint,
+    pub admitted: usize,
+    pub busy_ns: u64,
+    /// Useful MM ops executed across every batch served.
+    pub ops: u64,
+    /// Completed/batches/latency percentiles (virtual durations).
+    pub stats: ServeStats,
+}
+
+impl BackendSummary {
+    /// Fraction of the experiment wall the backend spent serving.
+    pub fn utilization(&self, wall_ns: u64) -> f64 {
+        if wall_ns == 0 {
+            return 0.0;
+        }
+        self.busy_ns as f64 / wall_ns as f64
+    }
+}
+
+/// The fleet-serving experiment outcome (schema `cat-serve-v1`).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub model: String,
+    pub hw: String,
+    pub rps: f64,
+    pub slo_ms: f64,
+    pub seed: u64,
+    pub n_backends: usize,
+    pub admission: AdmissionStats,
+    pub responses: Vec<FleetResponse>,
+    pub shed: Vec<ShedRecord>,
+    pub backends: Vec<BackendSummary>,
+    /// Fleet-wide latency stats (virtual durations; wall = stream span).
+    pub fleet_stats: ServeStats,
+    /// Virtual end of the experiment (last completion or arrival).
+    pub wall_ns: u64,
+    /// Energy-weighted fleet efficiency: total useful ops over total
+    /// energy (Σ power·busy), i.e. busy-time-weighted GOPS/W.
+    pub fleet_gops_per_w: f64,
+    /// Completed requests whose latency exceeded the SLO — zero by
+    /// construction (admission bounds completion; see [`router`]).
+    pub slo_violations: usize,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::Str("cat-serve-v1".into()));
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("hw".into(), Json::Str(self.hw.clone()));
+        m.insert("rps".into(), Json::Num(self.rps));
+        m.insert("slo_ms".into(), Json::Num(self.slo_ms));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+
+        let a = &self.admission;
+        let mut adm = BTreeMap::new();
+        adm.insert("submitted".into(), Json::Num(a.submitted as f64));
+        adm.insert("admitted".into(), Json::Num(a.admitted as f64));
+        adm.insert("completed".into(), Json::Num(a.completed as f64));
+        adm.insert("shed_slo".into(), Json::Num(a.shed_slo as f64));
+        adm.insert("shed_capacity".into(), Json::Num(a.shed_capacity as f64));
+        adm.insert("shed_rate".into(), Json::Num(a.shed_rate()));
+        m.insert("admission".into(), Json::Obj(adm));
+
+        let s = &self.fleet_stats;
+        let mut fl = BTreeMap::new();
+        fl.insert("backends".into(), Json::Num(self.n_backends as f64));
+        fl.insert("p50_ms".into(), Json::Num(ms(s.percentile(0.50))));
+        fl.insert("p95_ms".into(), Json::Num(ms(s.percentile(0.95))));
+        fl.insert("p99_ms".into(), Json::Num(ms(s.percentile(0.99))));
+        fl.insert("throughput_rps".into(), Json::Num(s.throughput_rps()));
+        fl.insert("wall_ms".into(), Json::Num(self.wall_ns as f64 / 1e6));
+        fl.insert("gops_per_w".into(), Json::Num(self.fleet_gops_per_w));
+        fl.insert("slo_violations".into(), Json::Num(self.slo_violations as f64));
+        m.insert("fleet".into(), Json::Obj(fl));
+
+        let wall_ns = self.wall_ns;
+        m.insert(
+            "backends".into(),
+            Json::Arr(
+                self.backends
+                    .iter()
+                    .map(|b| {
+                        let mut bm = BTreeMap::new();
+                        bm.insert("id".into(), Json::Num(b.id as f64));
+                        bm.insert("design".into(), b.point.to_json());
+                        bm.insert("admitted".into(), Json::Num(b.admitted as f64));
+                        bm.insert("completed".into(), Json::Num(b.stats.completed as f64));
+                        bm.insert("batches".into(), Json::Num(b.stats.batches as f64));
+                        bm.insert("mean_batch".into(), Json::Num(b.stats.mean_batch()));
+                        bm.insert("utilization".into(), Json::Num(b.utilization(wall_ns)));
+                        bm.insert("busy_ms".into(), Json::Num(b.busy_ns as f64 / 1e6));
+                        bm.insert("p50_ms".into(), Json::Num(ms(b.stats.percentile(0.50))));
+                        bm.insert("p99_ms".into(), Json::Num(ms(b.stats.percentile(0.99))));
+                        Json::Obj(bm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Per-backend mutable serving state (virtual clock).
+struct BackendState {
+    batcher: Batcher<u64>,
+    /// Completion time of everything dispatched so far.
+    busy_until_ns: u64,
+    /// Dispatched batches not yet past their completion time.
+    outstanding: VecDeque<(u64, usize)>,
+    in_flight: usize,
+    admitted: usize,
+    batches: usize,
+    busy_ns: u64,
+    ops: u64,
+    latencies: Vec<Duration>,
+}
+
+/// The virtual-clock serving loop over an already-built fleet.
+struct ServeLoop<'a> {
+    cfg: &'a FleetConfig,
+    fleet: &'a Fleet,
+    /// Fixed epoch mapping virtual ns ↔ the `Instant`s [`Batcher`] wants.
+    epoch: Instant,
+    wait_ns: u64,
+    /// Last processed virtual time — pending flush deadlines are always
+    /// in the future relative to it, so staleness math never saturates.
+    cursor_ns: u64,
+    states: Vec<BackendState>,
+    responses: Vec<FleetResponse>,
+}
+
+impl<'a> ServeLoop<'a> {
+    fn new(cfg: &'a FleetConfig, fleet: &'a Fleet) -> ServeLoop<'a> {
+        let wait = cfg.resolved_batch_wait();
+        // never emit a batch the service profiles can't price
+        let max_batch = cfg.max_batch.clamp(1, fleet.max_batch());
+        let states = fleet
+            .backends
+            .iter()
+            .map(|_| BackendState {
+                batcher: Batcher::new(BatcherConfig { max_batch, timeout: wait }),
+                busy_until_ns: 0,
+                outstanding: VecDeque::new(),
+                in_flight: 0,
+                admitted: 0,
+                batches: 0,
+                busy_ns: 0,
+                ops: 0,
+                latencies: Vec::new(),
+            })
+            .collect();
+        ServeLoop {
+            cfg,
+            fleet,
+            epoch: Instant::now(),
+            wait_ns: wait.as_nanos() as u64,
+            cursor_ns: 0,
+            states,
+            responses: Vec::new(),
+        }
+    }
+
+    fn at(&self, ns: u64) -> Instant {
+        self.epoch + Duration::from_nanos(ns)
+    }
+
+    /// Absolute flush deadline of backend `b`'s forming batch (`None`
+    /// when empty).  Evaluated at the cursor, where deadlines are exact.
+    fn flush_deadline(&self, b: usize) -> Option<u64> {
+        self.states[b]
+            .batcher
+            .time_until_stale(self.at(self.cursor_ns))
+            .map(|d| self.cursor_ns + d.as_nanos() as u64)
+    }
+
+    /// Fire every staleness flush due at or before `t_ns`, each at its
+    /// own virtual deadline, in (deadline, backend) order.
+    fn flush_stale_up_to(&mut self, t_ns: u64) {
+        loop {
+            let next = (0..self.states.len())
+                .filter_map(|b| self.flush_deadline(b).map(|d| (d, b)))
+                .min();
+            match next {
+                Some((deadline, b)) if deadline <= t_ns => {
+                    self.cursor_ns = deadline;
+                    if let Some(batch) = self.states[b].batcher.flush() {
+                        self.dispatch(b, batch, deadline);
+                    }
+                }
+                _ => break,
+            }
+        }
+        self.cursor_ns = self.cursor_ns.max(t_ns.min(u64::MAX / 2));
+    }
+
+    /// Commit one batch to backend `b` at virtual time `now_ns`.
+    fn dispatch(&mut self, b: usize, batch: Vec<(u64, Instant)>, now_ns: u64) {
+        let size = batch.len();
+        let backend = &self.fleet.backends[b];
+        let service = backend.service_ns(size);
+        let st = &mut self.states[b];
+        let start = st.busy_until_ns.max(now_ns);
+        let completion = start + service;
+        st.busy_until_ns = completion;
+        st.busy_ns += service;
+        st.batches += 1;
+        st.ops += backend.ops(size);
+        st.outstanding.push_back((completion, size));
+        for (id, enq) in batch {
+            let arrival_ns = enq.duration_since(self.epoch).as_nanos() as u64;
+            st.latencies.push(Duration::from_nanos(completion - arrival_ns));
+            self.responses.push(FleetResponse {
+                id,
+                backend: b,
+                arrival_ns,
+                completion_ns: completion,
+                batch_size: size,
+                batch_service_ns: service,
+            });
+        }
+    }
+
+    /// Retire batches whose completion time has passed (frees queue room).
+    fn advance(&mut self, now_ns: u64) {
+        for st in &mut self.states {
+            while st.outstanding.front().is_some_and(|&(c, _)| c <= now_ns) {
+                let (_, n) = st.outstanding.pop_front().unwrap();
+                st.in_flight -= n;
+            }
+        }
+    }
+
+    /// Route + admit (or shed) one arrival at `t_ns`.
+    fn arrive(&mut self, id: u64, t_ns: u64) -> Result<RouteDecision, ShedReason> {
+        self.flush_stale_up_to(t_ns);
+        self.advance(t_ns);
+        let loads: Vec<BackendLoad> = (0..self.states.len())
+            .map(|b| {
+                let st = &self.states[b];
+                BackendLoad {
+                    busy_until_ns: st.busy_until_ns,
+                    pending: st.batcher.pending_len(),
+                    flush_deadline_ns: self.flush_deadline(b).unwrap_or(t_ns + self.wait_ns),
+                    in_flight: st.in_flight,
+                }
+            })
+            .collect();
+        let decision = route(
+            &self.fleet.backends,
+            &loads,
+            t_ns,
+            self.cfg.slo_ns(),
+            self.cfg.queue_cap,
+        )?;
+        let b = decision.backend;
+        let at = self.at(t_ns);
+        let st = &mut self.states[b];
+        st.admitted += 1;
+        st.in_flight += 1;
+        if let Some(batch) = st.batcher.push(id, at) {
+            self.dispatch(b, batch, t_ns);
+        }
+        Ok(decision)
+    }
+}
+
+/// Derive a frontier for the pair, deploy the family, and serve the
+/// synthetic stream across it.
+pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    let mut ecfg = dse::ExploreConfig::new(cfg.model.clone(), cfg.hw.clone());
+    ecfg.sample_budget = cfg.explore_budget;
+    ecfg.seed = cfg.seed;
+    ecfg.slo_ms = Some(cfg.slo_ms);
+    let explored = dse::explore(&ecfg)?;
+    let fleet = Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)?;
+    serve_fleet_on(cfg, &fleet)
+}
+
+/// Drive the virtual-clock serving loop over an already-built fleet
+/// (exposed so tests and benches can pin a hand-built family).
+pub fn serve_fleet_on(cfg: &FleetConfig, fleet: &Fleet) -> Result<FleetReport> {
+    let arrivals = TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
+    serve_fleet_stream(cfg, fleet, &arrivals)
+}
+
+/// The serving loop over an **explicit** arrival pattern (sorted virtual
+/// timestamps, ns) — lets tests drive bursty or adversarial streams
+/// through the identical routing/admission/batching path.  Request ids
+/// are the arrival positions; `cfg.n_requests`/`cfg.rps` only label the
+/// report here, the stream is `arrivals`.
+pub fn serve_fleet_stream(
+    cfg: &FleetConfig,
+    fleet: &Fleet,
+    arrivals: &[u64],
+) -> Result<FleetReport> {
+    debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
+    let mut lp = ServeLoop::new(cfg, fleet);
+    let mut stats = AdmissionStats::default();
+    let mut shed = Vec::new();
+    for (id, &t_ns) in arrivals.iter().enumerate() {
+        stats.submitted += 1;
+        match lp.arrive(id as u64, t_ns) {
+            Ok(_) => stats.admitted += 1,
+            Err(reason) => {
+                stats.record_shed(reason);
+                shed.push(ShedRecord { id: id as u64, arrival_ns: t_ns, reason });
+            }
+        }
+    }
+    // end of stream: every forming batch still flushes at its own deadline
+    lp.flush_stale_up_to(u64::MAX);
+    stats.completed = lp.responses.len();
+
+    let slo_ns = cfg.slo_ns();
+    let wall_ns = lp
+        .responses
+        .iter()
+        .map(|r| r.completion_ns)
+        .chain(arrivals.last().copied())
+        .max()
+        .unwrap_or(0);
+    let slo_violations = lp.responses.iter().filter(|r| r.latency_ns() > slo_ns).count();
+
+    let mut total_ops = 0u64;
+    let mut energy_ns_w = 0.0f64;
+    let backends: Vec<BackendSummary> = lp
+        .states
+        .iter_mut()
+        .zip(&fleet.backends)
+        .map(|(st, be)| {
+            total_ops += st.ops;
+            energy_ns_w += be.power_w() * st.busy_ns as f64;
+            let mut lat = std::mem::take(&mut st.latencies);
+            lat.sort_unstable();
+            BackendSummary {
+                id: be.id,
+                point: be.point.clone(),
+                admitted: st.admitted,
+                busy_ns: st.busy_ns,
+                ops: st.ops,
+                stats: ServeStats {
+                    completed: lat.len(),
+                    batches: st.batches,
+                    latencies: lat,
+                    wall: Duration::from_nanos(wall_ns),
+                },
+            }
+        })
+        .collect();
+
+    let fleet_stats = ServeStats {
+        completed: lp.responses.len(),
+        batches: backends.iter().map(|b| b.stats.batches).sum(),
+        latencies: {
+            let mut v: Vec<Duration> = lp
+                .responses
+                .iter()
+                .map(|r| Duration::from_nanos(r.latency_ns()))
+                .collect();
+            v.sort_unstable();
+            v
+        },
+        wall: Duration::from_nanos(wall_ns),
+    };
+
+    let mut responses = lp.responses;
+    responses.sort_by_key(|r| r.id);
+    Ok(FleetReport {
+        model: cfg.model.name.clone(),
+        hw: cfg.hw.name.clone(),
+        rps: cfg.rps,
+        slo_ms: cfg.slo_ms,
+        seed: cfg.seed,
+        n_backends: fleet.len(),
+        admission: stats,
+        responses,
+        shed,
+        backends,
+        fleet_stats,
+        wall_ns,
+        fleet_gops_per_w: if energy_ns_w > 0.0 { total_ops as f64 / energy_ns_w } else { 0.0 },
+        slo_violations,
+    })
+}

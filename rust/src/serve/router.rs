@@ -1,0 +1,82 @@
+//! SLO-aware dispatch: pick the **cheapest** backend whose worst-case
+//! completion bound fits the request's SLO.
+//!
+//! The bound is constructed so that admission implies compliance:
+//!
+//! ```text
+//! completion ≤ max(busy_until, flush_deadline) + max_service
+//! ```
+//!
+//! * the request joins the backend's forming batch, which flushes no
+//!   later than `flush_deadline` (staleness) — filling up early only
+//!   dispatches it sooner;
+//! * batches dispatch in order per backend, so nothing overtakes the
+//!   forming batch: its start is bounded by
+//!   `max(busy_until, flush_deadline)` where `busy_until` covers every
+//!   batch already dispatched;
+//! * the batch serves in at most [`max_service_ns`] (the profile's
+//!   worst case over every emittable batch size).
+//!
+//! Every term is an upper bound, so every *admitted* request completes
+//! within its SLO — load shedding, not queue collapse, is how overload
+//! manifests (the property tests assert exactly this).
+//!
+//! [`max_service_ns`]: super::Backend::max_service_ns
+
+use super::admission::ShedReason;
+use super::fleet::Backend;
+
+/// One backend's queue snapshot at routing time (virtual ns).
+#[derive(Debug, Clone, Copy)]
+pub struct BackendLoad {
+    /// When every batch already dispatched to this backend completes.
+    pub busy_until_ns: u64,
+    /// Requests in the forming batch (not yet dispatched).
+    pub pending: usize,
+    /// Latest virtual time the forming batch will flush (now + staleness
+    /// budget when the batcher is empty).
+    pub flush_deadline_ns: u64,
+    /// Requests admitted but not yet completed — the forming batch
+    /// (`pending`) plus dispatched-but-unfinished batches.  This is the
+    /// quantity the bounded queue caps.
+    pub in_flight: usize,
+}
+
+/// A routing decision: which backend (as a **position** in the slices
+/// passed to [`route`], not `Backend::id` — the two coincide only for
+/// [`Fleet::select`](super::Fleet::select)-built fleets), and the
+/// completion bound the admission promised (for diagnostics/tests).
+#[derive(Debug, Clone, Copy)]
+pub struct RouteDecision {
+    pub backend: usize,
+    pub completion_bound_ns: u64,
+}
+
+/// Route one arrival.  `backends` must be in cost order (cheapest first —
+/// [`Fleet::select`](super::Fleet::select) guarantees it); the first
+/// SLO-feasible backend with queue room wins.  `Err` is the shed reason:
+/// `Capacity` when every queue was full, `Slo` when room existed but no
+/// bound fit.
+pub fn route(
+    backends: &[Backend],
+    loads: &[BackendLoad],
+    now_ns: u64,
+    slo_ns: u64,
+    queue_cap: usize,
+) -> Result<RouteDecision, ShedReason> {
+    debug_assert_eq!(backends.len(), loads.len());
+    let mut any_room = false;
+    for (i, (b, l)) in backends.iter().zip(loads).enumerate() {
+        if l.in_flight >= queue_cap {
+            continue;
+        }
+        any_room = true;
+        debug_assert!(l.flush_deadline_ns >= now_ns, "stale batch not flushed before routing");
+        let start_bound = l.busy_until_ns.max(l.flush_deadline_ns);
+        let completion_bound = start_bound + b.max_service_ns();
+        if completion_bound.saturating_sub(now_ns) <= slo_ns {
+            return Ok(RouteDecision { backend: i, completion_bound_ns: completion_bound });
+        }
+    }
+    Err(if any_room { ShedReason::Slo } else { ShedReason::Capacity })
+}

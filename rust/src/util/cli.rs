@@ -144,6 +144,36 @@ mod tests {
     }
 
     #[test]
+    fn serve_fleet_style_flag_mix() {
+        // the `cat serve --rps` surface: fleet flags + the legacy serve
+        // flags must coexist (--rps is the dispatch discriminator)
+        let valued = &[
+            "model", "hw", "batch", "requests", "seed", "slo-ms", "budget", "rps", "backends",
+            "queue-cap",
+        ];
+        let a = parse_strs(
+            &[
+                "serve", "--rps", "1500", "--slo-ms=20", "--backends", "3", "--queue-cap",
+                "32", "--requests", "256", "--batch", "8", "--seed", "7", "--json",
+            ],
+            valued,
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert!((a.opt_f64("rps", 0.0) - 1500.0).abs() < 1e-12);
+        assert!((a.opt_f64("slo-ms", 0.0) - 20.0).abs() < 1e-12);
+        assert_eq!(a.opt_usize("backends", 0), 3);
+        assert_eq!(a.opt_usize("queue-cap", 0), 32);
+        assert_eq!(a.opt_usize("requests", 0), 256);
+        assert_eq!(a.opt_usize("batch", 0), 8);
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert!(a.flag("json"));
+        assert!(a.positional.is_empty());
+        // without --rps the same parse drives the legacy PJRT serve path
+        let legacy = parse_strs(&["serve", "--requests", "32"], valued);
+        assert_eq!(legacy.opt("rps"), None);
+    }
+
+    #[test]
     fn explore_style_flag_mix() {
         // the `cat explore` surface: several new valued flags + --json
         let a = parse_strs(
