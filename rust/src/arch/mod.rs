@@ -250,6 +250,23 @@ impl PlResources {
         }
     }
 
+    /// The board's PL pools as one resource vector (the Table V
+    /// denominators) — the shape every budget check compares against.
+    pub fn pools_of(hw: &HardwareConfig) -> PlResources {
+        PlResources { luts: hw.pl_luts, ffs: hw.pl_ffs, brams: hw.pl_brams, urams: hw.pl_urams }
+    }
+
+    /// Component-wise fit: this estimate stays inside `pool` on every
+    /// resource class.  The single predicate behind the explorer's PL
+    /// pruning, the partitioner's joint-footprint check, and the
+    /// share-grant validation — one definition, no drift.
+    pub fn fits_within(&self, pool: &PlResources) -> bool {
+        self.luts <= pool.luts
+            && self.ffs <= pool.ffs
+            && self.brams <= pool.brams
+            && self.urams <= pool.urams
+    }
+
     /// Resources for `n` independent replicas (multi-EDPU deployment:
     /// each EDPU instance carries its own movers, operators and buffers).
     pub fn scale(&self, n: usize) -> PlResources {

@@ -34,6 +34,7 @@ pub struct DesignPoint {
     pub total_cores: usize,
     /// PL resources across all EDPU instances (Table V estimate).
     pub pl_luts: usize,
+    pub pl_ffs: usize,
     pub pl_brams: usize,
     pub pl_urams: usize,
     // -- simulated metrics --
@@ -83,6 +84,7 @@ impl DesignPoint {
         m.insert("cores_per_edpu".into(), Json::Num(self.cores_per_edpu as f64));
         m.insert("total_cores".into(), Json::Num(self.total_cores as f64));
         m.insert("pl_luts".into(), Json::Num(self.pl_luts as f64));
+        m.insert("pl_ffs".into(), Json::Num(self.pl_ffs as f64));
         m.insert("pl_brams".into(), Json::Num(self.pl_brams as f64));
         m.insert("pl_urams".into(), Json::Num(self.pl_urams as f64));
         m.insert("tops".into(), Json::Num(self.tops));
@@ -115,6 +117,7 @@ pub fn evaluate(plan: &AcceleratorPlan, cand: &Candidate) -> Result<DesignPoint>
         cores_per_edpu: plan.cores_deployed(),
         total_cores,
         pl_luts: pl.luts,
+        pl_ffs: pl.ffs,
         pl_brams: pl.brams,
         pl_urams: pl.urams,
         tops: r.tops(),
@@ -154,6 +157,7 @@ mod tests {
         assert!((p.latency_ms - r.latency_ns / 1e6).abs() < 1e-12);
         assert_eq!(p.total_cores, plan.cores_deployed());
         assert_eq!(p.pl_luts, plan.res_overall.luts);
+        assert_eq!(p.pl_ffs, plan.res_overall.ffs);
         assert!(p.power_w > 0.0 && p.gops_per_w > 0.0);
         // objective vector orientation: better TOPS -> larger objective,
         // more cores -> smaller objective

@@ -27,11 +27,13 @@
 
 mod eval;
 mod pareto;
+mod partition;
 mod prune;
 mod space;
 
 pub use eval::{evaluate, DesignPoint};
 pub use pareto::{best_tops_under, dominates, frontier_indices, ParetoResult, Query};
+pub use partition::{partition_frontier, Partition, PartitionConfig, PartitionStats, Share};
 pub use prune::{check_budgets, PruneStats, Reject};
 pub use space::{Candidate, SpaceSpec};
 
@@ -179,6 +181,60 @@ pub fn deploy_plan(
     }
     let mut plan = customize(model, &edpu_hw, &cand.opts)?;
     plan.hw = board.clone();
+    Ok(plan)
+}
+
+/// [`deploy_plan`] for a **co-resident** deployment: re-derive the
+/// candidate's plan exactly as the explorer did, then host it on a
+/// *slice* of the board — `share.aie` AIE cores and the granted PL pools
+/// — instead of the whole part.  The multi-EDPU budget check and every
+/// downstream consumer of `plan.hw` then see only this member's share,
+/// so a partitioned backend can never quietly spill into a neighbour's
+/// allocation.  Clocks, window memory, and DRAM stay the board's own:
+/// the partition divides the AIE array and the PL fabric, not time.
+///
+/// Errors when the re-derived design does not fit the share it was
+/// granted (the partitioner allocates shares at the designed footprint,
+/// so a mismatch means the caller's share came from somewhere else).
+pub fn deploy_plan_in_share(
+    model: &ModelConfig,
+    board: &HardwareConfig,
+    cand: &Candidate,
+    share: &Share,
+) -> Result<AcceleratorPlan> {
+    let mut plan = deploy_plan(model, board, cand)?;
+    let need = cand.n_edpu * plan.cores_deployed();
+    if need > share.aie {
+        return Err(anyhow!(
+            "candidate {} re-derived to {need} AIE cores but was granted a {}-core share",
+            cand.index,
+            share.aie
+        ));
+    }
+    let pl = plan.res_overall.scale(cand.n_edpu);
+    if !pl.fits_within(&share.pl) {
+        return Err(anyhow!(
+            "candidate {} re-derived to a PL estimate exceeding its granted share \
+             (LUT {}/{}, FF {}/{}, BRAM {}/{}, URAM {}/{})",
+            cand.index,
+            pl.luts,
+            share.pl.luts,
+            pl.ffs,
+            share.pl.ffs,
+            pl.brams,
+            share.pl.brams,
+            pl.urams,
+            share.pl.urams
+        ));
+    }
+    let mut slice = board.clone();
+    slice.name = format!("{}-share-{}aie", board.name, share.aie);
+    slice.total_aie = share.aie;
+    slice.pl_luts = share.pl.luts;
+    slice.pl_ffs = share.pl.ffs;
+    slice.pl_brams = share.pl.brams;
+    slice.pl_urams = share.pl.urams;
+    plan.hw = slice;
     Ok(plan)
 }
 

@@ -1,0 +1,573 @@
+//! Single-board fleet partitioning: pick a frontier *subset* whose joint
+//! footprint fits one physical board.
+//!
+//! PR 3's fleet treated every deployed family member as its own VCK5000;
+//! this module closes the gap to the paper's core constraint — every
+//! Eq. 3–8 customization is negotiated against one board's `Total_AIE`
+//! and Table V PL pools.  A partition grants each selected member a
+//! [`Share`] — an AIE core allocation plus a slice of the LUT/FF/BRAM/
+//! URAM pools — such that, jointly,
+//!
+//! ```text
+//! Σ total_cores ≤ Total_AIE      and      Σ PL estimate ≤ board pools
+//! ```
+//!
+//! — the same per-point checks [`check_budgets`](super::check_budgets)
+//! applies during exploration, lifted to a co-residency constraint (the
+//! Vis-TOP-style overlay scenario).
+//!
+//! **Selection.**  The best feasible `k`-subset by a scalarized
+//! serving objective: maximize Σ TOPS over members whose per-item
+//! latency meets the SLO (SLO-infeasible members would never admit a
+//! request, so they contribute nothing).  Subsets are enumerated
+//! exhaustively while `C(n, k)` stays under [`PartitionConfig::enum_cap`]
+//! (frontiers are small); beyond that a deterministic two-pass greedy
+//! (objective density for quality, smallest footprint for
+//! reachability) takes over — a heuristic, so past the cap an
+//! adversarially-shaped feasible subset can in principle be missed.
+//! When no `k`-subset is found — or every larger subset scores a zero
+//! objective while a smaller one can actually serve — the request
+//! degrades to the best smaller size (every frontier point individually
+//! passed the board budgets, so a 1-member partition always exists) and
+//! the drop is recorded in [`PartitionStats`].
+//!
+//! Everything is deterministic: lexicographic subset order, total-order
+//! tie-breaks, no randomness.
+
+use super::eval::DesignPoint;
+use crate::arch::PlResources;
+use crate::config::HardwareConfig;
+use anyhow::{anyhow, Result};
+
+/// One member's slice of the board: the AIE cores and PL estimate its
+/// deployment may consume.  Shares are allocated at the member's designed
+/// footprint (its `total_cores` and replicated Table V estimate), so a
+/// re-derivation under the share reproduces the frontier design exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Share {
+    pub aie: usize,
+    pub pl: PlResources,
+}
+
+/// One partitioning request.
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionConfig {
+    /// Requested co-resident backends (degrades when infeasible).
+    pub backends: usize,
+    /// Per-item latency SLO for the throughput objective (`None` = every
+    /// member contributes its TOPS).
+    pub slo_ms: Option<f64>,
+    /// Max subsets to enumerate per size before falling back to the
+    /// greedy pass.
+    pub enum_cap: usize,
+}
+
+impl PartitionConfig {
+    pub fn new(backends: usize) -> PartitionConfig {
+        PartitionConfig { backends, slo_ms: None, enum_cap: 100_000 }
+    }
+}
+
+/// Where every considered subset went — the partition-level analogue of
+/// [`PruneStats`](super::PruneStats):
+/// `subsets_considered == aie_infeasible + pl_infeasible + feasible`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PartitionStats {
+    /// Deduped frontier points the search ran over.
+    pub candidates: usize,
+    /// Backends the caller asked for.
+    pub requested: usize,
+    /// Backends the best feasible subset actually holds.
+    pub selected: usize,
+    /// Subsets whose joint footprint was checked.
+    pub subsets_considered: usize,
+    /// Subsets rejected by `Σ cores ≤ Total_AIE`.
+    pub aie_infeasible: usize,
+    /// Subsets rejected by the PL pools.
+    pub pl_infeasible: usize,
+    /// Subsets satisfying both board budgets.
+    pub feasible: usize,
+    /// True when `enum_cap` forced the greedy pass for some size.
+    pub greedy: bool,
+}
+
+/// One feasible co-resident deployment: the chosen members (indices into
+/// the slice handed to [`partition_frontier`], ascending) and their
+/// shares, plus the board-level accounting.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub members: Vec<usize>,
+    /// `shares[i]` belongs to `members[i]`.
+    pub shares: Vec<Share>,
+    pub aie_used: usize,
+    pub pl_used: PlResources,
+    /// Σ SLO-feasible member TOPS — the scalarized objective achieved.
+    pub objective_tops: f64,
+    pub stats: PartitionStats,
+}
+
+fn footprint(p: &DesignPoint) -> Share {
+    Share {
+        aie: p.total_cores,
+        pl: PlResources { luts: p.pl_luts, ffs: p.pl_ffs, brams: p.pl_brams, urams: p.pl_urams },
+    }
+}
+
+/// The admitted-throughput *proxy*: a member's TOPS when its
+/// explore-time per-item latency (at its own `cand.batch`) meets the
+/// SLO, else 0.  This is deliberately the explore-level metric — the
+/// router's actual admission bound uses the re-simulated worst-case
+/// service time over every *serving* batch size (`max_service_ns` at
+/// the serve-side batch cap), which is only known after deployment, so
+/// the two can disagree when `cand.batch` differs from the serving cap.
+/// The proxy picks the subset; the router still enforces the real
+/// bound per request, so the mismatch costs selection quality, never
+/// SLO compliance.
+fn proxy_tops(p: &DesignPoint, slo_ms: Option<f64>) -> f64 {
+    match slo_ms {
+        Some(slo) if p.latency_ms > slo => 0.0,
+        _ => p.tops,
+    }
+}
+
+fn fits(board: &HardwareConfig, aie: usize, pl: &PlResources) -> Result<(), super::Reject> {
+    if aie > board.total_aie {
+        return Err(super::Reject::Aie);
+    }
+    if !pl.fits_within(&PlResources::pools_of(board)) {
+        return Err(super::Reject::Pl);
+    }
+    Ok(())
+}
+
+/// `C(n, k)` saturating at `usize::MAX` (only compared against
+/// `enum_cap`, so saturation is harmless).
+fn n_choose_k(n: usize, k: usize) -> usize {
+    if k > n {
+        return 0;
+    }
+    let mut c: u128 = 1;
+    for i in 0..k.min(n - k) {
+        c = c.saturating_mul((n - i) as u128) / (i + 1) as u128;
+        if c > usize::MAX as u128 {
+            return usize::MAX;
+        }
+    }
+    c as usize
+}
+
+/// Evaluate one subset against the board; returns `(objective, Σ aie)`
+/// when feasible and records the outcome in `stats`.  The members are
+/// NOT cloned here — the caller copies them only when the subset beats
+/// the incumbent, so the exhaustive scan stays allocation-free.
+fn evaluate_subset(
+    points: &[&DesignPoint],
+    subset: &[usize],
+    board: &HardwareConfig,
+    slo_ms: Option<f64>,
+    stats: &mut PartitionStats,
+) -> Option<(f64, usize)> {
+    stats.subsets_considered += 1;
+    let mut aie = 0usize;
+    let mut pl = PlResources::default();
+    let mut objective = 0.0f64;
+    for &i in subset {
+        let s = footprint(points[i]);
+        aie += s.aie;
+        pl = pl.add(&s.pl);
+        objective += proxy_tops(points[i], slo_ms);
+    }
+    match fits(board, aie, &pl) {
+        Err(super::Reject::Aie) => {
+            stats.aie_infeasible += 1;
+            None
+        }
+        Err(super::Reject::Pl) => {
+            stats.pl_infeasible += 1;
+            None
+        }
+        Ok(()) => {
+            stats.feasible += 1;
+            Some((objective, aie))
+        }
+    }
+}
+
+/// A candidate beats the incumbent on (higher objective, then fewer AIE
+/// cores, then lexicographically earlier members) — a total order, so
+/// the search is deterministic.
+fn better(
+    objective: f64,
+    aie: usize,
+    members: &[usize],
+    best: &Option<(f64, usize, Vec<usize>)>,
+) -> bool {
+    match best {
+        None => true,
+        Some(b) => match objective.total_cmp(&b.0) {
+            std::cmp::Ordering::Greater => true,
+            std::cmp::Ordering::Less => false,
+            std::cmp::Ordering::Equal => (aie, members) < (b.1, b.2.as_slice()),
+        },
+    }
+}
+
+/// Exhaustive best-of-size-`k` search (lexicographic subset order).
+fn best_of_size_exhaustive(
+    points: &[&DesignPoint],
+    k: usize,
+    board: &HardwareConfig,
+    slo_ms: Option<f64>,
+    stats: &mut PartitionStats,
+) -> Option<(f64, usize, Vec<usize>)> {
+    let n = points.len();
+    let mut best: Option<(f64, usize, Vec<usize>)> = None;
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        if let Some((objective, aie)) = evaluate_subset(points, &idx, board, slo_ms, stats) {
+            if better(objective, aie, &idx, &best) {
+                best = Some((objective, aie, idx.clone()));
+            }
+        }
+        // advance to the next k-combination of 0..n (lexicographic)
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return best;
+            }
+            i -= 1;
+            if idx[i] != i + n - k {
+                idx[i] += 1;
+                for j in i + 1..k {
+                    idx[j] = idx[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// One greedy pass: walk `order`, keep every point that still fits,
+/// stop at `k` members.  Returns the sorted picks only when `k` was
+/// reached (no accounting — the caller evaluates distinct picks once).
+fn greedy_picks(
+    points: &[&DesignPoint],
+    order: &[usize],
+    k: usize,
+    board: &HardwareConfig,
+) -> Option<Vec<usize>> {
+    let mut picked = Vec::new();
+    let mut aie = 0usize;
+    let mut pl = PlResources::default();
+    for &i in order {
+        let s = footprint(points[i]);
+        if fits(board, aie + s.aie, &pl.add(&s.pl)).is_ok() {
+            aie += s.aie;
+            pl = pl.add(&s.pl);
+            picked.push(i);
+            if picked.len() == k {
+                break;
+            }
+        }
+    }
+    if picked.len() < k {
+        return None;
+    }
+    picked.sort_unstable();
+    Some(picked)
+}
+
+/// Greedy fallback for sizes beyond `enum_cap`.  Two deterministic
+/// passes: objective density (best value per AIE core) for quality, and
+/// smallest-footprint-first for *reachability* — the k cheapest points
+/// fit whenever any k-subset fits the AIE dimension, so a feasible
+/// request is not declared infeasible just because the dense pass
+/// filled the board early.  (Beyond the cap this stays a heuristic:
+/// with adversarial PL shapes a feasible k-subset can still be missed —
+/// the enumeration cap is exactly the budget bounding that exactness.)
+fn best_of_size_greedy(
+    points: &[&DesignPoint],
+    k: usize,
+    board: &HardwareConfig,
+    slo_ms: Option<f64>,
+    stats: &mut PartitionStats,
+) -> Option<(f64, usize, Vec<usize>)> {
+    stats.greedy = true;
+    let mut by_density: Vec<usize> = (0..points.len()).collect();
+    by_density.sort_by(|&a, &b| {
+        let da = proxy_tops(points[a], slo_ms) / points[a].total_cores.max(1) as f64;
+        let db = proxy_tops(points[b], slo_ms) / points[b].total_cores.max(1) as f64;
+        db.total_cmp(&da)
+            .then(points[a].total_cores.cmp(&points[b].total_cores))
+            .then(a.cmp(&b))
+    });
+    let mut by_footprint: Vec<usize> = (0..points.len()).collect();
+    by_footprint.sort_by(|&a, &b| {
+        let fa = footprint(points[a]);
+        let fb = footprint(points[b]);
+        (fa.aie, fa.pl.luts, a).cmp(&(fb.aie, fb.pl.luts, b))
+    });
+    let mut best: Option<(f64, usize, Vec<usize>)> = None;
+    let mut evaluated: Option<Vec<usize>> = None;
+    for order in [&by_density, &by_footprint] {
+        let picks = match greedy_picks(points, order, k, board) {
+            Some(p) => p,
+            None => continue,
+        };
+        if evaluated.as_ref() == Some(&picks) {
+            continue; // both orders converged on the same subset
+        }
+        if let Some((objective, aie)) = evaluate_subset(points, &picks, board, slo_ms, stats) {
+            if better(objective, aie, &picks, &best) {
+                best = Some((objective, aie, picks.clone()));
+            }
+        }
+        evaluated = Some(picks);
+    }
+    best
+}
+
+/// Find the best feasible co-resident subset of `points` (a ranked,
+/// deduped frontier) on `board`.  Requests larger than the frontier or
+/// infeasible at their requested size degrade to the largest feasible
+/// size, with the drop visible as `stats.selected < stats.requested`.
+pub fn partition_frontier(
+    points: &[&DesignPoint],
+    board: &HardwareConfig,
+    cfg: &PartitionConfig,
+) -> Result<Partition> {
+    if points.is_empty() {
+        return Err(anyhow!("cannot partition an empty frontier"));
+    }
+    if cfg.backends == 0 {
+        return Err(anyhow!("a partition needs at least one backend"));
+    }
+    let mut stats = PartitionStats {
+        candidates: points.len(),
+        requested: cfg.backends,
+        ..PartitionStats::default()
+    };
+    let finish = |objective: f64, aie_used: usize, members: Vec<usize>, mut stats: PartitionStats| {
+        stats.selected = members.len();
+        let shares: Vec<Share> = members.iter().map(|&i| footprint(points[i])).collect();
+        let pl_used = shares.iter().fold(PlResources::default(), |acc, s| acc.add(&s.pl));
+        Partition { members, shares, aie_used, pl_used, objective_tops: objective, stats }
+    };
+    let k_max = cfg.backends.min(points.len());
+    // Largest size first, but a zero-objective subset must not shadow a
+    // smaller one that can actually serve: a feasible k-subset whose
+    // every member misses the SLO scores 0, and deploying it would shed
+    // 100% of traffic while e.g. a lone SLO-feasible member exists.  So
+    // a zero-objective winner is only a fallback, returned when every
+    // smaller size scores zero too.
+    let mut zero_fallback: Option<(f64, usize, Vec<usize>)> = None;
+    for k in (1..=k_max).rev() {
+        let best = if n_choose_k(points.len(), k) > cfg.enum_cap {
+            best_of_size_greedy(points, k, board, cfg.slo_ms, &mut stats)
+        } else {
+            best_of_size_exhaustive(points, k, board, cfg.slo_ms, &mut stats)
+        };
+        if let Some((objective, aie_used, members)) = best {
+            if objective > 0.0 {
+                return Ok(finish(objective, aie_used, members, stats));
+            }
+            if zero_fallback.is_none() {
+                zero_fallback = Some((objective, aie_used, members));
+            }
+        }
+    }
+    if let Some((objective, aie_used, members)) = zero_fallback {
+        return Ok(finish(objective, aie_used, members, stats));
+    }
+    // unreachable in practice: every frontier point passed check_budgets
+    // individually, so every 1-subset is feasible
+    Err(anyhow!("no feasible partition of any size on {}", board.name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::customize::CustomizeOptions;
+    use crate::dse::Candidate;
+    use crate::sched::MultiEdpuMode;
+
+    fn point(index: usize, cores: usize, luts: usize, tops: f64, latency_ms: f64) -> DesignPoint {
+        DesignPoint {
+            cand: Candidate {
+                index,
+                opts: CustomizeOptions::default(),
+                batch: 4,
+                edpu_budget: cores,
+                n_edpu: 1,
+                multi_mode: MultiEdpuMode::Parallel,
+            },
+            mmsz: 64,
+            plio_aie: 8,
+            independent_linear: true,
+            p_atb: 4,
+            mha_mode: crate::arch::ParallelMode::Serial,
+            ffn_mode: crate::arch::ParallelMode::Serial,
+            cores_per_edpu: cores,
+            total_cores: cores,
+            pl_luts: luts,
+            pl_ffs: luts,
+            pl_brams: 10,
+            pl_urams: 0,
+            tops,
+            latency_ms,
+            gops_per_aie: 1.0,
+            power_w: 10.0,
+            gops_per_w: 1.0,
+        }
+    }
+
+    fn board() -> HardwareConfig {
+        crate::config::HardwareConfig::vck5000()
+    }
+
+    #[test]
+    fn picks_the_best_feasible_pair_and_accounts_every_subset() {
+        // 400-AIE board: {350, 150, 100} — the only feasible pair is
+        // {150, 100} (both pairs touching the 350 blow the array).
+        let pts = [
+            point(0, 350, 1000, 10.0, 1.0),
+            point(1, 150, 1000, 6.0, 1.0),
+            point(2, 100, 1000, 5.0, 1.0),
+        ];
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        assert_eq!(part.members, vec![1, 2]);
+        assert_eq!(part.aie_used, 250);
+        assert!((part.objective_tops - 11.0).abs() < 1e-12);
+        let s = part.stats;
+        assert_eq!((s.requested, s.selected, s.candidates), (2, 2, 3));
+        assert_eq!(s.subsets_considered, 3); // C(3,2)
+        assert_eq!(s.subsets_considered, s.aie_infeasible + s.pl_infeasible + s.feasible);
+        assert_eq!(s.aie_infeasible, 2); // {350,150}, {350,100}
+        assert!(!s.greedy);
+        // shares are exactly the members' footprints
+        for (&m, sh) in part.members.iter().zip(&part.shares) {
+            assert_eq!(sh.aie, pts[m].total_cores);
+            assert_eq!(sh.pl.luts, pts[m].pl_luts);
+        }
+    }
+
+    #[test]
+    fn slo_gates_the_objective_not_the_feasibility() {
+        // same footprints; the slow point contributes 0 TOPS under the
+        // SLO, so the pair {fast, slow} loses to {fast, medium}
+        let pts = [
+            point(0, 100, 1000, 9.0, 100.0), // SLO-infeasible but roomy
+            point(1, 100, 1000, 5.0, 1.0),
+            point(2, 100, 1000, 4.0, 1.0),
+        ];
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let mut cfg = PartitionConfig::new(2);
+        cfg.slo_ms = Some(10.0);
+        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        assert_eq!(part.members, vec![1, 2]);
+        assert!((part.objective_tops - 9.0).abs() < 1e-12);
+        // without the SLO the 9-TOPS point wins a slot
+        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        assert_eq!(part.members, vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_objective_subset_does_not_shadow_a_serving_singleton() {
+        // {B,C} is the only feasible pair but neither member meets the
+        // SLO (objective 0); the lone SLO-feasible A must win even
+        // though it means fewer backends than requested
+        let pts = [
+            point(0, 300, 1000, 10.0, 1.0),   // A: serves, too big to pair
+            point(1, 150, 1000, 8.0, 200.0),  // B: fits, misses SLO
+            point(2, 150, 1000, 7.0, 200.0),  // C: fits, misses SLO
+        ];
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let mut cfg = PartitionConfig::new(2);
+        cfg.slo_ms = Some(10.0);
+        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        assert_eq!(part.members, vec![0], "the serving singleton must win");
+        assert!((part.objective_tops - 10.0).abs() < 1e-12);
+        assert_eq!((part.stats.requested, part.stats.selected), (2, 1));
+        // without an SLO the same request keeps both members ({B,C})
+        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        assert_eq!(part.members, vec![1, 2]);
+    }
+
+    #[test]
+    fn infeasible_request_degrades_to_largest_feasible_size() {
+        let pts = [point(0, 300, 1000, 10.0, 1.0), point(1, 200, 1000, 8.0, 1.0)];
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        assert_eq!(part.stats.requested, 2);
+        assert_eq!(part.stats.selected, 1);
+        assert_eq!(part.members, vec![0]); // best singleton by TOPS
+        // requests beyond the frontier size clamp the same way
+        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(64)).unwrap();
+        assert!(part.stats.selected <= 2);
+    }
+
+    #[test]
+    fn pl_pools_reject_independently_of_aie() {
+        let mut hw = board();
+        hw.pl_luts = 1500;
+        let pts = [point(0, 50, 1000, 5.0, 1.0), point(1, 50, 1000, 4.0, 1.0)];
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let part = partition_frontier(&refs, &hw, &PartitionConfig::new(2)).unwrap();
+        assert_eq!(part.stats.pl_infeasible, 1); // the pair: 2000 LUTs > 1500
+        assert_eq!(part.stats.selected, 1);
+        assert!(part.pl_used.luts <= hw.pl_luts);
+    }
+
+    #[test]
+    fn greedy_path_engages_past_the_enum_cap_and_stays_feasible() {
+        let pts: Vec<DesignPoint> =
+            (0..12).map(|i| point(i, 30 + i, 100, 1.0 + i as f64, 1.0)).collect();
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let mut cfg = PartitionConfig::new(6);
+        cfg.enum_cap = 10; // C(12,6) = 924 >> 10
+        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        assert!(part.stats.greedy);
+        assert_eq!(part.stats.selected, 6);
+        assert!(part.aie_used <= board().total_aie);
+        assert!(part.members.windows(2).all(|w| w[0] < w[1]));
+        // deterministic
+        let again = partition_frontier(&refs, &board(), &cfg).unwrap();
+        assert_eq!(part.members, again.members);
+    }
+
+    #[test]
+    fn greedy_density_dead_end_still_reaches_a_feasible_k() {
+        // density order picks {200, 150} first and then nothing fits —
+        // a single dense pass would stall at 3 members and falsely
+        // degrade; the footprint pass must still find a 5-subset
+        // (five 50-core points, 250 ≤ 400)
+        let mut pts = vec![point(0, 200, 100, 400.0, 1.0), point(1, 150, 100, 225.0, 1.0)];
+        for i in 2..12 {
+            pts.push(point(i, 50, 100, 25.0, 1.0));
+        }
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let mut cfg = PartitionConfig::new(5);
+        cfg.enum_cap = 10; // C(12,5) = 792 >> 10
+        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        assert!(part.stats.greedy);
+        assert_eq!(part.stats.selected, 5, "feasible k=5 must not degrade");
+        assert!(part.aie_used <= board().total_aie);
+    }
+
+    #[test]
+    fn n_choose_k_saturates_not_overflows() {
+        assert_eq!(n_choose_k(3, 2), 3);
+        assert_eq!(n_choose_k(12, 6), 924);
+        assert_eq!(n_choose_k(2, 5), 0);
+        assert_eq!(n_choose_k(200, 100), usize::MAX);
+    }
+
+    #[test]
+    fn degenerate_inputs_error() {
+        assert!(partition_frontier(&[], &board(), &PartitionConfig::new(1)).is_err());
+        let p = point(0, 100, 100, 1.0, 1.0);
+        let refs = [&p];
+        assert!(partition_frontier(&refs, &board(), &PartitionConfig::new(0)).is_err());
+    }
+}

@@ -9,7 +9,7 @@
 //! 3. PL budget: the Table V estimate, replicated per EDPU instance,
 //!    must fit the board's LUT/FF/BRAM/URAM pools.
 
-use crate::arch::AcceleratorPlan;
+use crate::arch::{AcceleratorPlan, PlResources};
 use crate::config::HardwareConfig;
 
 /// Why a candidate was rejected without simulation.
@@ -53,11 +53,7 @@ pub fn check_budgets(
         return Err(Reject::Aie);
     }
     let pl = plan.res_overall.scale(n_edpu);
-    if pl.luts > board.pl_luts
-        || pl.ffs > board.pl_ffs
-        || pl.brams > board.pl_brams
-        || pl.urams > board.pl_urams
-    {
+    if !pl.fits_within(&PlResources::pools_of(board)) {
         return Err(Reject::Pl);
     }
     Ok(())

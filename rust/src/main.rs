@@ -69,9 +69,13 @@ subcommands:
                                             serve batched requests (PJRT)
   serve --rps <r> --slo-ms <x> [--model <m>] [--hw <h>] [--backends K]
         [--requests N] [--batch B] [--queue-cap Q] [--budget K]
-        [--seed S] [--json]                 SLO-aware fleet serving across
+        [--seed S] [--partition] [--json]   SLO-aware fleet serving across
                                             an explore-derived accelerator
-                                            family (virtual clock)
+                                            family (virtual clock);
+                                            --partition co-locates the
+                                            backends on ONE board (joint
+                                            Total_AIE + PL budgets,
+                                            schema cat-serve-v2)
   codegen --model <m> --hw <h> [--json]     emit the AIE graph design
 models: bert-base | vit-base | <path>.json
 hardware: vck5000 | vck190 | vck5000-limited-<n> | <path>.json
@@ -370,6 +374,7 @@ fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
     if cfg.queue_cap == 0 {
         return Err(anyhow!("--queue-cap must be positive (0 would shed everything)"));
     }
+    cfg.partition = args.flag("partition");
     if let Some(s) = args.opt("seed") {
         cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
     }

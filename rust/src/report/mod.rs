@@ -300,6 +300,42 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
         r.wall_ns as f64 / 1e6,
         r.fleet_gops_per_w,
     ));
+    if let Some(b) = &r.board {
+        let pct = |used: usize, total: usize| {
+            if total == 0 {
+                0.0
+            } else {
+                used as f64 / total as f64 * 100.0
+            }
+        };
+        let st = &b.stats;
+        out.push_str(&format!(
+            "  board {}: {}/{} AIE used ({} residual); PL LUT {:.1}% / FF {:.1}% / \
+             BRAM {:.1}% / URAM {:.1}%\n",
+            b.board,
+            b.aie_used,
+            b.aie_total,
+            b.aie_residual(),
+            pct(b.pl_used.luts, b.pl_total.luts),
+            pct(b.pl_used.ffs, b.pl_total.ffs),
+            pct(b.pl_used.brams, b.pl_total.brams),
+            pct(b.pl_used.urams, b.pl_total.urams),
+        ));
+        out.push_str(&format!(
+            "  partition: {} requested -> {} selected of {} candidates \
+             ({} subsets: {} AIE-infeasible, {} PL-infeasible, {} feasible{}); \
+             objective {:.3} SLO-feasible TOPS\n",
+            st.requested,
+            st.selected,
+            st.candidates,
+            st.subsets_considered,
+            st.aie_infeasible,
+            st.pl_infeasible,
+            st.feasible,
+            if st.greedy { ", greedy" } else { "" },
+            b.objective_tops,
+        ));
+    }
     out
 }
 

@@ -10,9 +10,16 @@
 //! per-request decisions by table lookup; no DES runs on the serving
 //! hot path.
 
+use std::collections::BTreeMap;
+
+use crate::arch::{AcceleratorPlan, PlResources};
 use crate::config::{HardwareConfig, ModelConfig};
-use crate::dse::{deploy_plan, DesignPoint, ExploreResult};
+use crate::dse::{
+    deploy_plan, deploy_plan_in_share, partition_frontier, DesignPoint, ExploreResult,
+    PartitionConfig, PartitionStats, Share,
+};
 use crate::sched::run_multi_edpu;
+use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 /// One deployed member of the accelerator family.  The re-derived plan
@@ -36,11 +43,38 @@ impl Backend {
         point: &DesignPoint,
         max_batch: usize,
     ) -> Result<Backend> {
-        assert!(max_batch > 0, "max_batch must be positive");
         let plan = deploy_plan(model, board, &point.cand)?;
+        Backend::from_plan(&plan, point, max_batch)
+    }
+
+    /// Deploy one frontier point **inside a board share** (partitioned
+    /// fleet): the plan is re-derived under the member's granted
+    /// AIE/PL slice via [`deploy_plan_in_share`], so the service profile
+    /// — and therefore the router's worst-case admission bound — is
+    /// re-simulated against the budget-constrained deployment, not the
+    /// whole board.
+    pub fn deploy_in_share(
+        model: &ModelConfig,
+        board: &HardwareConfig,
+        point: &DesignPoint,
+        max_batch: usize,
+        share: &Share,
+    ) -> Result<Backend> {
+        let plan = deploy_plan_in_share(model, board, &point.cand, share)?;
+        Backend::from_plan(&plan, point, max_batch)
+    }
+
+    /// Pre-simulate the service profile for batches `1..=max_batch` of an
+    /// already-derived plan (shared tail of both deploy paths).
+    fn from_plan(
+        plan: &AcceleratorPlan,
+        point: &DesignPoint,
+        max_batch: usize,
+    ) -> Result<Backend> {
+        assert!(max_batch > 0, "max_batch must be positive");
         let mut profile = Vec::with_capacity(max_batch);
         for k in 1..=max_batch {
-            let r = run_multi_edpu(&plan, point.cand.n_edpu, k, point.cand.multi_mode)?;
+            let r = run_multi_edpu(plan, point.cand.n_edpu, k, point.cand.multi_mode)?;
             profile.push((r.service_ns().ceil() as u64, r.ops));
         }
         Ok(Backend { id: 0, point: point.clone(), profile })
@@ -75,23 +109,129 @@ impl Backend {
     }
 }
 
+/// The one-board resource ledger of a **partitioned** fleet: how much of
+/// the physical `Total_AIE` array and the Table V PL pools the deployed
+/// members jointly consume, which [`Share`] each fleet position was
+/// granted, and the partition-search accounting.  [`Fleet::select_partitioned`]
+/// threads the shares into every member's deployment and this ledger into
+/// the `cat-serve-v2` report's `board` block.
+#[derive(Debug, Clone)]
+pub struct FleetBudget {
+    /// Board the fleet co-resides on.
+    pub board: String,
+    pub aie_total: usize,
+    pub aie_used: usize,
+    pub pl_total: PlResources,
+    pub pl_used: PlResources,
+    /// `shares[i]` belongs to fleet position `i` (cost order).
+    pub shares: Vec<Share>,
+    /// Σ SLO-feasible member TOPS the partitioner maximized.
+    pub objective_tops: f64,
+    pub stats: PartitionStats,
+}
+
+impl FleetBudget {
+    /// AIE cores left unallocated on the board.
+    pub fn aie_residual(&self) -> usize {
+        self.aie_total - self.aie_used
+    }
+
+    /// The `board` block of the `cat-serve-v2` schema.
+    pub fn to_json(&self) -> Json {
+        let pool = |used: usize, total: usize| {
+            let mut p = BTreeMap::new();
+            p.insert("used".into(), Json::Num(used as f64));
+            p.insert("total".into(), Json::Num(total as f64));
+            p.insert(
+                "utilization".into(),
+                Json::Num(if total == 0 { 0.0 } else { used as f64 / total as f64 }),
+            );
+            Json::Obj(p)
+        };
+        let mut m = BTreeMap::new();
+        m.insert("hw".into(), Json::Str(self.board.clone()));
+        m.insert("aie_total".into(), Json::Num(self.aie_total as f64));
+        m.insert("aie_used".into(), Json::Num(self.aie_used as f64));
+        m.insert("aie_residual".into(), Json::Num(self.aie_residual() as f64));
+        let mut pl = BTreeMap::new();
+        pl.insert("luts".into(), pool(self.pl_used.luts, self.pl_total.luts));
+        pl.insert("ffs".into(), pool(self.pl_used.ffs, self.pl_total.ffs));
+        pl.insert("brams".into(), pool(self.pl_used.brams, self.pl_total.brams));
+        pl.insert("urams".into(), pool(self.pl_used.urams, self.pl_total.urams));
+        m.insert("pl".into(), Json::Obj(pl));
+        let s = &self.stats;
+        m.insert("backends_requested".into(), Json::Num(s.requested as f64));
+        m.insert("backends_selected".into(), Json::Num(s.selected as f64));
+        let mut part = BTreeMap::new();
+        part.insert("candidates".into(), Json::Num(s.candidates as f64));
+        part.insert("subsets_considered".into(), Json::Num(s.subsets_considered as f64));
+        part.insert("aie_infeasible".into(), Json::Num(s.aie_infeasible as f64));
+        part.insert("pl_infeasible".into(), Json::Num(s.pl_infeasible as f64));
+        part.insert("feasible".into(), Json::Num(s.feasible as f64));
+        part.insert("greedy".into(), Json::Bool(s.greedy));
+        part.insert("objective_tops".into(), Json::Num(self.objective_tops));
+        m.insert("partition".into(), Json::Obj(part));
+        m.insert(
+            "shares".into(),
+            Json::Arr(
+                self.shares
+                    .iter()
+                    .enumerate()
+                    .map(|(i, sh)| {
+                        let mut sm = BTreeMap::new();
+                        sm.insert("backend".into(), Json::Num(i as f64));
+                        sm.insert("aie".into(), Json::Num(sh.aie as f64));
+                        sm.insert("pl_luts".into(), Json::Num(sh.pl.luts as f64));
+                        sm.insert("pl_ffs".into(), Json::Num(sh.pl.ffs as f64));
+                        sm.insert("pl_brams".into(), Json::Num(sh.pl.brams as f64));
+                        sm.insert("pl_urams".into(), Json::Num(sh.pl.urams as f64));
+                        Json::Obj(sm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
 /// The deployed family, sorted by [`Backend::power_w`] ascending so the
 /// router's first SLO-feasible hit is the cheapest one.
 pub struct Fleet {
     pub backends: Vec<Backend>,
+    /// One-board ledger when this fleet was built by
+    /// [`Fleet::select_partitioned`]; `None` = PR 3 semantics, every
+    /// member owns a whole board.  The deployment mode travels WITH the
+    /// fleet, so the serving loop's energy accounting and the report
+    /// schema can never disagree with how the backends were actually
+    /// deployed.
+    pub budget: Option<FleetBudget>,
+}
+
+/// The shared frontier ranking both selection modes start from: power
+/// ascending (ties broken by candidate index), exact (cores, latency)
+/// duplicates collapsed.
+fn ranked(explored: &ExploreResult) -> Result<Vec<&DesignPoint>> {
+    let mut pts: Vec<&DesignPoint> = explored.frontier_points().collect();
+    if pts.is_empty() {
+        return Err(anyhow!("exploration produced an empty frontier — nothing to deploy"));
+    }
+    pts.sort_by(|a, b| a.power_w.total_cmp(&b.power_w).then(a.cand.index.cmp(&b.cand.index)));
+    pts.dedup_by(|a, b| a.total_cores == b.total_cores && a.latency_ms == b.latency_ms);
+    Ok(pts)
 }
 
 impl Fleet {
     /// Select up to `k` diverse members of the explore frontier and
     /// deploy them.
     ///
-    /// Selection is deterministic: frontier points are sorted by power
-    /// ascending (ties broken by candidate index), exact duplicates by
-    /// (cores, latency) collapse, and `k ≥ 2` evenly spaced picks keep
-    /// both extremes — the frugal end serves relaxed requests cheaply,
-    /// the powerful end absorbs tight SLOs and bursts.  A fleet of one
-    /// deploys the **most powerful** member: a lone backend's first job
-    /// is meeting the SLO at all, not meeting it cheaply.
+    /// Selection is deterministic: frontier points are ranked
+    /// ([`ranked`]) and `k ≥ 2` evenly spaced picks keep both extremes —
+    /// the frugal end serves relaxed requests cheaply, the powerful end
+    /// absorbs tight SLOs and bursts.  A fleet of one deploys the
+    /// **most powerful** member: a lone backend's first job is meeting
+    /// the SLO at all, not meeting it cheaply.  Every member is assumed
+    /// to own a whole board; [`Fleet::select_partitioned`] is the
+    /// one-board co-residency variant.
     pub fn select(
         model: &ModelConfig,
         board: &HardwareConfig,
@@ -99,14 +239,7 @@ impl Fleet {
         k: usize,
         max_batch: usize,
     ) -> Result<Fleet> {
-        let mut pts: Vec<&DesignPoint> = explored.frontier_points().collect();
-        if pts.is_empty() {
-            return Err(anyhow!("exploration produced an empty frontier — nothing to deploy"));
-        }
-        pts.sort_by(|a, b| {
-            a.power_w.total_cmp(&b.power_w).then(a.cand.index.cmp(&b.cand.index))
-        });
-        pts.dedup_by(|a, b| a.total_cores == b.total_cores && a.latency_ms == b.latency_ms);
+        let pts = ranked(explored)?;
         let k = k.clamp(1, pts.len());
         let picks: Vec<usize> = if k == pts.len() {
             (0..k).collect()
@@ -123,7 +256,55 @@ impl Fleet {
             b.id = id;
             backends.push(b);
         }
-        Ok(Fleet { backends })
+        Ok(Fleet { backends, budget: None })
+    }
+
+    /// Select the best frontier subset that **co-resides on one board**
+    /// and deploy it: the members' joint footprint satisfies
+    /// `Σ total_cores ≤ Total_AIE` and the Table V PL pool bounds (the
+    /// same checks `dse::prune` applies per point), chosen to maximize
+    /// Σ SLO-feasible TOPS ([`partition_frontier`]).  Each member is
+    /// re-derived under its granted [`Share`] via
+    /// [`Backend::deploy_in_share`], so every service profile — and the
+    /// router's per-member worst-case bound — reflects the
+    /// budget-constrained deployment.  An infeasible `k` degrades to the
+    /// largest feasible subset; the drop is visible in the returned
+    /// [`FleetBudget::stats`].
+    ///
+    /// Members inherit the ranking's power order, so the returned fleet
+    /// keeps the router's cheapest-first contract.  The returned fleet
+    /// carries its [`FleetBudget`] (see [`Fleet::budget`]), which the
+    /// serving loop consults for shared-board energy accounting and the
+    /// `cat-serve-v2` board block.
+    pub fn select_partitioned(
+        model: &ModelConfig,
+        board: &HardwareConfig,
+        explored: &ExploreResult,
+        k: usize,
+        max_batch: usize,
+        slo_ms: Option<f64>,
+    ) -> Result<Fleet> {
+        let pts = ranked(explored)?;
+        let mut pcfg = PartitionConfig::new(k);
+        pcfg.slo_ms = slo_ms;
+        let part = partition_frontier(&pts, board, &pcfg)?;
+        let budget = FleetBudget {
+            board: board.name.clone(),
+            aie_total: board.total_aie,
+            aie_used: part.aie_used,
+            pl_total: PlResources::pools_of(board),
+            pl_used: part.pl_used,
+            shares: part.shares,
+            objective_tops: part.objective_tops,
+            stats: part.stats,
+        };
+        let mut backends = Vec::with_capacity(part.members.len());
+        for (id, (&pi, share)) in part.members.iter().zip(&budget.shares).enumerate() {
+            let mut b = Backend::deploy_in_share(model, board, pts[pi], max_batch, share)?;
+            b.id = id;
+            backends.push(b);
+        }
+        Ok(Fleet { backends, budget: Some(budget) })
     }
 
     pub fn len(&self) -> usize {
@@ -210,5 +391,38 @@ mod tests {
         for b in &big.backends {
             assert!(solo.backends[0].power_w() >= b.power_w());
         }
+    }
+
+    #[test]
+    fn select_partitioned_fits_one_board_and_threads_shares() {
+        let model = ModelConfig::bert_base();
+        let hw = HardwareConfig::vck5000();
+        let ex = explored();
+        let fleet = Fleet::select_partitioned(&model, &hw, &ex, 2, 4, Some(80.0)).unwrap();
+        let budget = fleet.budget.as_ref().expect("partitioned fleet carries its budget");
+        assert_eq!(fleet.len(), budget.shares.len());
+        assert_eq!(budget.aie_total, hw.total_aie);
+        assert!(budget.aie_used <= budget.aie_total);
+        assert_eq!(
+            budget.aie_used,
+            fleet.backends.iter().map(|b| b.point.total_cores).sum::<usize>()
+        );
+        assert!(budget.pl_used.luts <= budget.pl_total.luts);
+        assert!(budget.pl_used.brams <= budget.pl_total.brams);
+        // shares are the members' designed footprints, in fleet order
+        for (b, s) in fleet.backends.iter().zip(&budget.shares) {
+            assert_eq!(s.aie, b.point.total_cores);
+            assert_eq!(s.pl.luts, b.point.pl_luts);
+        }
+        // the ranking's cost order survives partitioning
+        for w in fleet.backends.windows(2) {
+            assert!(w[0].power_w() <= w[1].power_w());
+        }
+        // the board JSON block is self-consistent
+        let j = budget.to_json();
+        let used = j.get("aie_used").unwrap().as_usize().unwrap();
+        let total = j.get("aie_total").unwrap().as_usize().unwrap();
+        assert!(used <= total);
+        assert_eq!(j.get("aie_residual").unwrap().as_usize().unwrap(), total - used);
     }
 }

@@ -24,13 +24,23 @@
 //! loop is deterministic for a fixed seed and closed-form checkable
 //! (`rust/tests/serve_properties.rs` asserts request conservation,
 //! per-request latency lower bounds, and SLO compliance).
+//!
+//! **Partitioned mode** (`--partition`): instead of granting every
+//! member its own board, [`Fleet::select_partitioned`] picks the best
+//! frontier subset that **co-resides on one physical board** — joint
+//! `Σ cores ≤ Total_AIE` and Table V PL pool bounds, the Vis-TOP-style
+//! overlay scenario — and re-derives every member under its granted
+//! [`FleetBudget`] share.  The routing/admission path is identical; only
+//! the deployments (and hence each member's re-simulated worst-case
+//! service bound) change, and the report carries the board ledger under
+//! schema `cat-serve-v2`.
 
 mod admission;
 mod fleet;
 mod router;
 
 pub use admission::{AdmissionStats, ShedReason, TrafficGen};
-pub use fleet::{Backend, Fleet};
+pub use fleet::{Backend, Fleet, FleetBudget};
 pub use router::{route, BackendLoad, RouteDecision};
 
 use std::collections::{BTreeMap, VecDeque};
@@ -68,6 +78,11 @@ pub struct FleetConfig {
     /// `cat explore` sampling budget for the in-process frontier
     /// derivation (`None` = exhaustive).
     pub explore_budget: Option<usize>,
+    /// Deploy the fleet as **co-resident partitions of one board**
+    /// (`Σ cores ≤ Total_AIE`, joint Table V PL estimate within the
+    /// pools) instead of one board per member; the report gains the
+    /// `board` ledger and switches to schema `cat-serve-v2`.
+    pub partition: bool,
 }
 
 impl FleetConfig {
@@ -84,6 +99,7 @@ impl FleetConfig {
             batch_wait: None,
             seed: 0xCA7,
             explore_budget: Some(128),
+            partition: false,
         }
     }
 
@@ -154,7 +170,9 @@ impl BackendSummary {
     }
 }
 
-/// The fleet-serving experiment outcome (schema `cat-serve-v1`).
+/// The fleet-serving experiment outcome (schema `cat-serve-v1`, or
+/// `cat-serve-v2` when a partitioned deployment carries its board
+/// ledger).
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub model: String,
@@ -177,13 +195,20 @@ pub struct FleetReport {
     /// Completed requests whose latency exceeded the SLO — zero by
     /// construction (admission bounds completion; see [`router`]).
     pub slo_violations: usize,
+    /// One-board resource ledger when the fleet was deployed with
+    /// `--partition` (`None` = PR 3 semantics, one board per member).
+    pub board: Option<FleetBudget>,
 }
 
 impl FleetReport {
     pub fn to_json(&self) -> Json {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
         let mut m = BTreeMap::new();
-        m.insert("schema".into(), Json::Str("cat-serve-v1".into()));
+        let schema = if self.board.is_some() { "cat-serve-v2" } else { "cat-serve-v1" };
+        m.insert("schema".into(), Json::Str(schema.into()));
+        if let Some(b) = &self.board {
+            m.insert("board".into(), b.to_json());
+        }
         m.insert("model".into(), Json::Str(self.model.clone()));
         m.insert("hw".into(), Json::Str(self.hw.clone()));
         m.insert("rps".into(), Json::Num(self.rps));
@@ -403,15 +428,27 @@ impl<'a> ServeLoop<'a> {
     }
 }
 
-/// Derive a frontier for the pair, deploy the family, and serve the
-/// synthetic stream across it.
+/// Derive a frontier for the pair, deploy the family — on one shared
+/// board when [`FleetConfig::partition`] is set, one board per member
+/// otherwise — and serve the synthetic stream across it.
 pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
     let mut ecfg = dse::ExploreConfig::new(cfg.model.clone(), cfg.hw.clone());
     ecfg.sample_budget = cfg.explore_budget;
     ecfg.seed = cfg.seed;
     ecfg.slo_ms = Some(cfg.slo_ms);
     let explored = dse::explore(&ecfg)?;
-    let fleet = Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)?;
+    let fleet = if cfg.partition {
+        Fleet::select_partitioned(
+            &cfg.model,
+            &cfg.hw,
+            &explored,
+            cfg.max_backends,
+            cfg.max_batch,
+            Some(cfg.slo_ms),
+        )?
+    } else {
+        Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)?
+    };
     serve_fleet_on(cfg, &fleet)
 }
 
@@ -460,15 +497,31 @@ pub fn serve_fleet_stream(
         .unwrap_or(0);
     let slo_violations = lp.responses.iter().filter(|r| r.latency_ns() > slo_ns).count();
 
+    // Energy accounting: each member's `power_w` includes the board's
+    // static floor.  With one board per member (PR 3 semantics) that is
+    // the right per-member charge; a partition-built fleet
+    // (`fleet.budget` present) co-resides on ONE physical board, so its
+    // static power is charged once — over the experiment wall, since an
+    // always-on board burns it through idle gaps too — and members
+    // contribute only their dynamic power on top.  Keyed off the fleet
+    // itself, so the accounting can never disagree with how the
+    // backends were deployed.
+    let shared_board = fleet.budget.is_some();
+    let static_w = cfg.hw.power.static_w;
     let mut total_ops = 0u64;
-    let mut energy_ns_w = 0.0f64;
+    let mut energy_ns_w = if shared_board { static_w * wall_ns as f64 } else { 0.0 };
     let backends: Vec<BackendSummary> = lp
         .states
         .iter_mut()
         .zip(&fleet.backends)
         .map(|(st, be)| {
             total_ops += st.ops;
-            energy_ns_w += be.power_w() * st.busy_ns as f64;
+            let member_w = if shared_board {
+                (be.power_w() - static_w).max(0.0)
+            } else {
+                be.power_w()
+            };
+            energy_ns_w += member_w * st.busy_ns as f64;
             let mut lat = std::mem::take(&mut st.latencies);
             lat.sort_unstable();
             BackendSummary {
@@ -519,5 +572,6 @@ pub fn serve_fleet_stream(
         wall_ns,
         fleet_gops_per_w: if energy_ns_w > 0.0 { total_ops as f64 / energy_ns_w } else { 0.0 },
         slo_violations,
+        board: fleet.budget.clone(),
     })
 }

@@ -21,6 +21,14 @@
 //! within its SLO — load shedding, not queue collapse, is how overload
 //! manifests (the property tests assert exactly this).
 //!
+//! **Partitioned fleets** change nothing in the admission logic, but the
+//! bound's ingredients are re-derived per member: each backend's service
+//! profile is re-simulated against its budget-constrained deployment
+//! ([`Backend::deploy_in_share`](super::Backend::deploy_in_share)), so
+//! [`max_service_ns`] already reflects the member's board share and the
+//! `admission ⇒ compliance` argument carries over unchanged to
+//! co-resident backends.
+//!
 //! [`max_service_ns`]: super::Backend::max_service_ns
 
 use super::admission::ShedReason;

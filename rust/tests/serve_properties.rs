@@ -185,6 +185,37 @@ fn fleet_serving_is_deterministic_for_a_fixed_seed() {
 }
 
 #[test]
+fn partitioned_fleet_keeps_every_serving_invariant() {
+    // the identical conservation/latency/SLO invariants must hold when
+    // the family co-resides on ONE board (`--partition`): routing and
+    // admission are unchanged, only the deployments are share-constrained
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let scenarios: &[(&str, u64, f64, f64, usize, usize)] = &[
+        ("part-steady", 52, 1500.0, 100.0, 300, 64),
+        ("part-overload", 53, 140_000.0, 40.0, 400, 12),
+    ];
+    for &(label, seed, rps, slo_ms, n, cap) in scenarios {
+        let mut cfg = FleetConfig::new(model.clone(), hw.clone());
+        cfg.rps = rps;
+        cfg.slo_ms = slo_ms;
+        cfg.n_requests = n;
+        cfg.queue_cap = cap;
+        cfg.seed = seed;
+        cfg.explore_budget = Some(64);
+        cfg.partition = true;
+        let r = cat::experiments::serve_fleet(&cfg).unwrap();
+        check_invariants(&r, &cfg, label);
+        let b = r.board.as_ref().expect("partitioned run carries the board ledger");
+        assert!(b.aie_used <= b.aie_total, "{label}: board overcommitted");
+        assert!(
+            r.to_json().to_string().contains("\"schema\":\"cat-serve-v2\""),
+            "{label}: partitioned runs report schema v2"
+        );
+    }
+}
+
+#[test]
 fn end_to_end_serve_fleet_derives_a_multi_backend_family() {
     // the acceptance path: BERT-Base/VCK5000 through the in-process
     // exploration (sampled), a 2+-backend fleet, deterministic given seed

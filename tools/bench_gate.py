@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate for BENCH_hotpath.json (stdlib only).
+
+Compares the *fresh* hotpath bench run (``--current``, the JSON CI's smoke
+step just wrote) against the *checked-in* trajectory baseline
+(``--baseline``, the repo's BENCH_hotpath.json) and fails the job when the
+perf trajectory regresses:
+
+* the current run must carry non-empty ``rows`` (an empty run means the
+  bench recorded nothing — always a failure);
+* every gated ``derived`` metric (higher is better) must stay within the
+  relative tolerance of its baseline value: ``current >= baseline * (1 -
+  tolerance)``.  The default tolerance is 0.5 (±50%) — wide enough for
+  CI-runner jitter, tight enough to catch a real fast-path regression;
+* improvements beyond ``baseline * (1 + tolerance)`` pass with a nudge to
+  refresh the baseline so the trajectory stays honest.
+
+Bootstrap: until the first measured trajectory point is committed the
+baseline carries empty rows.  That state fails the gate too (the ROADMAP
+open item), unless ``--allow-bootstrap`` is passed — CI uses it together
+with the step that records and commits the first measured point, so the
+gate becomes enforcing the moment a baseline exists.
+
+Usage:
+    python3 tools/bench_gate.py --current BENCH_smoke.json \
+        --baseline BENCH_hotpath.json [--tolerance 0.5] [--allow-bootstrap]
+
+Exit code 0 = gate passed, 1 = regression/empty rows, 2 = bad invocation.
+"""
+
+import argparse
+import json
+import sys
+
+# Gated derived metrics (all higher-is-better):
+#   engine_speedup_mha_batch64  — exact/fast DES median ratio (fast path)
+#   dse_points_per_sec          — cold-cache exploration throughput
+#   serve_router_reqs_per_sec   — virtual-clock fleet routing throughput
+GATED_METRICS = (
+    "engine_speedup_mha_batch64",
+    "dse_points_per_sec",
+    "serve_router_reqs_per_sec",
+)
+
+
+def load_doc(path, role):
+    # exit 2 (bad invocation), not 1 (regression) — CI wrappers tell
+    # "perf regressed" apart from "gate invoked wrong"
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench gate: cannot read {role} {path!r}: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    if not isinstance(doc, dict):
+        print(f"bench gate: {role} {path!r} is not a JSON object", file=sys.stderr)
+        raise SystemExit(2)
+    return doc
+
+
+def rows_of(doc):
+    rows = doc.get("rows")
+    return rows if isinstance(rows, dict) else {}
+
+
+def derived_of(doc):
+    # tolerate "derived": null / non-object in malformed records
+    derived = doc.get("derived")
+    return derived if isinstance(derived, dict) else {}
+
+
+def metric(doc, name):
+    v = derived_of(doc).get(name)
+    return float(v) if isinstance(v, (int, float)) and not isinstance(v, bool) else None
+
+
+def run_gate(current, baseline, tolerance, allow_bootstrap, out=sys.stdout):
+    """Returns the exit code; prints one line per metric to ``out``."""
+    failures = []
+    if not rows_of(current):
+        failures.append("current run has empty rows — the bench recorded nothing")
+    if not rows_of(baseline):
+        if allow_bootstrap:
+            print(
+                "bench gate: baseline has no measured rows yet (bootstrap) — "
+                "gate passes vacuously; commit a measured BENCH_hotpath.json "
+                "to make it enforcing",
+                file=out,
+            )
+        else:
+            failures.append(
+                "baseline has empty rows — commit a measured BENCH_hotpath.json "
+                "(cargo bench --bench hotpath -- --json BENCH_hotpath.json) or "
+                "pass --allow-bootstrap"
+            )
+    else:
+        cur_smoke = derived_of(current).get("smoke")
+        base_smoke = derived_of(baseline).get("smoke")
+        if cur_smoke != base_smoke:
+            print(
+                f"bench gate: warning — mode mismatch (current smoke={cur_smoke}, "
+                f"baseline smoke={base_smoke}); comparison is apples-to-oranges",
+                file=out,
+            )
+        for name in GATED_METRICS:
+            base = metric(baseline, name)
+            cur = metric(current, name)
+            if base is None:
+                failures.append(f"{name}: missing from baseline derived metrics")
+                continue
+            if cur is None:
+                failures.append(f"{name}: missing from current derived metrics")
+                continue
+            if base <= 0:
+                failures.append(f"{name}: non-positive baseline value {base}")
+                continue
+            ratio = cur / base
+            if ratio < 1.0 - tolerance:
+                failures.append(
+                    f"{name}: regression — {cur:g} vs baseline {base:g} "
+                    f"({ratio:.2f}x, floor {1.0 - tolerance:.2f}x)"
+                )
+            elif ratio > 1.0 + tolerance:
+                print(
+                    f"bench gate: {name}: {cur:g} vs baseline {base:g} "
+                    f"({ratio:.2f}x) — improvement beyond tolerance; consider "
+                    "refreshing the committed baseline",
+                    file=out,
+                )
+            else:
+                print(
+                    f"bench gate: {name}: {cur:g} vs baseline {base:g} "
+                    f"({ratio:.2f}x) within ±{tolerance:.0%}",
+                    file=out,
+                )
+    if failures:
+        for f in failures:
+            print(f"bench gate: FAIL — {f}", file=out)
+        return 1
+    print("bench gate: OK", file=out)
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="fresh bench JSON (smoke run)")
+    ap.add_argument("--baseline", required=True, help="checked-in BENCH_hotpath.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.5,
+        help="relative tolerance on each gated metric (default 0.5 = ±50%%)",
+    )
+    ap.add_argument(
+        "--allow-bootstrap",
+        action="store_true",
+        help="pass vacuously while the baseline still has empty rows",
+    )
+    args = ap.parse_args(argv)
+    if not 0.0 < args.tolerance < 1.0:
+        ap.error("--tolerance must be in (0, 1)")
+    current = load_doc(args.current, "current run")
+    baseline = load_doc(args.baseline, "baseline")
+    return run_gate(current, baseline, args.tolerance, args.allow_bootstrap)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

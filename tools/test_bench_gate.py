@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/bench_gate.py (stdlib only — run directly or via
+pytest): python3 tools/test_bench_gate.py"""
+
+import io
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from bench_gate import run_gate  # noqa: E402
+
+
+def doc(rows=None, derived=None):
+    d = {"schema": "cat-bench-v1", "bench": "hotpath", "rows": rows or {}, "derived": {}}
+    if rows:
+        d["rows"] = rows
+    if derived is not None:
+        d["derived"] = derived
+    return d
+
+
+def measured(engine=3.0, dse=50.0, serve=200000.0, smoke=True):
+    return doc(
+        rows={"engine/mha_scenario_batch64_fast": {"median_ns": 1.0, "iters": 2}},
+        derived={
+            "engine_speedup_mha_batch64": engine,
+            "dse_points_per_sec": dse,
+            "serve_router_reqs_per_sec": serve,
+            "smoke": smoke,
+        },
+    )
+
+
+def gate(current, baseline, tolerance=0.5, allow_bootstrap=False):
+    out = io.StringIO()
+    code = run_gate(current, baseline, tolerance, allow_bootstrap, out=out)
+    return code, out.getvalue()
+
+
+class BenchGateTests(unittest.TestCase):
+    def test_identical_runs_pass(self):
+        code, out = gate(measured(), measured())
+        self.assertEqual(code, 0, out)
+        self.assertIn("OK", out)
+
+    def test_within_tolerance_passes(self):
+        code, out = gate(measured(engine=1.6), measured(engine=3.0))
+        self.assertEqual(code, 0, out)  # 0.53x >= 0.5x floor
+
+    def test_regression_fails(self):
+        code, out = gate(measured(engine=1.4), measured(engine=3.0))
+        self.assertEqual(code, 1)
+        self.assertIn("regression", out)
+        self.assertIn("engine_speedup_mha_batch64", out)
+
+    def test_any_single_metric_regression_fails(self):
+        code, out = gate(measured(serve=1000.0), measured())
+        self.assertEqual(code, 1)
+        self.assertIn("serve_router_reqs_per_sec", out)
+
+    def test_improvement_beyond_tolerance_passes_with_nudge(self):
+        code, out = gate(measured(dse=200.0), measured(dse=50.0))
+        self.assertEqual(code, 0, out)
+        self.assertIn("refreshing", out)
+
+    def test_empty_current_rows_fail(self):
+        code, out = gate(doc(derived={"smoke": True}), measured())
+        self.assertEqual(code, 1)
+        self.assertIn("empty rows", out)
+
+    def test_empty_baseline_fails_without_bootstrap(self):
+        code, out = gate(measured(), doc())
+        self.assertEqual(code, 1)
+        self.assertIn("baseline has empty rows", out)
+
+    def test_empty_baseline_passes_with_bootstrap(self):
+        code, out = gate(measured(), doc(), allow_bootstrap=True)
+        self.assertEqual(code, 0, out)
+        self.assertIn("bootstrap", out)
+
+    def test_bootstrap_does_not_mask_empty_current(self):
+        code, out = gate(doc(), doc(), allow_bootstrap=True)
+        self.assertEqual(code, 1)
+        self.assertIn("current run has empty rows", out)
+
+    def test_missing_metric_in_current_fails(self):
+        cur = measured()
+        del cur["derived"]["dse_points_per_sec"]
+        code, out = gate(cur, measured())
+        self.assertEqual(code, 1)
+        self.assertIn("missing from current", out)
+
+    def test_missing_metric_in_baseline_fails(self):
+        base = measured()
+        del base["derived"]["serve_router_reqs_per_sec"]
+        code, out = gate(measured(), base)
+        self.assertEqual(code, 1)
+        self.assertIn("missing from baseline", out)
+
+    def test_mode_mismatch_warns_but_compares(self):
+        code, out = gate(measured(smoke=True), measured(smoke=False))
+        self.assertEqual(code, 0, out)
+        self.assertIn("mode mismatch", out)
+
+    def test_null_derived_reports_missing_metrics_instead_of_crashing(self):
+        cur = measured()
+        cur["derived"] = None
+        code, out = gate(cur, measured())
+        self.assertEqual(code, 1)
+        self.assertIn("missing from current", out)
+        base = measured()
+        base["derived"] = None
+        code, out = gate(measured(), base)
+        self.assertEqual(code, 1)
+        self.assertIn("missing from baseline", out)
+
+    def test_unreadable_file_exits_2_not_1(self):
+        from bench_gate import main
+        with self.assertRaises(SystemExit) as ctx:
+            main(["--current", "/nonexistent/cur.json", "--baseline", "/nonexistent/base.json"])
+        self.assertEqual(ctx.exception.code, 2)
+
+    def test_non_numeric_metric_fails(self):
+        cur = measured()
+        cur["derived"]["engine_speedup_mha_batch64"] = "fast"
+        code, out = gate(cur, measured())
+        self.assertEqual(code, 1)
+        self.assertIn("missing from current", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
