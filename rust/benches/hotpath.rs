@@ -169,7 +169,8 @@ fn main() {
 
     // --- partitioned-serve row: the same virtual-clock routing loop, but
     //     the family co-resides on ONE board (Σ cores ≤ Total_AIE, joint
-    //     PL pools) with every member re-derived under its share ---
+    //     PL pools) with every member re-derived under its share.  Link
+    //     model off here, so the row isolates the routing path itself ---
     let part_fleet = cat::serve::Fleet::select_partitioned(
         &model,
         &hw,
@@ -177,10 +178,14 @@ fn main() {
         2,
         serve_cfg.max_batch,
         Some(serve_cfg.slo_ms),
+        None,
     )
     .unwrap();
+    let mut part_p50 = std::time::Duration::ZERO;
     let part_med = run_row("serve/partitioned_2backend_route", 2, 20, &mut || {
-        black_box(cat::serve::serve_fleet_on(&serve_cfg, &part_fleet).unwrap());
+        let r = cat::serve::serve_fleet_on(&serve_cfg, &part_fleet).unwrap();
+        part_p50 = r.fleet_stats.percentile(0.50);
+        black_box(r);
     })
     .median_ns();
     let part_reqs_per_sec = serve_cfg.n_requests as f64 / (part_med / 1e9).max(1e-12);
@@ -192,6 +197,51 @@ fn main() {
         part_budget.aie_used,
         part_budget.aie_total,
         part_budget.aie_residual(),
+    );
+
+    // --- contended partitioned row: the identical partition, but the
+    //     shared DRAM/PCIe pools are deliberately tiny so the members
+    //     oversubscribe the memory path and serve on throttled slices.
+    //     The derived `serve_contention_overhead` (contended p50 /
+    //     uncontended p50 modeled latency, virtual clock — fully
+    //     deterministic) gates the contention model's trajectory ---
+    let tight = cat::config::SharedLinkModel { dram_gbps: 30.0, pcie_gbps: 8.0 };
+    let cont_fleet = cat::serve::Fleet::select_partitioned(
+        &model,
+        &hw,
+        &explored,
+        2,
+        serve_cfg.max_batch,
+        Some(serve_cfg.slo_ms),
+        Some(&tight),
+    )
+    .unwrap();
+    let cont_ledger = cont_fleet
+        .budget
+        .as_ref()
+        .and_then(|b| b.links.as_ref())
+        .expect("link model was enabled");
+    assert!(cont_ledger.throttled(), "bench pools must oversubscribe the partition");
+    let mut cont_p50 = std::time::Duration::ZERO;
+    let cont_med = run_row("serve/partitioned_contended_route", 2, 20, &mut || {
+        let r = cat::serve::serve_fleet_on(&serve_cfg, &cont_fleet).unwrap();
+        cont_p50 = r.fleet_stats.percentile(0.50);
+        black_box(r);
+    })
+    .median_ns();
+    let cont_reqs_per_sec = serve_cfg.n_requests as f64 / (cont_med / 1e9).max(1e-12);
+    let serve_contention_overhead = if part_p50.as_nanos() > 0 {
+        cont_p50.as_secs_f64() / part_p50.as_secs_f64()
+    } else {
+        1.0
+    };
+    println!(
+        "  serve (contended): DRAM {:.1}/{:.1} GB/s demanded, worst stretch {:.2}x \
+         ({cont_reqs_per_sec:.0} req/s driver throughput; modeled p50 overhead \
+         {serve_contention_overhead:.3}x vs uncontended partition)",
+        cont_ledger.demanded().dram_gbps,
+        tight.dram_gbps,
+        cont_ledger.members.iter().map(|m| m.stretch).fold(0.0f64, f64::max),
     );
 
     // PJRT hot path (needs artifacts)
@@ -253,6 +303,14 @@ fn main() {
         derived.insert(
             "serve_partitioned_aie_used".to_string(),
             Json::Num(part_budget.aie_used as f64),
+        );
+        derived.insert(
+            "serve_contention_overhead".to_string(),
+            Json::Num((serve_contention_overhead * 1000.0).round() / 1000.0),
+        );
+        derived.insert(
+            "serve_contended_reqs_per_sec".to_string(),
+            Json::Num(cont_reqs_per_sec.round()),
         );
         derived.insert("smoke".to_string(), Json::Bool(smoke));
         // the record's own regenerate command reproduces the mode it was

@@ -295,6 +295,13 @@ impl PlResources {
 #[derive(Debug, Clone, PartialEq)]
 pub struct AcceleratorPlan {
     pub model: ModelConfig,
+    /// The part this plan deploys on.  Usually a whole board; the
+    /// serving layer swaps in board *slices* here (a share of the AIE
+    /// array and PL pools, and — for co-resident partition members on a
+    /// contended memory path — a `mem_throttle < 1.0` that stretches the
+    /// scheduler's stream timings).  Because [`Self::fingerprint`]
+    /// hashes the full plan including this field, every distinct slice
+    /// keys its own stage-sim cache entries.
     pub hw: HardwareConfig,
     /// Eq. 3 decision.
     pub mmsz: usize,

@@ -6,6 +6,29 @@ use std::collections::BTreeMap;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
+/// The board's **shared memory-path pools**: the off-chip DRAM bandwidth
+/// and the host PCIe link that every co-resident accelerator on one
+/// physical part draws from.  A single deployment owns both outright —
+/// its simulated profile already reflects whatever rate it achieves —
+/// but a *partitioned* fleet (`cat serve --partition`) shares them, and
+/// the serving layer negotiates per-member bandwidth grants against
+/// these pools (see `serve::links`), throttling slices proportionally
+/// when the joint demand oversubscribes a pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SharedLinkModel {
+    /// Off-chip DRAM bandwidth pool (GB/s).
+    pub dram_gbps: f64,
+    /// Host PCIe link bandwidth pool (GB/s), full duplex aggregate.
+    pub pcie_gbps: f64,
+}
+
+impl SharedLinkModel {
+    /// The pools of one physical board.
+    pub fn of(hw: &HardwareConfig) -> SharedLinkModel {
+        SharedLinkModel { dram_gbps: hw.dram_bw_gbps, pcie_gbps: hw.pcie_bw_gbps }
+    }
+}
+
 /// Calibrated power-model coefficients (see `sim::power`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PowerModelParams {
@@ -43,6 +66,8 @@ pub struct HardwareConfig {
     pub onchip_sram_bytes: usize,
     /// Off-chip DRAM bandwidth (GB/s).
     pub dram_bw_gbps: f64,
+    /// Host PCIe link bandwidth (GB/s).  VCK5000: Gen3 x16, ~16 GB/s.
+    pub pcie_bw_gbps: f64,
     /// Off-chip DRAM capacity (bytes).
     pub dram_bytes: usize,
     /// PL resource pools (for the Table V estimator).
@@ -53,6 +78,15 @@ pub struct HardwareConfig {
     /// Max pipeline depth a PRG chain may reach before the fully-pipelined
     /// mode stops paying off (`PRG_MAX_Pipeline_Depth`, paper §V.B: 4).
     pub prg_max_pipeline_depth: usize,
+    /// Shared memory-path throttle on this part's stream movers
+    /// (fraction of the nominal rate; `1.0` = uncontended, the invariant
+    /// for every whole physical board).  Board *slices* handed to
+    /// co-resident partition members carry their negotiated
+    /// proportional-share factor here (`serve::links`); the scheduler's
+    /// PU timing stretches the send/receive phases by `1/mem_throttle`
+    /// while compute is unaffected, so contention flows through the DES
+    /// — and both engines (`sim::run` / `sim::run_exact`) — identically.
+    pub mem_throttle: f64,
     pub power: PowerModelParams,
 }
 
@@ -71,12 +105,14 @@ impl HardwareConfig {
             plio_bits: 128,
             onchip_sram_bytes: (23.9 * 1024.0 * 1024.0) as usize,
             dram_bw_gbps: 102.4,
+            pcie_bw_gbps: 16.0,
             dram_bytes: 16 << 30,
             pl_luts: 899_840,
             pl_ffs: 1_799_680,
             pl_brams: 967,
             pl_urams: 463,
             prg_max_pipeline_depth: 4,
+            mem_throttle: 1.0,
             power: PowerModelParams {
                 // calibrated against Table VI: (352 running-avg AIE, 67.6 W),
                 // (352, 61.5 W ViT), (64, 16.2 W limited)
@@ -122,6 +158,11 @@ impl HardwareConfig {
         bytes / bytes_per_ns
     }
 
+    /// The board's shared memory-path pools (DRAM + PCIe).
+    pub fn links(&self) -> SharedLinkModel {
+        SharedLinkModel::of(self)
+    }
+
     /// Peak int8 throughput of the whole AIE array (TOPS).
     pub fn peak_tops(&self) -> f64 {
         2.0 * self.total_aie as f64 * self.aie_macs_per_cycle as f64 * self.aie_freq_ghz
@@ -140,12 +181,14 @@ impl HardwareConfig {
             ("plio_bits", self.plio_bits as f64),
             ("onchip_sram_bytes", self.onchip_sram_bytes as f64),
             ("dram_bw_gbps", self.dram_bw_gbps),
+            ("pcie_bw_gbps", self.pcie_bw_gbps),
             ("dram_bytes", self.dram_bytes as f64),
             ("pl_luts", self.pl_luts as f64),
             ("pl_ffs", self.pl_ffs as f64),
             ("pl_brams", self.pl_brams as f64),
             ("pl_urams", self.pl_urams as f64),
             ("prg_max_pipeline_depth", self.prg_max_pipeline_depth as f64),
+            ("mem_throttle", self.mem_throttle),
             ("power_static_w", self.power.static_w),
             ("power_aie_active_w", self.power.aie_active_w),
             ("power_aie_idle_w", self.power.aie_idle_w),
@@ -165,6 +208,22 @@ impl HardwareConfig {
                 .ok_or_else(|| anyhow!("hardware config missing '{k}'"))
         };
         let u = |k: &str| -> Result<usize> { Ok(f(k)? as usize) };
+        // optional fields (absent in pre-link-model hardware files)
+        let opt = |k: &str, default: f64| f(k).unwrap_or(default);
+        let pcie_bw_gbps = opt("pcie_bw_gbps", 16.0);
+        if !(pcie_bw_gbps.is_finite() && pcie_bw_gbps > 0.0) {
+            return Err(anyhow!("hardware 'pcie_bw_gbps' must be positive, got {pcie_bw_gbps}"));
+        }
+        // a *file* always describes a whole part, and a whole part is
+        // never pre-throttled — the (0, 1] range mirrors
+        // deploy_plan_in_share's grant validation, and anything < 1
+        // would silently slow every simulation of this board
+        let mem_throttle = opt("mem_throttle", 1.0);
+        if !(mem_throttle > 0.0 && mem_throttle <= 1.0) {
+            return Err(anyhow!(
+                "hardware 'mem_throttle' must be in (0, 1], got {mem_throttle}"
+            ));
+        }
         Ok(HardwareConfig {
             name: j
                 .get("name")
@@ -179,12 +238,14 @@ impl HardwareConfig {
             plio_bits: u("plio_bits")?,
             onchip_sram_bytes: u("onchip_sram_bytes")?,
             dram_bw_gbps: f("dram_bw_gbps")?,
+            pcie_bw_gbps,
             dram_bytes: u("dram_bytes")?,
             pl_luts: u("pl_luts")?,
             pl_ffs: u("pl_ffs")?,
             pl_brams: u("pl_brams")?,
             pl_urams: u("pl_urams")?,
             prg_max_pipeline_depth: u("prg_max_pipeline_depth")?,
+            mem_throttle,
             power: PowerModelParams {
                 static_w: f("power_static_w")?,
                 aie_active_w: f("power_aie_active_w")?,
@@ -263,5 +324,46 @@ mod tests {
         let hw = HardwareConfig::vck5000_limited(64);
         assert_eq!(hw.total_aie, 64);
         assert_eq!(hw.aie_freq_ghz, 1.25);
+    }
+
+    #[test]
+    fn boards_are_uncontended_and_expose_link_pools() {
+        for hw in [HardwareConfig::vck5000(), HardwareConfig::vck190()] {
+            assert_eq!(hw.mem_throttle, 1.0, "{}: whole boards never throttle", hw.name);
+            let links = hw.links();
+            assert_eq!(links.dram_gbps, hw.dram_bw_gbps);
+            assert_eq!(links.pcie_gbps, hw.pcie_bw_gbps);
+            assert!(links.pcie_gbps > 0.0 && links.pcie_gbps < links.dram_gbps);
+        }
+    }
+
+    #[test]
+    fn pre_link_model_json_defaults_the_new_fields() {
+        // hardware files written before the link model lack pcie_bw_gbps
+        // and mem_throttle — loading them must not error
+        let mut j = HardwareConfig::vck5000().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("pcie_bw_gbps");
+            m.remove("mem_throttle");
+        }
+        let hw = HardwareConfig::from_json(&j).unwrap();
+        assert_eq!(hw.pcie_bw_gbps, 16.0);
+        assert_eq!(hw.mem_throttle, 1.0);
+    }
+
+    #[test]
+    fn out_of_range_link_fields_are_rejected_on_load() {
+        let set = |key: &str, v: f64| {
+            let mut j = HardwareConfig::vck5000().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert(key.into(), Json::Num(v));
+            }
+            HardwareConfig::from_json(&j)
+        };
+        assert!(set("pcie_bw_gbps", 0.0).is_err());
+        assert!(set("pcie_bw_gbps", -4.0).is_err());
+        assert!(set("mem_throttle", 0.0).is_err(), "zero throttle = infinite stream times");
+        assert!(set("mem_throttle", 1.5).is_err(), "a file cannot widen the memory path");
+        assert!(set("mem_throttle", 0.5).is_ok(), "in-range values still load");
     }
 }

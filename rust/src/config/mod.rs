@@ -8,7 +8,7 @@
 mod hardware;
 mod model;
 
-pub use hardware::{HardwareConfig, PowerModelParams};
+pub use hardware::{HardwareConfig, PowerModelParams, SharedLinkModel};
 pub use model::ModelConfig;
 
 use crate::util::json::Json;

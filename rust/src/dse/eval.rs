@@ -39,7 +39,13 @@ pub struct DesignPoint {
     pub pl_urams: usize,
     // -- simulated metrics --
     pub tops: f64,
-    /// Per-item end-to-end latency, whole model (ms).
+    /// Per-item end-to-end latency, whole model (ms), at the candidate's
+    /// **own** `cand.batch`.  This is an explore-time ranking metric, NOT
+    /// a serving guarantee: the router admits on the worst-case service
+    /// bound over every *serving* batch size (`Backend::max_service_ns`),
+    /// and the partitioner's SLO gate uses that same bound — the two
+    /// diverge from this number in both directions when `cand.batch`
+    /// differs from the serving cap (see `dse::partition`).
     pub latency_ms: f64,
     pub gops_per_aie: f64,
     pub power_w: f64,

@@ -44,7 +44,7 @@ use crate::config::{HardwareConfig, ModelConfig};
 use crate::customize::customize;
 use crate::util::json::Json;
 use crate::util::par::par_map;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// One exploration request.
 #[derive(Debug, Clone)]
@@ -190,8 +190,15 @@ pub fn deploy_plan(
 /// — instead of the whole part.  The multi-EDPU budget check and every
 /// downstream consumer of `plan.hw` then see only this member's share,
 /// so a partitioned backend can never quietly spill into a neighbour's
-/// allocation.  Clocks, window memory, and DRAM stay the board's own:
-/// the partition divides the AIE array and the PL fabric, not time.
+/// allocation.  Clocks and window memory stay the board's own: the
+/// partition divides the AIE array and the PL fabric, not time.
+///
+/// `mem_throttle` is the slice's share of the **shared memory path**
+/// (`1.0` = the member's solo-link rate, the PR 4 behavior; `< 1.0` =
+/// its negotiated fraction when the co-resident fleet oversubscribes
+/// the board's DRAM/PCIe pools — see `serve::links`).  The scheduler
+/// stretches the slice's stream phases by `1/mem_throttle`, so profiles
+/// re-simulated on this plan price the contention.
 ///
 /// Errors when the re-derived design does not fit the share it was
 /// granted (the partitioner allocates shares at the designed footprint,
@@ -201,7 +208,14 @@ pub fn deploy_plan_in_share(
     board: &HardwareConfig,
     cand: &Candidate,
     share: &Share,
+    mem_throttle: f64,
 ) -> Result<AcceleratorPlan> {
+    if !(mem_throttle > 0.0 && mem_throttle <= 1.0) {
+        return Err(anyhow!(
+            "mem_throttle must be in (0, 1], got {mem_throttle} (a grant can shrink the \
+             memory path, never widen it)"
+        ));
+    }
     let mut plan = deploy_plan(model, board, cand)?;
     let need = cand.n_edpu * plan.cores_deployed();
     if need > share.aie {
@@ -234,6 +248,7 @@ pub fn deploy_plan_in_share(
     slice.pl_ffs = share.pl.ffs;
     slice.pl_brams = share.pl.brams;
     slice.pl_urams = share.pl.urams;
+    slice.mem_throttle = mem_throttle;
     plan.hw = slice;
     Ok(plan)
 }

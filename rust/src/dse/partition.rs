@@ -17,9 +17,13 @@
 //! Vis-TOP-style overlay scenario).
 //!
 //! **Selection.**  The best feasible `k`-subset by a scalarized
-//! serving objective: maximize Σ TOPS over members whose per-item
-//! latency meets the SLO (SLO-infeasible members would never admit a
-//! request, so they contribute nothing).  Subsets are enumerated
+//! serving objective: maximize Σ TOPS over members that can actually
+//! **admit** a request under the SLO — gated on the same inequality the
+//! router enforces (`worst_case_service ≤ SLO`, over every batch size
+//! the serving batcher can emit), evaluated on pre-simulated service
+//! profiles the caller supplies per candidate (cheap through the
+//! stage-sim cache).  Members failing the bound would shed 100% of
+//! their traffic, so they contribute nothing.  Subsets are enumerated
 //! exhaustively while `C(n, k)` stays under [`PartitionConfig::enum_cap`]
 //! (frontiers are small); beyond that a deterministic two-pass greedy
 //! (objective density for quality, smallest footprint for
@@ -113,19 +117,23 @@ fn footprint(p: &DesignPoint) -> Share {
     }
 }
 
-/// The admitted-throughput *proxy*: a member's TOPS when its
-/// explore-time per-item latency (at its own `cand.batch`) meets the
-/// SLO, else 0.  This is deliberately the explore-level metric — the
-/// router's actual admission bound uses the re-simulated worst-case
-/// service time over every *serving* batch size (`max_service_ns` at
-/// the serve-side batch cap), which is only known after deployment, so
-/// the two can disagree when `cand.batch` differs from the serving cap.
-/// The proxy picks the subset; the router still enforces the real
-/// bound per request, so the mismatch costs selection quality, never
-/// SLO compliance.
-fn proxy_tops(p: &DesignPoint, slo_ms: Option<f64>) -> f64 {
+/// The admitted-throughput objective: a member's TOPS when its
+/// **worst-case service bound** — `max service_ns` over every batch
+/// size the serving batcher can emit, pre-simulated by the caller from
+/// the candidate's deployment profile — fits the SLO, else 0.  This is
+/// the *same* inequality `serve::route` enforces per request (admission
+/// requires `completion_bound ≤ SLO`, and `worst_case_service` is its
+/// irreducible term), so selection and admission can no longer disagree:
+/// a member scoring positive here can admit traffic, and a member
+/// scoring zero never will.  (The previous proxy gated on the
+/// explore-time per-item latency at the candidate's *own* batch, which
+/// diverges from the serving-batch bound in both directions — subsets
+/// could be picked whose members never admit a request, or serviceable
+/// subsets scored zero and dropped; `rust/tests/partition_properties.rs`
+/// pins both directions.)
+fn admitted_tops(p: &DesignPoint, worst_service_ns: u64, slo_ms: Option<f64>) -> f64 {
     match slo_ms {
-        Some(slo) if p.latency_ms > slo => 0.0,
+        Some(slo) if worst_service_ns as f64 > slo * 1e6 => 0.0,
         _ => p.tops,
     }
 }
@@ -162,6 +170,7 @@ fn n_choose_k(n: usize, k: usize) -> usize {
 /// the incumbent, so the exhaustive scan stays allocation-free.
 fn evaluate_subset(
     points: &[&DesignPoint],
+    bounds: &[u64],
     subset: &[usize],
     board: &HardwareConfig,
     slo_ms: Option<f64>,
@@ -175,7 +184,7 @@ fn evaluate_subset(
         let s = footprint(points[i]);
         aie += s.aie;
         pl = pl.add(&s.pl);
-        objective += proxy_tops(points[i], slo_ms);
+        objective += admitted_tops(points[i], bounds[i], slo_ms);
     }
     match fits(board, aie, &pl) {
         Err(super::Reject::Aie) => {
@@ -215,6 +224,7 @@ fn better(
 /// Exhaustive best-of-size-`k` search (lexicographic subset order).
 fn best_of_size_exhaustive(
     points: &[&DesignPoint],
+    bounds: &[u64],
     k: usize,
     board: &HardwareConfig,
     slo_ms: Option<f64>,
@@ -224,7 +234,9 @@ fn best_of_size_exhaustive(
     let mut best: Option<(f64, usize, Vec<usize>)> = None;
     let mut idx: Vec<usize> = (0..k).collect();
     loop {
-        if let Some((objective, aie)) = evaluate_subset(points, &idx, board, slo_ms, stats) {
+        if let Some((objective, aie)) =
+            evaluate_subset(points, bounds, &idx, board, slo_ms, stats)
+        {
             if better(objective, aie, &idx, &best) {
                 best = Some((objective, aie, idx.clone()));
             }
@@ -287,6 +299,7 @@ fn greedy_picks(
 /// the enumeration cap is exactly the budget bounding that exactness.)
 fn best_of_size_greedy(
     points: &[&DesignPoint],
+    bounds: &[u64],
     k: usize,
     board: &HardwareConfig,
     slo_ms: Option<f64>,
@@ -295,8 +308,8 @@ fn best_of_size_greedy(
     stats.greedy = true;
     let mut by_density: Vec<usize> = (0..points.len()).collect();
     by_density.sort_by(|&a, &b| {
-        let da = proxy_tops(points[a], slo_ms) / points[a].total_cores.max(1) as f64;
-        let db = proxy_tops(points[b], slo_ms) / points[b].total_cores.max(1) as f64;
+        let da = admitted_tops(points[a], bounds[a], slo_ms) / points[a].total_cores.max(1) as f64;
+        let db = admitted_tops(points[b], bounds[b], slo_ms) / points[b].total_cores.max(1) as f64;
         db.total_cmp(&da)
             .then(points[a].total_cores.cmp(&points[b].total_cores))
             .then(a.cmp(&b))
@@ -317,7 +330,9 @@ fn best_of_size_greedy(
         if evaluated.as_ref() == Some(&picks) {
             continue; // both orders converged on the same subset
         }
-        if let Some((objective, aie)) = evaluate_subset(points, &picks, board, slo_ms, stats) {
+        if let Some((objective, aie)) =
+            evaluate_subset(points, bounds, &picks, board, slo_ms, stats)
+        {
             if better(objective, aie, &picks, &best) {
                 best = Some((objective, aie, picks.clone()));
             }
@@ -328,16 +343,29 @@ fn best_of_size_greedy(
 }
 
 /// Find the best feasible co-resident subset of `points` (a ranked,
-/// deduped frontier) on `board`.  Requests larger than the frontier or
-/// infeasible at their requested size degrade to the largest feasible
-/// size, with the drop visible as `stats.selected < stats.requested`.
+/// deduped frontier) on `board`.  `bounds[i]` is point `i`'s worst-case
+/// service bound at the serving batch cap (ns) — `Backend::max_service_ns`
+/// from a pre-simulated deployment profile, the exact quantity the
+/// router's admission inequality uses; the SLO objective gates on it.
+/// Requests larger than the frontier or infeasible at their requested
+/// size degrade to the largest feasible size, with the drop visible as
+/// `stats.selected < stats.requested`.
 pub fn partition_frontier(
     points: &[&DesignPoint],
+    bounds: &[u64],
     board: &HardwareConfig,
     cfg: &PartitionConfig,
 ) -> Result<Partition> {
     if points.is_empty() {
         return Err(anyhow!("cannot partition an empty frontier"));
+    }
+    if points.len() != bounds.len() {
+        return Err(anyhow!(
+            "{} candidates but {} service bounds — every partition candidate needs its \
+             pre-simulated worst-case service bound",
+            points.len(),
+            bounds.len()
+        ));
     }
     if cfg.backends == 0 {
         return Err(anyhow!("a partition needs at least one backend"));
@@ -363,9 +391,9 @@ pub fn partition_frontier(
     let mut zero_fallback: Option<(f64, usize, Vec<usize>)> = None;
     for k in (1..=k_max).rev() {
         let best = if n_choose_k(points.len(), k) > cfg.enum_cap {
-            best_of_size_greedy(points, k, board, cfg.slo_ms, &mut stats)
+            best_of_size_greedy(points, bounds, k, board, cfg.slo_ms, &mut stats)
         } else {
-            best_of_size_exhaustive(points, k, board, cfg.slo_ms, &mut stats)
+            best_of_size_exhaustive(points, bounds, k, board, cfg.slo_ms, &mut stats)
         };
         if let Some((objective, aie_used, members)) = best {
             if objective > 0.0 {
@@ -425,6 +453,12 @@ mod tests {
         crate::config::HardwareConfig::vck5000()
     }
 
+    /// Worst-case service bounds in ms (the serving-batch-cap profile
+    /// maxima a caller pre-simulates), as integer ns.
+    fn bounds_ms(ms: &[f64]) -> Vec<u64> {
+        ms.iter().map(|x| (x * 1e6) as u64).collect()
+    }
+
     #[test]
     fn picks_the_best_feasible_pair_and_accounts_every_subset() {
         // 400-AIE board: {350, 150, 100} — the only feasible pair is
@@ -435,7 +469,8 @@ mod tests {
             point(2, 100, 1000, 5.0, 1.0),
         ];
         let refs: Vec<&DesignPoint> = pts.iter().collect();
-        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        let bounds = bounds_ms(&[1.0, 1.0, 1.0]);
+        let part = partition_frontier(&refs, &bounds, &board(), &PartitionConfig::new(2)).unwrap();
         assert_eq!(part.members, vec![1, 2]);
         assert_eq!(part.aie_used, 250);
         assert!((part.objective_tops - 11.0).abs() < 1e-12);
@@ -454,22 +489,63 @@ mod tests {
 
     #[test]
     fn slo_gates_the_objective_not_the_feasibility() {
-        // same footprints; the slow point contributes 0 TOPS under the
-        // SLO, so the pair {fast, slow} loses to {fast, medium}
+        // same footprints; the point whose worst-case service bound
+        // misses the SLO contributes 0 TOPS, so the pair {fast, slow}
+        // loses to {fast, medium}
         let pts = [
-            point(0, 100, 1000, 9.0, 100.0), // SLO-infeasible but roomy
+            point(0, 100, 1000, 9.0, 100.0), // admission-infeasible but roomy
             point(1, 100, 1000, 5.0, 1.0),
             point(2, 100, 1000, 4.0, 1.0),
         ];
         let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let bounds = bounds_ms(&[100.0, 1.0, 1.0]);
         let mut cfg = PartitionConfig::new(2);
         cfg.slo_ms = Some(10.0);
-        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        let part = partition_frontier(&refs, &bounds, &board(), &cfg).unwrap();
         assert_eq!(part.members, vec![1, 2]);
         assert!((part.objective_tops - 9.0).abs() < 1e-12);
         // without the SLO the 9-TOPS point wins a slot
-        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        let part =
+            partition_frontier(&refs, &bounds, &board(), &PartitionConfig::new(2)).unwrap();
         assert_eq!(part.members, vec![0, 1]);
+    }
+
+    #[test]
+    fn gates_on_the_admission_bound_not_the_explore_latency() {
+        // The PR 4 proxy gated on explore-time latency_ms, which diverges
+        // from the router's serving-batch bound in both directions:
+        //   A looks fast at explore time (1 ms) but its worst-case
+        //     serving bound blows the SLO (200 ms) — it would never admit
+        //     a request;
+        //   B looks slow at explore time (90 ms, its own large batch) but
+        //     its serving-cap bound fits easily (5 ms).
+        // The fixed partitioner must score A zero and B positive — the
+        // old proxy did exactly the opposite.
+        let pts = [
+            point(0, 100, 1000, 9.0, 1.0),  // A: explore-fast, admission-hopeless
+            point(1, 100, 1000, 4.0, 90.0), // B: explore-slow, admission-fine
+        ];
+        let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let bounds = bounds_ms(&[200.0, 5.0]);
+        let mut cfg = PartitionConfig::new(1);
+        cfg.slo_ms = Some(50.0);
+        let part = partition_frontier(&refs, &bounds, &board(), &cfg).unwrap();
+        assert_eq!(part.members, vec![1], "must pick the member that can admit traffic");
+        assert!((part.objective_tops - 4.0).abs() < 1e-12);
+        // a pair keeps B's contribution and zeroes A's
+        let mut cfg2 = PartitionConfig::new(2);
+        cfg2.slo_ms = Some(50.0);
+        let pair = partition_frontier(&refs, &bounds, &board(), &cfg2).unwrap();
+        assert!((pair.objective_tops - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mismatched_bounds_length_errors() {
+        let p = point(0, 100, 100, 1.0, 1.0);
+        let refs = [&p];
+        let err =
+            partition_frontier(&refs, &[], &board(), &PartitionConfig::new(1)).unwrap_err();
+        assert!(format!("{err}").contains("service bound"), "{err}");
     }
 
     #[test]
@@ -483,14 +559,16 @@ mod tests {
             point(2, 150, 1000, 7.0, 200.0),  // C: fits, misses SLO
         ];
         let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let bounds = bounds_ms(&[1.0, 200.0, 200.0]);
         let mut cfg = PartitionConfig::new(2);
         cfg.slo_ms = Some(10.0);
-        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        let part = partition_frontier(&refs, &bounds, &board(), &cfg).unwrap();
         assert_eq!(part.members, vec![0], "the serving singleton must win");
         assert!((part.objective_tops - 10.0).abs() < 1e-12);
         assert_eq!((part.stats.requested, part.stats.selected), (2, 1));
         // without an SLO the same request keeps both members ({B,C})
-        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        let part =
+            partition_frontier(&refs, &bounds, &board(), &PartitionConfig::new(2)).unwrap();
         assert_eq!(part.members, vec![1, 2]);
     }
 
@@ -498,12 +576,15 @@ mod tests {
     fn infeasible_request_degrades_to_largest_feasible_size() {
         let pts = [point(0, 300, 1000, 10.0, 1.0), point(1, 200, 1000, 8.0, 1.0)];
         let refs: Vec<&DesignPoint> = pts.iter().collect();
-        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(2)).unwrap();
+        let bounds = bounds_ms(&[1.0, 1.0]);
+        let part =
+            partition_frontier(&refs, &bounds, &board(), &PartitionConfig::new(2)).unwrap();
         assert_eq!(part.stats.requested, 2);
         assert_eq!(part.stats.selected, 1);
         assert_eq!(part.members, vec![0]); // best singleton by TOPS
         // requests beyond the frontier size clamp the same way
-        let part = partition_frontier(&refs, &board(), &PartitionConfig::new(64)).unwrap();
+        let part =
+            partition_frontier(&refs, &bounds, &board(), &PartitionConfig::new(64)).unwrap();
         assert!(part.stats.selected <= 2);
     }
 
@@ -513,7 +594,8 @@ mod tests {
         hw.pl_luts = 1500;
         let pts = [point(0, 50, 1000, 5.0, 1.0), point(1, 50, 1000, 4.0, 1.0)];
         let refs: Vec<&DesignPoint> = pts.iter().collect();
-        let part = partition_frontier(&refs, &hw, &PartitionConfig::new(2)).unwrap();
+        let bounds = bounds_ms(&[1.0, 1.0]);
+        let part = partition_frontier(&refs, &bounds, &hw, &PartitionConfig::new(2)).unwrap();
         assert_eq!(part.stats.pl_infeasible, 1); // the pair: 2000 LUTs > 1500
         assert_eq!(part.stats.selected, 1);
         assert!(part.pl_used.luts <= hw.pl_luts);
@@ -524,15 +606,16 @@ mod tests {
         let pts: Vec<DesignPoint> =
             (0..12).map(|i| point(i, 30 + i, 100, 1.0 + i as f64, 1.0)).collect();
         let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let bounds = vec![1_000_000u64; refs.len()];
         let mut cfg = PartitionConfig::new(6);
         cfg.enum_cap = 10; // C(12,6) = 924 >> 10
-        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        let part = partition_frontier(&refs, &bounds, &board(), &cfg).unwrap();
         assert!(part.stats.greedy);
         assert_eq!(part.stats.selected, 6);
         assert!(part.aie_used <= board().total_aie);
         assert!(part.members.windows(2).all(|w| w[0] < w[1]));
         // deterministic
-        let again = partition_frontier(&refs, &board(), &cfg).unwrap();
+        let again = partition_frontier(&refs, &bounds, &board(), &cfg).unwrap();
         assert_eq!(part.members, again.members);
     }
 
@@ -547,9 +630,10 @@ mod tests {
             pts.push(point(i, 50, 100, 25.0, 1.0));
         }
         let refs: Vec<&DesignPoint> = pts.iter().collect();
+        let bounds = vec![1_000_000u64; refs.len()];
         let mut cfg = PartitionConfig::new(5);
         cfg.enum_cap = 10; // C(12,5) = 792 >> 10
-        let part = partition_frontier(&refs, &board(), &cfg).unwrap();
+        let part = partition_frontier(&refs, &bounds, &board(), &cfg).unwrap();
         assert!(part.stats.greedy);
         assert_eq!(part.stats.selected, 5, "feasible k=5 must not degrade");
         assert!(part.aie_used <= board().total_aie);
@@ -565,9 +649,11 @@ mod tests {
 
     #[test]
     fn degenerate_inputs_error() {
-        assert!(partition_frontier(&[], &board(), &PartitionConfig::new(1)).is_err());
+        assert!(partition_frontier(&[], &[], &board(), &PartitionConfig::new(1)).is_err());
         let p = point(0, 100, 100, 1.0, 1.0);
         let refs = [&p];
-        assert!(partition_frontier(&refs, &board(), &PartitionConfig::new(0)).is_err());
+        assert!(
+            partition_frontier(&refs, &[1_000_000], &board(), &PartitionConfig::new(0)).is_err()
+        );
     }
 }

@@ -146,8 +146,10 @@ pub fn explore(
 /// EXP-SERVE — the `cat serve --rps` driver: derive a Pareto frontier
 /// for the pair in-process, deploy up to `cfg.max_backends` family
 /// members — co-resident partitions of one board when `cfg.partition`
-/// is set (schema `cat-serve-v2`, with the board ledger), one board per
-/// member otherwise — and route `cfg.n_requests` seeded Poisson
+/// is set (schema `cat-serve-v3` with the board ledger incl. the shared
+/// DRAM/PCIe link negotiation, or `cat-serve-v2` when `cfg.links` is
+/// `None`), one board per member otherwise — and route `cfg.n_requests`
+/// seeded Poisson
 /// arrivals across them with SLO-aware admission
 /// ([`serve`](crate::serve)).  Fully deterministic for a fixed
 /// `cfg.seed` — the report's JSON is byte-identical across runs and

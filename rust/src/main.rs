@@ -23,7 +23,7 @@ use cat::util::cli;
 
 const VALUED: &[&str] = &[
     "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
-    "max-cores", "slo-ms", "budget", "rps", "backends", "queue-cap",
+    "max-cores", "slo-ms", "budget", "rps", "backends", "queue-cap", "dram-gbps", "pcie-gbps",
 ];
 
 fn main() {
@@ -69,13 +69,22 @@ subcommands:
                                             serve batched requests (PJRT)
   serve --rps <r> --slo-ms <x> [--model <m>] [--hw <h>] [--backends K]
         [--requests N] [--batch B] [--queue-cap Q] [--budget K]
-        [--seed S] [--partition] [--json]   SLO-aware fleet serving across
+        [--seed S] [--partition] [--dram-gbps G] [--pcie-gbps G]
+        [--no-links] [--json]               SLO-aware fleet serving across
                                             an explore-derived accelerator
                                             family (virtual clock);
                                             --partition co-locates the
                                             backends on ONE board (joint
-                                            Total_AIE + PL budgets,
-                                            schema cat-serve-v2)
+                                            Total_AIE + PL budgets AND the
+                                            shared DRAM/PCIe pools, schema
+                                            cat-serve-v3; oversubscribed
+                                            links throttle members
+                                            proportionally);
+                                            --dram-gbps / --pcie-gbps
+                                            override the board's link
+                                            pools, --no-links disables the
+                                            contention model (schema
+                                            cat-serve-v2)
   codegen --model <m> --hw <h> [--json]     emit the AIE graph design
 models: bert-base | vit-base | <path>.json
 hardware: vck5000 | vck190 | vck5000-limited-<n> | <path>.json
@@ -375,6 +384,43 @@ fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
         return Err(anyhow!("--queue-cap must be positive (0 would shed everything)"));
     }
     cfg.partition = args.flag("partition");
+    let link_flags = args.flag("no-links")
+        || args.opt("dram-gbps").is_some()
+        || args.opt("pcie-gbps").is_some();
+    if link_flags && !cfg.partition {
+        return Err(anyhow!(
+            "--dram-gbps/--pcie-gbps/--no-links require --partition: the shared link pools \
+             only exist when backends co-reside on one board (a one-board-per-member fleet \
+             owns its links outright)"
+        ));
+    }
+    if args.flag("no-links") {
+        cfg.links = None;
+    }
+    let pool_override = |args: &cli::Args, flag: &str| -> Result<Option<f64>> {
+        match args.opt(flag) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .map(Some)
+                .ok_or_else(|| anyhow!("--{flag} expects a positive number, got '{s}'")),
+        }
+    };
+    let dram = pool_override(args, "dram-gbps")?;
+    let pcie = pool_override(args, "pcie-gbps")?;
+    if dram.is_some() || pcie.is_some() {
+        let links = cfg.links.as_mut().ok_or_else(|| {
+            anyhow!("--dram-gbps/--pcie-gbps conflict with --no-links (no pools to override)")
+        })?;
+        if let Some(v) = dram {
+            links.dram_gbps = v;
+        }
+        if let Some(v) = pcie {
+            links.pcie_gbps = v;
+        }
+    }
     if let Some(s) = args.opt("seed") {
         cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
     }

@@ -335,6 +335,33 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
             if st.greedy { ", greedy" } else { "" },
             b.objective_tops,
         ));
+        if let Some(l) = &b.links {
+            let dem = l.demanded();
+            let sub = |d: f64, pool: f64| if pool > 0.0 { d / pool * 100.0 } else { 0.0 };
+            out.push_str(&format!(
+                "  links: DRAM {:.1}/{:.1} GB/s demanded ({:.0}% of pool), \
+                 PCIe {:.2}/{:.1} GB/s ({:.0}%){}\n",
+                dem.dram_gbps,
+                l.pools.dram_gbps,
+                sub(dem.dram_gbps, l.pools.dram_gbps),
+                dem.pcie_gbps,
+                l.pools.pcie_gbps,
+                sub(dem.pcie_gbps, l.pools.pcie_gbps),
+                if l.throttled() { " — oversubscribed, slices throttled" } else { "" },
+            ));
+            if l.throttled() {
+                let factors: Vec<String> = l
+                    .members
+                    .iter()
+                    .enumerate()
+                    .map(|(i, m)| format!("BE{i} x{:.2}", m.stretch))
+                    .collect();
+                out.push_str(&format!(
+                    "  contention stretch per member: {}\n",
+                    factors.join(", ")
+                ));
+            }
+        }
     }
     out
 }

@@ -122,9 +122,17 @@ impl EdpuReport {
 // PU timing + invocation counting
 // ---------------------------------------------------------------------------
 
-/// PLIO payload bandwidth, bytes/ns.
+/// PLIO payload bandwidth, bytes/ns — scaled by the part's shared
+/// memory-path throttle.  A whole board streams at the nominal PLIO rate
+/// (`mem_throttle == 1.0`, multiplication is exact identity); a board
+/// *slice* granted a proportional share of a contended DRAM/PCIe pool
+/// (`serve::links`) feeds its stream movers correspondingly slower, so
+/// send/receive phases stretch by `1/mem_throttle` while compute
+/// (`t_calc`) is untouched.  Design-time customization (Eq. 3–8 via
+/// `HardwareConfig::t_window_ns`) deliberately ignores the throttle: the
+/// deployed design is fixed; contention is a runtime effect.
 fn plio_bytes_per_ns(hw: &HardwareConfig) -> f64 {
-    hw.plio_bits as f64 / 8.0 * hw.pl_freq_mhz * 1e-3
+    hw.plio_bits as f64 / 8.0 * hw.pl_freq_mhz * 1e-3 * hw.mem_throttle
 }
 
 /// Per-invocation phase times of one PU (see DESIGN.md §7: the rigid
@@ -959,5 +967,44 @@ mod tests {
     fn zero_batch_rejected() {
         let plan = bert_plan();
         assert!(run_stage(&plan, Stage::Mha, 0).is_err());
+    }
+
+    #[test]
+    fn mem_throttle_stretches_streaming_not_compute() {
+        let hw = HardwareConfig::vck5000();
+        let mut half = hw.clone();
+        half.mem_throttle = 0.5;
+        let spec = PuSpec::by_class(crate::arch::PuClass::Large);
+        let full_t = pu_timing(&spec, &hw, 64, 1);
+        let half_t = pu_timing(&spec, &half, 64, 1);
+        assert!((half_t.t_send_ns - 2.0 * full_t.t_send_ns).abs() < 1e-9);
+        assert!((half_t.t_recv_ns - 2.0 * full_t.t_recv_ns).abs() < 1e-9);
+        assert_eq!(half_t.t_calc_ns, full_t.t_calc_ns);
+        // identity at 1.0: bit-exact, so uncontended paths are unchanged
+        let mut one = hw.clone();
+        one.mem_throttle = 1.0;
+        assert_eq!(pu_timing(&spec, &one, 64, 1), full_t);
+    }
+
+    #[test]
+    fn throttled_slice_strictly_slows_the_edpu() {
+        // contended per-item latency ≥ uncontended, monotone in the
+        // over-subscription (smaller throttle = slower), and the stage
+        // cache keys the throttle via the plan fingerprint so the two
+        // plans never alias
+        let model = ModelConfig::bert_base();
+        let mut last = 0.0f64;
+        for throttle in [1.0, 0.5, 0.25] {
+            let mut hw = HardwareConfig::vck5000();
+            hw.mem_throttle = throttle;
+            let plan = customize(&model, &hw, &CustomizeOptions::default()).unwrap();
+            let r = run_edpu(&plan, 4).unwrap();
+            assert!(
+                r.makespan_ns() > last,
+                "throttle {throttle}: {} not slower than {last}",
+                r.makespan_ns()
+            );
+            last = r.makespan_ns();
+        }
     }
 }

@@ -65,6 +65,13 @@ impl MultiEdpuReport {
 /// Resource note: each EDPU instance needs its own AIE allocation; the
 /// caller is responsible for `n_edpu * plan.cores_deployed() <=` the
 /// board budget (checked here).
+///
+/// Contention note: when `plan.hw` is a board *slice* carrying a
+/// negotiated `mem_throttle < 1.0` (a co-resident partition member whose
+/// shared DRAM/PCIe pools are oversubscribed — see `serve::links`), the
+/// per-PU stream phases are already stretched by the scheduler's timing
+/// layer, so every report this function produces — and therefore every
+/// serving profile built on it — reflects the contended memory path.
 pub fn run_multi_edpu(
     plan: &AcceleratorPlan,
     n_edpu: usize,

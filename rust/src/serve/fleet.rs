@@ -12,8 +12,9 @@
 
 use std::collections::BTreeMap;
 
+use super::links::{demand_at, negotiate, LinkLedger};
 use crate::arch::{AcceleratorPlan, PlResources};
-use crate::config::{HardwareConfig, ModelConfig};
+use crate::config::{HardwareConfig, ModelConfig, SharedLinkModel};
 use crate::dse::{
     deploy_plan, deploy_plan_in_share, partition_frontier, DesignPoint, ExploreResult,
     PartitionConfig, PartitionStats, Share,
@@ -52,15 +53,19 @@ impl Backend {
     /// AIE/PL slice via [`deploy_plan_in_share`], so the service profile
     /// — and therefore the router's worst-case admission bound — is
     /// re-simulated against the budget-constrained deployment, not the
-    /// whole board.
+    /// whole board.  `mem_throttle` is the slice's negotiated share of
+    /// the board's DRAM/PCIe pools (`1.0` = uncontended; see
+    /// [`super::links`]): a throttled slice streams slower, so the
+    /// re-simulated profile prices the shared-memory contention.
     pub fn deploy_in_share(
         model: &ModelConfig,
         board: &HardwareConfig,
         point: &DesignPoint,
         max_batch: usize,
         share: &Share,
+        mem_throttle: f64,
     ) -> Result<Backend> {
-        let plan = deploy_plan_in_share(model, board, &point.cand, share)?;
+        let plan = deploy_plan_in_share(model, board, &point.cand, share, mem_throttle)?;
         Backend::from_plan(&plan, point, max_batch)
     }
 
@@ -128,6 +133,12 @@ pub struct FleetBudget {
     /// Σ SLO-feasible member TOPS the partitioner maximized.
     pub objective_tops: f64,
     pub stats: PartitionStats,
+    /// Shared memory-path ledger (DRAM + PCIe pools, per-member grants
+    /// and throttle factors).  `Some` when the fleet was built with a
+    /// [`SharedLinkModel`] — the report then carries schema
+    /// `cat-serve-v3` with a `board.links` block; `None` keeps the PR 4
+    /// `cat-serve-v2` semantics (members draw the pools for free).
+    pub links: Option<LinkLedger>,
 }
 
 impl FleetBudget {
@@ -136,7 +147,8 @@ impl FleetBudget {
         self.aie_total - self.aie_used
     }
 
-    /// The `board` block of the `cat-serve-v2` schema.
+    /// The `board` block of the `cat-serve-v2`/`cat-serve-v3` schemas
+    /// (v3 adds the `links` sub-block when the link model is on).
     pub fn to_json(&self) -> Json {
         let pool = |used: usize, total: usize| {
             let mut p = BTreeMap::new();
@@ -171,6 +183,9 @@ impl FleetBudget {
         part.insert("greedy".into(), Json::Bool(s.greedy));
         part.insert("objective_tops".into(), Json::Num(self.objective_tops));
         m.insert("partition".into(), Json::Obj(part));
+        if let Some(links) = &self.links {
+            m.insert("links".into(), links.to_json());
+        }
         m.insert(
             "shares".into(),
             Json::Arr(
@@ -263,19 +278,33 @@ impl Fleet {
     /// and deploy it: the members' joint footprint satisfies
     /// `Σ total_cores ≤ Total_AIE` and the Table V PL pool bounds (the
     /// same checks `dse::prune` applies per point), chosen to maximize
-    /// Σ SLO-feasible TOPS ([`partition_frontier`]).  Each member is
-    /// re-derived under its granted [`Share`] via
-    /// [`Backend::deploy_in_share`], so every service profile — and the
-    /// router's per-member worst-case bound — reflects the
-    /// budget-constrained deployment.  An infeasible `k` degrades to the
-    /// largest feasible subset; the drop is visible in the returned
-    /// [`FleetBudget::stats`].
+    /// Σ TOPS over members whose **worst-case service bound** fits the
+    /// SLO — every candidate's profile is pre-simulated at the serving
+    /// batch cap (cheap through the stage-sim cache), so the partitioner
+    /// scores on the *same* inequality the router's admission enforces
+    /// ([`partition_frontier`]).  Each member is then re-derived under
+    /// its granted [`Share`] via [`Backend::deploy_in_share`], so every
+    /// service profile — and the router's per-member worst-case bound —
+    /// reflects the budget-constrained deployment.  An infeasible `k`
+    /// degrades to the largest feasible subset; the drop is visible in
+    /// the returned [`FleetBudget::stats`].
+    ///
+    /// `links` enables the **shared memory-path model** ([`super::links`]):
+    /// the selected members' DRAM/PCIe demands are negotiated against the
+    /// pools, and any member of an oversubscribed pool redeploys on a
+    /// throttled slice whose re-simulated profile prices the contention.
+    /// `None` keeps the PR 4 free-pool behavior (schema `cat-serve-v2`).
+    /// Selection gates on the *uncontended* bounds (contention depends on
+    /// who is selected, so it cannot gate its own selection); the router
+    /// still admits against each member's post-throttle profile, so SLO
+    /// compliance is never at risk — a throttled member that can no
+    /// longer bound a request under the SLO simply sheds it.
     ///
     /// Members inherit the ranking's power order, so the returned fleet
     /// keeps the router's cheapest-first contract.  The returned fleet
     /// carries its [`FleetBudget`] (see [`Fleet::budget`]), which the
     /// serving loop consults for shared-board energy accounting and the
-    /// `cat-serve-v2` board block.
+    /// `cat-serve-v2`/`cat-serve-v3` board block.
     pub fn select_partitioned(
         model: &ModelConfig,
         board: &HardwareConfig,
@@ -283,11 +312,53 @@ impl Fleet {
         k: usize,
         max_batch: usize,
         slo_ms: Option<f64>,
+        links: Option<&SharedLinkModel>,
     ) -> Result<Fleet> {
+        if let Some(pools) = links {
+            let ok = |v: f64| v.is_finite() && v > 0.0;
+            if !ok(pools.dram_gbps) || !ok(pools.pcie_gbps) {
+                return Err(anyhow!(
+                    "shared link pools must be positive and finite, got DRAM {} GB/s / \
+                     PCIe {} GB/s (disable the link model with links=None instead of \
+                     zeroing a pool)",
+                    pools.dram_gbps,
+                    pools.pcie_gbps
+                ));
+            }
+        }
         let pts = ranked(explored)?;
+        // Admission-bound pass: pre-simulate every candidate's service
+        // profile (shares are allocated at the designed footprint, so
+        // the whole-board profile equals the in-share one — the PR 4
+        // degeneracy property) and hand the partitioner the router's
+        // worst-case bound per candidate.  Without an SLO the objective
+        // never reads the bounds, so the whole-frontier pass is skipped
+        // (the zeros below are placeholders the partitioner ignores).
+        let bounds: Vec<u64> = if slo_ms.is_some() {
+            pts.iter()
+                .map(|p| Backend::deploy(model, board, p, max_batch).map(|b| b.max_service_ns()))
+                .collect::<Result<_>>()?
+        } else {
+            vec![0; pts.len()]
+        };
         let mut pcfg = PartitionConfig::new(k);
         pcfg.slo_ms = slo_ms;
-        let part = partition_frontier(&pts, board, &pcfg)?;
+        let part = partition_frontier(&pts, &bounds, board, &pcfg)?;
+        // Link negotiation over the *selected* members' uncontended
+        // demands at the serving batch cap.  Only the selected members
+        // are deployed here; when the bounds pass already simulated
+        // them, the stage-sim cache makes these re-derivations lookups.
+        let ledger = match links {
+            None => None,
+            Some(pools) => {
+                let mut demands = Vec::with_capacity(part.members.len());
+                for &pi in &part.members {
+                    let be = Backend::deploy(model, board, pts[pi], max_batch)?;
+                    demands.push(demand_at(model, be.service_ns(be.max_batch()), be.max_batch()));
+                }
+                Some(negotiate(pools, &demands))
+            }
+        };
         let budget = FleetBudget {
             board: board.name.clone(),
             aie_total: board.total_aie,
@@ -297,10 +368,17 @@ impl Fleet {
             shares: part.shares,
             objective_tops: part.objective_tops,
             stats: part.stats,
+            links: ledger,
         };
         let mut backends = Vec::with_capacity(part.members.len());
         for (id, (&pi, share)) in part.members.iter().zip(&budget.shares).enumerate() {
-            let mut b = Backend::deploy_in_share(model, board, pts[pi], max_batch, share)?;
+            let throttle = budget
+                .links
+                .as_ref()
+                .map(|l| 1.0 / l.members[id].stretch)
+                .unwrap_or(1.0);
+            let mut b =
+                Backend::deploy_in_share(model, board, pts[pi], max_batch, share, throttle)?;
             b.id = id;
             backends.push(b);
         }
@@ -398,7 +476,9 @@ mod tests {
         let model = ModelConfig::bert_base();
         let hw = HardwareConfig::vck5000();
         let ex = explored();
-        let fleet = Fleet::select_partitioned(&model, &hw, &ex, 2, 4, Some(80.0)).unwrap();
+        let fleet =
+            Fleet::select_partitioned(&model, &hw, &ex, 2, 4, Some(80.0), Some(&hw.links()))
+                .unwrap();
         let budget = fleet.budget.as_ref().expect("partitioned fleet carries its budget");
         assert_eq!(fleet.len(), budget.shares.len());
         assert_eq!(budget.aie_total, hw.total_aie);
@@ -424,5 +504,21 @@ mod tests {
         let total = j.get("aie_total").unwrap().as_usize().unwrap();
         assert!(used <= total);
         assert_eq!(j.get("aie_residual").unwrap().as_usize().unwrap(), total - used);
+        // link model on: the ledger rode along, one entry per member,
+        // pools = the board's, and the JSON gained the links block
+        let ledger = budget.links.as_ref().expect("link model was enabled");
+        assert_eq!(ledger.members.len(), fleet.len());
+        assert_eq!(ledger.pools, hw.links());
+        for m in &ledger.members {
+            assert!(m.stretch >= 1.0);
+            assert!(m.demand.dram_gbps > 0.0 && m.demand.pcie_gbps > 0.0);
+        }
+        assert!(j.get("links").is_some(), "board block carries the links ledger");
+
+        // link model off: no ledger, no links block (PR 4 semantics)
+        let v2 = Fleet::select_partitioned(&model, &hw, &ex, 2, 4, Some(80.0), None).unwrap();
+        let v2_budget = v2.budget.as_ref().unwrap();
+        assert!(v2_budget.links.is_none());
+        assert!(v2_budget.to_json().get("links").is_none());
     }
 }

@@ -1,0 +1,320 @@
+//! Shared memory-path contention for partitioned fleets.
+//!
+//! PR 4's `--partition` negotiated co-resident members against one
+//! board's `Total_AIE` and Table V PL pools, but every member still drew
+//! the board's full DRAM bandwidth and PCIe link for free — exactly the
+//! overlay pitfall Vis-TOP warns about.  This module closes that gap:
+//!
+//! 1. each selected member's **demand** on the two shared pools is
+//!    derived from its own *uncontended* service profile at the serving
+//!    batch cap (bytes the deployment streams per virtual ns — weights +
+//!    activations for DRAM, host I/O for PCIe);
+//! 2. [`negotiate`] grants each member a **proportional share** of every
+//!    oversubscribed pool (`granted_i = pool · demand_i / Σ demand`) and
+//!    derives the member's service-time **stretch** — the ratio of its
+//!    solo-link rate (`min(demand, pool)`: a member alone on the link is
+//!    the PR 4 baseline, whatever its appetite) to its granted rate;
+//! 3. the fleet redeploys every stretched member on a slice whose
+//!    `mem_throttle = 1/stretch`, so the contended profile is
+//!    **re-simulated** through the same DES the explorer used — the
+//!    router's admission bounds then price contention automatically.
+//!
+//! The model is a single-pass proportional split, deliberately not a
+//! fixed point (throttled members demand less, which would relax the
+//! split; charging the un-relaxed share keeps the bound conservative and
+//! the arithmetic deterministic).  A 1-member partition is bit-identical
+//! to the uncontended deployment by construction: its solo rate *is* its
+//! baseline, so its stretch is exactly 1.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ModelConfig, SharedLinkModel};
+use crate::util::json::Json;
+
+/// One member's bandwidth appetite on the two shared pools (GB/s ==
+/// bytes per virtual ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkDemand {
+    pub dram_gbps: f64,
+    pub pcie_gbps: f64,
+}
+
+/// One member's negotiated outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemberLink {
+    /// Uncontended appetite.
+    pub demand: LinkDemand,
+    /// Proportional share actually granted.
+    pub granted: LinkDemand,
+    /// Service-time stretch = solo-link rate / granted rate, ≥ 1.  The
+    /// member's slice carries `mem_throttle = 1/stretch`.
+    pub stretch: f64,
+}
+
+/// The board-level link ledger: pools, per-member grants, and the
+/// aggregate demand — the `board.links` block of `cat-serve-v3`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkLedger {
+    pub pools: SharedLinkModel,
+    /// `members[i]` belongs to fleet position `i` (cost order).
+    pub members: Vec<MemberLink>,
+}
+
+impl LinkLedger {
+    /// Σ demanded bandwidth per pool.
+    pub fn demanded(&self) -> LinkDemand {
+        LinkDemand {
+            dram_gbps: self.members.iter().map(|m| m.demand.dram_gbps).sum(),
+            pcie_gbps: self.members.iter().map(|m| m.demand.pcie_gbps).sum(),
+        }
+    }
+
+    /// Σ granted bandwidth per pool (never exceeds the pools).
+    pub fn granted(&self) -> LinkDemand {
+        LinkDemand {
+            dram_gbps: self.members.iter().map(|m| m.granted.dram_gbps).sum(),
+            pcie_gbps: self.members.iter().map(|m| m.granted.pcie_gbps).sum(),
+        }
+    }
+
+    /// True when any member runs slower than it would alone.
+    pub fn throttled(&self) -> bool {
+        self.members.iter().any(|m| m.stretch > 1.0)
+    }
+
+    /// The `board.links` block: per-pool demanded vs granted bandwidth
+    /// and the throttle factor per member.
+    pub fn to_json(&self) -> Json {
+        let demanded = self.demanded();
+        let granted = self.granted();
+        let pool = |total: f64, dem: f64, grant: f64| {
+            let mut p = BTreeMap::new();
+            p.insert("pool_gbps".into(), Json::Num(total));
+            p.insert("demanded_gbps".into(), Json::Num(dem));
+            p.insert("granted_gbps".into(), Json::Num(grant));
+            p.insert(
+                "oversubscription".into(),
+                Json::Num(if total > 0.0 { dem / total } else { 0.0 }),
+            );
+            Json::Obj(p)
+        };
+        let mut m = BTreeMap::new();
+        m.insert(
+            "dram".into(),
+            pool(self.pools.dram_gbps, demanded.dram_gbps, granted.dram_gbps),
+        );
+        m.insert(
+            "pcie".into(),
+            pool(self.pools.pcie_gbps, demanded.pcie_gbps, granted.pcie_gbps),
+        );
+        m.insert("throttled".into(), Json::Bool(self.throttled()));
+        m.insert(
+            "members".into(),
+            Json::Arr(
+                self.members
+                    .iter()
+                    .enumerate()
+                    .map(|(i, ml)| {
+                        let mut mm = BTreeMap::new();
+                        mm.insert("backend".into(), Json::Num(i as f64));
+                        mm.insert("dram_demand_gbps".into(), Json::Num(ml.demand.dram_gbps));
+                        mm.insert("dram_granted_gbps".into(), Json::Num(ml.granted.dram_gbps));
+                        mm.insert("pcie_demand_gbps".into(), Json::Num(ml.demand.pcie_gbps));
+                        mm.insert("pcie_granted_gbps".into(), Json::Num(ml.granted.pcie_gbps));
+                        mm.insert("stretch".into(), Json::Num(ml.stretch));
+                        mm.insert("throttle".into(), Json::Num(1.0 / ml.stretch));
+                        Json::Obj(mm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Weight bytes one whole-model pass streams from DRAM: every layer's
+/// QKV + Proj + FFN parameters ([`ModelConfig::layer_weight_bytes`], so
+/// the model's own element width is honored).  BERT-Base int8: ~85 MB —
+/// far beyond the 23.9 MB on-chip SRAM, so weights re-stream every
+/// batch.
+pub fn model_weight_bytes(m: &ModelConfig) -> u64 {
+    m.layer_weight_bytes() as u64 * m.layers as u64
+}
+
+/// DRAM bytes one batch of `k` items moves: the streamed weights plus
+/// activations in and out.
+pub fn dram_bytes_per_batch(m: &ModelConfig, k: usize) -> u64 {
+    model_weight_bytes(m) + pcie_bytes_per_batch(m, k)
+}
+
+/// PCIe bytes one batch of `k` items moves: input and output activations
+/// crossing the host link at the model's element width (weights are
+/// board-resident in DRAM after the one-time load, so they don't transit
+/// PCIe per batch).
+pub fn pcie_bytes_per_batch(m: &ModelConfig, k: usize) -> u64 {
+    2 * (k * m.seq_len * m.embed_dim * m.bytes_per_elem()) as u64
+}
+
+/// One member's pool appetite from its uncontended service time for a
+/// batch of `k` (`service_ns` from the member's profile): bytes per
+/// virtual ns, i.e. GB/s.
+pub fn demand_at(model: &ModelConfig, service_ns: u64, k: usize) -> LinkDemand {
+    let t = service_ns.max(1) as f64;
+    LinkDemand {
+        dram_gbps: dram_bytes_per_batch(model, k) as f64 / t,
+        pcie_gbps: pcie_bytes_per_batch(model, k) as f64 / t,
+    }
+}
+
+/// Proportional share of one pool: `(granted, stretch)`.  Under-
+/// subscribed pools grant every demand in full (stretch 1); an
+/// oversubscribed pool splits proportionally, and the stretch compares
+/// the grant against the member's *solo-link* rate (`min(demand, pool)`)
+/// — a lone member owns the whole pool, so sharing is the only thing
+/// this model ever charges for.
+fn pool_share(demand: f64, total_demand: f64, pool: f64) -> (f64, f64) {
+    if demand <= 0.0 || total_demand <= pool {
+        return (demand, 1.0);
+    }
+    if pool <= 0.0 {
+        // a demanded pool of zero width grants nothing; an infinite
+        // stretch (not the NaN that 0/0 would give) makes the broken
+        // configuration loud — the deploy path rejects a zero throttle
+        // rather than silently serving at rate zero
+        return (0.0, f64::INFINITY);
+    }
+    let granted = pool * demand / total_demand;
+    let solo = demand.min(pool);
+    (granted, (solo / granted).max(1.0))
+}
+
+/// Negotiate every member's grant against the shared pools.  The
+/// member's overall stretch is the worst across pools — its slice is
+/// throttled to the tightest link it transits.
+pub fn negotiate(pools: &SharedLinkModel, demands: &[LinkDemand]) -> LinkLedger {
+    let tot_dram: f64 = demands.iter().map(|d| d.dram_gbps).sum();
+    let tot_pcie: f64 = demands.iter().map(|d| d.pcie_gbps).sum();
+    let members = demands
+        .iter()
+        .map(|d| {
+            let (g_dram, s_dram) = pool_share(d.dram_gbps, tot_dram, pools.dram_gbps);
+            let (g_pcie, s_pcie) = pool_share(d.pcie_gbps, tot_pcie, pools.pcie_gbps);
+            MemberLink {
+                demand: *d,
+                granted: LinkDemand { dram_gbps: g_dram, pcie_gbps: g_pcie },
+                stretch: s_dram.max(s_pcie),
+            }
+        })
+        .collect();
+    LinkLedger { pools: *pools, members }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pools(dram: f64, pcie: f64) -> SharedLinkModel {
+        SharedLinkModel { dram_gbps: dram, pcie_gbps: pcie }
+    }
+
+    fn d(dram: f64, pcie: f64) -> LinkDemand {
+        LinkDemand { dram_gbps: dram, pcie_gbps: pcie }
+    }
+
+    #[test]
+    fn undersubscribed_pools_grant_in_full() {
+        let l = negotiate(&pools(100.0, 16.0), &[d(40.0, 4.0), d(50.0, 6.0)]);
+        assert!(!l.throttled());
+        for m in &l.members {
+            assert_eq!(m.granted, m.demand);
+            assert_eq!(m.stretch, 1.0);
+        }
+    }
+
+    #[test]
+    fn single_member_never_throttles_whatever_its_appetite() {
+        // the PR 4 degeneracy: a lone member owns the whole link — even
+        // when its demand exceeds the pool, its solo rate IS its
+        // baseline, so the stretch is exactly 1
+        let l = negotiate(&pools(100.0, 16.0), &[d(250.0, 40.0)]);
+        assert_eq!(l.members[0].stretch, 1.0);
+        assert!(!l.throttled());
+    }
+
+    #[test]
+    fn oversubscription_splits_proportionally_and_stretches() {
+        // 150 demanded vs a 100 pool: grants 2:1, both stretched 1.5x
+        let l = negotiate(&pools(100.0, 1e9), &[d(100.0, 0.0), d(50.0, 0.0)]);
+        assert!(l.throttled());
+        let (a, b) = (&l.members[0], &l.members[1]);
+        assert!((a.granted.dram_gbps - 100.0 * 100.0 / 150.0).abs() < 1e-9);
+        assert!((b.granted.dram_gbps - 100.0 * 50.0 / 150.0).abs() < 1e-9);
+        assert!((a.stretch - 1.5).abs() < 1e-9);
+        assert!((b.stretch - 1.5).abs() < 1e-9);
+        // Σ granted saturates the pool exactly
+        assert!((l.granted().dram_gbps - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stretch_is_monotone_in_oversubscription() {
+        let demands = [d(80.0, 0.0), d(80.0, 0.0)];
+        let mut last = 0.0;
+        for pool in [200.0, 120.0, 80.0, 40.0, 10.0] {
+            let l = negotiate(&pools(pool, 1e9), &demands);
+            let s = l.members[0].stretch;
+            assert!(s >= last, "pool {pool}: stretch {s} < {last}");
+            assert!(s >= 1.0);
+            last = s;
+        }
+    }
+
+    #[test]
+    fn worst_pool_wins_the_stretch() {
+        // DRAM is fine but PCIe is 4x oversubscribed — the member's
+        // slice must throttle to the PCIe stretch
+        let l = negotiate(&pools(1000.0, 8.0), &[d(10.0, 16.0), d(10.0, 16.0)]);
+        for m in &l.members {
+            assert!((m.stretch - 2.0).abs() < 1e-9, "stretch {}", m.stretch);
+            assert_eq!(m.granted.dram_gbps, m.demand.dram_gbps);
+        }
+    }
+
+    #[test]
+    fn demand_scales_with_traffic_and_inversely_with_service_time() {
+        let m = ModelConfig::bert_base();
+        let fast = demand_at(&m, 1_000_000, 8);
+        let slow = demand_at(&m, 2_000_000, 8);
+        assert!((fast.dram_gbps - 2.0 * slow.dram_gbps).abs() < 1e-9);
+        assert!(fast.dram_gbps > fast.pcie_gbps, "weights dominate DRAM traffic");
+        // BERT-Base weights ~= 85 MB int8
+        let wb = model_weight_bytes(&m) as f64 / (1024.0 * 1024.0);
+        assert!((70.0..100.0).contains(&wb), "{wb} MB");
+    }
+
+    #[test]
+    fn zero_width_demanded_pool_is_loud_not_silently_uncontended() {
+        // pool 0 with positive demand must NOT round-trip to a NaN that
+        // masks as "stretch 1.0"; it grants nothing and stretches
+        // infinitely, which the deploy path rejects as throttle 0
+        let l = negotiate(&pools(0.0, 16.0), &[d(10.0, 1.0), d(10.0, 1.0)]);
+        for m in &l.members {
+            assert_eq!(m.granted.dram_gbps, 0.0);
+            assert!(m.stretch.is_infinite());
+        }
+        assert!(l.throttled());
+    }
+
+    #[test]
+    fn ledger_json_carries_pools_members_and_throttle() {
+        let l = negotiate(&pools(100.0, 16.0), &[d(100.0, 1.0), d(50.0, 1.0)]);
+        let j = l.to_json();
+        let dram = j.get("dram").unwrap();
+        assert_eq!(dram.get("pool_gbps").unwrap().as_f64(), Some(100.0));
+        assert_eq!(dram.get("demanded_gbps").unwrap().as_f64(), Some(150.0));
+        assert!(j.get("throttled").unwrap().as_bool() == Some(true));
+        let members = j.get("members").unwrap().as_arr().unwrap();
+        assert_eq!(members.len(), 2);
+        let t = members[0].get("throttle").unwrap().as_f64().unwrap();
+        assert!((t - 1.0 / 1.5).abs() < 1e-9);
+    }
+}

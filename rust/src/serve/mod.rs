@@ -29,24 +29,32 @@
 //! member its own board, [`Fleet::select_partitioned`] picks the best
 //! frontier subset that **co-resides on one physical board** — joint
 //! `Σ cores ≤ Total_AIE` and Table V PL pool bounds, the Vis-TOP-style
-//! overlay scenario — and re-derives every member under its granted
-//! [`FleetBudget`] share.  The routing/admission path is identical; only
-//! the deployments (and hence each member's re-simulated worst-case
-//! service bound) change, and the report carries the board ledger under
-//! schema `cat-serve-v2`.
+//! overlay scenario — scored on each candidate's pre-simulated
+//! worst-case service bound (the router's own admission inequality),
+//! and re-derives every member under its granted [`FleetBudget`] share.
+//! The **shared memory path** is modeled too ([`links`]): members'
+//! DRAM/PCIe demands are negotiated against the board's pools and
+//! oversubscribed slices are throttled proportionally, re-simulating
+//! their profiles under contention.  The routing/admission path is
+//! identical; only the deployments (and hence each member's re-simulated
+//! worst-case service bound) change, and the report carries the board
+//! ledger under schema `cat-serve-v3` (`cat-serve-v2` when the link
+//! model is disabled).
 
 mod admission;
 mod fleet;
+pub mod links;
 mod router;
 
 pub use admission::{AdmissionStats, ShedReason, TrafficGen};
 pub use fleet::{Backend, Fleet, FleetBudget};
+pub use links::{LinkDemand, LinkLedger, MemberLink};
 pub use router::{route, BackendLoad, RouteDecision};
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
-use crate::config::{HardwareConfig, ModelConfig};
+use crate::config::{HardwareConfig, ModelConfig, SharedLinkModel};
 use crate::coordinator::{Batcher, BatcherConfig, ServeStats};
 use crate::dse;
 use crate::util::json::Json;
@@ -81,12 +89,21 @@ pub struct FleetConfig {
     /// Deploy the fleet as **co-resident partitions of one board**
     /// (`Σ cores ≤ Total_AIE`, joint Table V PL estimate within the
     /// pools) instead of one board per member; the report gains the
-    /// `board` ledger and switches to schema `cat-serve-v2`.
+    /// `board` ledger and switches to schema `cat-serve-v3`
+    /// (`cat-serve-v2` when [`FleetConfig::links`] is `None`).
     pub partition: bool,
+    /// Shared memory-path pools for partitioned deployments (`--partition`):
+    /// the board's DRAM bandwidth and PCIe link that co-resident members
+    /// negotiate over ([`links`]).  Defaults to the board's own pools;
+    /// `None` disables the contention model (PR 4 free-pool semantics,
+    /// schema `cat-serve-v2`).  Ignored without `partition` — a
+    /// one-board-per-member fleet owns its links outright.
+    pub links: Option<SharedLinkModel>,
 }
 
 impl FleetConfig {
     pub fn new(model: ModelConfig, hw: HardwareConfig) -> FleetConfig {
+        let links = Some(hw.links());
         FleetConfig {
             model,
             hw,
@@ -100,6 +117,7 @@ impl FleetConfig {
             seed: 0xCA7,
             explore_budget: Some(128),
             partition: false,
+            links,
         }
     }
 
@@ -170,9 +188,10 @@ impl BackendSummary {
     }
 }
 
-/// The fleet-serving experiment outcome (schema `cat-serve-v1`, or
+/// The fleet-serving experiment outcome (schema `cat-serve-v1`;
 /// `cat-serve-v2` when a partitioned deployment carries its board
-/// ledger).
+/// ledger; `cat-serve-v3` when the board ledger additionally carries
+/// the shared memory-path `links` block).
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub model: String,
@@ -204,7 +223,11 @@ impl FleetReport {
     pub fn to_json(&self) -> Json {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
         let mut m = BTreeMap::new();
-        let schema = if self.board.is_some() { "cat-serve-v2" } else { "cat-serve-v1" };
+        let schema = match &self.board {
+            Some(b) if b.links.is_some() => "cat-serve-v3",
+            Some(_) => "cat-serve-v2",
+            None => "cat-serve-v1",
+        };
         m.insert("schema".into(), Json::Str(schema.into()));
         if let Some(b) = &self.board {
             m.insert("board".into(), b.to_json());
@@ -445,6 +468,7 @@ pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
             cfg.max_backends,
             cfg.max_batch,
             Some(cfg.slo_ms),
+            cfg.links.as_ref(),
         )?
     } else {
         Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)?

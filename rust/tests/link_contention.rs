@@ -1,0 +1,204 @@
+//! Property tests for the shared memory-path contention model
+//! (`serve::links` + throttled board slices):
+//!
+//! * **direction** — a partition that oversubscribes the DRAM pool
+//!   serves every batch size no faster, and strictly slower where the
+//!   stream phases matter, than the same partition with the link model
+//!   disabled;
+//! * **monotonicity** — shrinking the pools (deeper over-subscription)
+//!   never speeds a member up;
+//! * **degeneracy** — a 1-member partition is bit-identical with the
+//!   link model on and off (a lone member owns the whole path), so PR 4
+//!   behavior is preserved exactly;
+//! * **schema** — `cat-serve-v3` with links vs `cat-serve-v2` without
+//!   round-trips with identical serving content.
+
+use cat::config::{HardwareConfig, ModelConfig, SharedLinkModel};
+use cat::dse::{explore, ExploreConfig, ExploreResult, SpaceSpec};
+use cat::serve::{serve_fleet_on, Fleet, FleetConfig};
+use cat::util::json::Json;
+
+fn compact_explored(model: &ModelConfig, hw: &HardwareConfig) -> ExploreResult {
+    let mut cfg = ExploreConfig::new(model.clone(), hw.clone());
+    cfg.sample_budget = None;
+    cfg.space = SpaceSpec::compact_9pt();
+    explore(&cfg).unwrap()
+}
+
+/// A 2-member partitioned fleet under the given link pools (`None` =
+/// contention model off).
+fn two_member_fleet(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    ex: &ExploreResult,
+    links: Option<&SharedLinkModel>,
+) -> Fleet {
+    let fleet = Fleet::select_partitioned(model, hw, ex, 2, 4, Some(200.0), links).unwrap();
+    assert!(fleet.len() >= 2, "fixture drifted: no 2-member partition on the compact frontier");
+    fleet
+}
+
+/// Pools tight enough that any real member pair oversubscribes DRAM.
+fn tight_pools() -> SharedLinkModel {
+    SharedLinkModel { dram_gbps: 4.0, pcie_gbps: 1.0 }
+}
+
+#[test]
+fn oversubscribed_partition_is_strictly_slower_than_free_links() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    let free = two_member_fleet(&model, &hw, &ex, None);
+    let tight = tight_pools();
+    let contended = two_member_fleet(&model, &hw, &ex, Some(&tight));
+    assert_eq!(free.len(), contended.len(), "link pools must not change the selection");
+
+    let ledger = contended.budget.as_ref().unwrap().links.as_ref().unwrap();
+    assert!(ledger.throttled(), "fixture drifted: 4 GB/s DRAM pool not oversubscribed");
+    let demanded = ledger.demanded();
+    assert!(demanded.dram_gbps > tight.dram_gbps, "Σ demand must exceed the pool");
+    // grants saturate but never exceed the pool
+    let granted = ledger.granted();
+    assert!(granted.dram_gbps <= tight.dram_gbps + 1e-9);
+    assert!((granted.dram_gbps - tight.dram_gbps).abs() < 1e-6, "grants saturate the pool");
+
+    for (f, c) in free.backends.iter().zip(&contended.backends) {
+        assert_eq!(f.point.cand.index, c.point.cand.index, "same members, same order");
+        for k in 1..=f.max_batch() {
+            assert!(
+                c.service_ns(k) >= f.service_ns(k),
+                "batch {k}: contended {} < uncontended {}",
+                c.service_ns(k),
+                f.service_ns(k)
+            );
+            assert_eq!(c.ops(k), f.ops(k), "contention must not change the work done");
+        }
+        // the stream phases are on the critical path of every real plan,
+        // so deep throttling shows up strictly, not just weakly
+        assert!(
+            c.max_service_ns() > f.max_service_ns(),
+            "worst-case bound must strictly grow under a {}x stretch",
+            ledger.members[0].stretch
+        );
+    }
+}
+
+#[test]
+fn deeper_oversubscription_is_monotonically_slower() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    // shrinking pools: uncontended -> 2x -> 8x -> 30x oversubscribed
+    let pools = [
+        SharedLinkModel { dram_gbps: 1e6, pcie_gbps: 1e6 },
+        SharedLinkModel { dram_gbps: 60.0, pcie_gbps: 16.0 },
+        SharedLinkModel { dram_gbps: 15.0, pcie_gbps: 4.0 },
+        SharedLinkModel { dram_gbps: 4.0, pcie_gbps: 1.0 },
+    ];
+    let mut last: Option<(Vec<u64>, f64)> = None;
+    for p in &pools {
+        let fleet = two_member_fleet(&model, &hw, &ex, Some(p));
+        let ledger = fleet.budget.as_ref().unwrap().links.as_ref().unwrap();
+        let worst: Vec<u64> = fleet.backends.iter().map(|b| b.max_service_ns()).collect();
+        let stretch = ledger.members.iter().map(|m| m.stretch).fold(0.0f64, f64::max);
+        if let Some((prev_worst, prev_stretch)) = &last {
+            assert!(
+                stretch >= *prev_stretch,
+                "stretch must grow with over-subscription: {stretch} < {prev_stretch}"
+            );
+            for (w, pw) in worst.iter().zip(prev_worst) {
+                assert!(w >= pw, "service bound shrank under a tighter pool: {w} < {pw}");
+            }
+        }
+        last = Some((worst, stretch));
+    }
+    // the extremes differ strictly (the chain is not vacuous)
+    let loose = two_member_fleet(&model, &hw, &ex, Some(&pools[0]));
+    let tight = two_member_fleet(&model, &hw, &ex, Some(&pools[3]));
+    assert!(tight.backends[0].max_service_ns() > loose.backends[0].max_service_ns());
+}
+
+#[test]
+fn one_member_partition_identical_with_and_without_links() {
+    // PR 3/PR 4 degeneracy preserved: a lone member owns the whole
+    // memory path, so the link model must be a bit-exact no-op — same
+    // profiles, and the serve JSON identical apart from the schema tag
+    // and the board.links block itself.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    let with =
+        Fleet::select_partitioned(&model, &hw, &ex, 1, 6, Some(80.0), Some(&hw.links())).unwrap();
+    let without = Fleet::select_partitioned(&model, &hw, &ex, 1, 6, Some(80.0), None).unwrap();
+    assert_eq!(with.len(), 1);
+    assert_eq!(without.len(), 1);
+    let (a, b) = (&with.backends[0], &without.backends[0]);
+    assert_eq!(a.point.cand.index, b.point.cand.index);
+    for k in 1..=6 {
+        assert_eq!(a.service_ns(k), b.service_ns(k), "batch-{k} service time");
+        assert_eq!(a.ops(k), b.ops(k), "batch-{k} ops");
+    }
+    let ledger = with.budget.as_ref().unwrap().links.as_ref().unwrap();
+    assert_eq!(ledger.members[0].stretch, 1.0);
+
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1500.0;
+    cfg.slo_ms = 80.0;
+    cfg.n_requests = 200;
+    cfg.max_batch = 6;
+    cfg.seed = 0xD07;
+    let ra = serve_fleet_on(&cfg, &with).unwrap();
+    let rb = serve_fleet_on(&cfg, &without).unwrap();
+    assert!(ra.to_json().to_string().contains("\"schema\":\"cat-serve-v3\""));
+    assert!(rb.to_json().to_string().contains("\"schema\":\"cat-serve-v2\""));
+    let strip = |j: Json| match j {
+        Json::Obj(mut m) => {
+            m.remove("schema");
+            if let Some(board) = m.get_mut("board") {
+                if let Json::Obj(bm) = board {
+                    bm.remove("links");
+                }
+            }
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    assert_eq!(
+        strip(ra.to_json()).to_string(),
+        strip(rb.to_json()).to_string(),
+        "link model must be a no-op for a lone member"
+    );
+}
+
+#[test]
+fn contended_serving_keeps_every_invariant_and_prices_contention() {
+    // Full serving runs through an oversubscribed partition: admitted
+    // requests still meet the SLO (the router admits on the contended
+    // profiles), conservation holds, and the run is deterministic.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1200.0;
+    cfg.slo_ms = 150.0;
+    cfg.n_requests = 300;
+    cfg.explore_budget = Some(64);
+    cfg.seed = 61;
+    cfg.partition = true;
+    cfg.links = Some(tight_pools());
+    let r = cat::experiments::serve_fleet(&cfg).unwrap();
+    let ledger = r.board.as_ref().unwrap().links.as_ref().unwrap();
+    assert!(ledger.throttled(), "fixture drifted: partition not contended");
+
+    let a = &r.admission;
+    assert_eq!(a.submitted, cfg.n_requests);
+    assert!(a.accounted(), "stats leak requests: {a:?}");
+    let slo_ns = cfg.slo_ns();
+    for resp in &r.responses {
+        assert!(resp.latency_ns() >= resp.batch_service_ns, "req {}", resp.id);
+        assert!(resp.latency_ns() <= slo_ns, "req {} broke SLO under contention", resp.id);
+    }
+    assert_eq!(r.slo_violations, 0);
+    assert!(!r.responses.is_empty(), "a 150 ms SLO admits contended traffic (non-vacuous)");
+    let again = cat::experiments::serve_fleet(&cfg).unwrap();
+    assert_eq!(r.to_json().to_string(), again.to_json().to_string());
+}

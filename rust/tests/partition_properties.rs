@@ -12,10 +12,20 @@
 //!   ledger rather than silently clamped;
 //! * **serving invariants** — conservation, per-request service lower
 //!   bounds, SLO compliance, and fixed-seed determinism all carry over
-//!   to partitioned deployments (schema `cat-serve-v2`).
+//!   to partitioned deployments (schema `cat-serve-v3` with the link
+//!   model, `cat-serve-v2` without);
+//! * **selection = admission** — the partitioner's SLO gate is the
+//!   router's own worst-case service bound, not the explore-time
+//!   latency (the PR 4 `proxy_tops` mismatch, pinned in both
+//!   directions below).
 
 use cat::config::{HardwareConfig, ModelConfig};
-use cat::dse::{explore, ExploreConfig, ExploreResult, SpaceSpec};
+use cat::customize::CustomizeOptions;
+use cat::dse::{
+    explore, partition_frontier, Candidate, DesignPoint, ExploreConfig, ExploreResult,
+    PartitionConfig, SpaceSpec,
+};
+use cat::sched::MultiEdpuMode;
 use cat::serve::{serve_fleet_on, Backend, Fleet, FleetBudget, FleetConfig};
 use cat::util::json::Json;
 
@@ -71,7 +81,9 @@ fn every_selected_subset_fits_one_board() {
     let ex = compact_explored(&model, &hw);
     for k in 1..=4 {
         for slo_ms in [None, Some(80.0), Some(5.0)] {
-            let fleet = Fleet::select_partitioned(&model, &hw, &ex, k, 4, slo_ms).unwrap();
+            let fleet =
+                Fleet::select_partitioned(&model, &hw, &ex, k, 4, slo_ms, Some(&hw.links()))
+                    .unwrap();
             check_budget(&fleet, &hw, &format!("k={k} slo={slo_ms:?}"));
         }
     }
@@ -89,7 +101,9 @@ fn randomized_frontiers_always_partition_within_budget() {
         cfg.seed = seed;
         cfg.slo_ms = Some(80.0);
         let ex = explore(&cfg).unwrap();
-        let fleet = Fleet::select_partitioned(&model, &hw, &ex, 3, 4, Some(80.0)).unwrap();
+        let fleet =
+            Fleet::select_partitioned(&model, &hw, &ex, 3, 4, Some(80.0), Some(&hw.links()))
+                .unwrap();
         check_budget(&fleet, &hw, &format!("seed={seed}"));
     }
 }
@@ -100,10 +114,16 @@ fn one_member_partition_degenerates_to_pr3_single_backend() {
     let hw = HardwareConfig::vck5000();
     let ex = compact_explored(&model, &hw);
     let max_batch = 6;
+    // link model ON: a 1-member partition owns the whole memory path, so
+    // its negotiated stretch is exactly 1 and nothing changes
     let part_fleet =
-        Fleet::select_partitioned(&model, &hw, &ex, 1, max_batch, Some(80.0)).unwrap();
+        Fleet::select_partitioned(&model, &hw, &ex, 1, max_batch, Some(80.0), Some(&hw.links()))
+            .unwrap();
     assert_eq!(part_fleet.len(), 1);
     check_budget(&part_fleet, &hw, "solo");
+    let ledger = part_fleet.budget.as_ref().unwrap().links.as_ref().unwrap();
+    assert_eq!(ledger.members[0].stretch, 1.0, "a lone member never throttles");
+    assert!(!ledger.throttled());
 
     // redeploy the SAME design point the PR 3 way (whole board) — the
     // share was allocated at the designed footprint, so the
@@ -167,7 +187,8 @@ fn infeasible_backend_request_degrades_and_records_the_drop() {
         "fixture drifted: the whole frontier fits one board ({dedup_cores} cores)"
     );
 
-    let fleet = Fleet::select_partitioned(&model, &hw, &ex, 64, 4, None).unwrap();
+    let links = hw.links();
+    let fleet = Fleet::select_partitioned(&model, &hw, &ex, 64, 4, None, Some(&links)).unwrap();
     let st = check_budget(&fleet, &hw, "k=64").stats;
     assert_eq!(st.requested, 64);
     assert!(
@@ -176,13 +197,23 @@ fn infeasible_backend_request_degrades_and_records_the_drop() {
         st.candidates
     );
     // asking for exactly the candidate count records the same drop
-    let fleet2 = Fleet::select_partitioned(&model, &hw, &ex, st.candidates, 4, None).unwrap();
+    let fleet2 =
+        Fleet::select_partitioned(&model, &hw, &ex, st.candidates, 4, None, Some(&links))
+            .unwrap();
     let budget2 = check_budget(&fleet2, &hw, "k=candidates");
     assert_eq!(budget2.stats.requested, st.candidates);
     assert!(budget2.stats.selected < budget2.stats.requested, "drop not recorded");
     // degradation is stable: re-requesting the achieved size reproduces it
-    let fleet3 =
-        Fleet::select_partitioned(&model, &hw, &ex, budget2.stats.selected, 4, None).unwrap();
+    let fleet3 = Fleet::select_partitioned(
+        &model,
+        &hw,
+        &ex,
+        budget2.stats.selected,
+        4,
+        None,
+        Some(&links),
+    )
+    .unwrap();
     let budget3 = check_budget(&fleet3, &hw, "k=selected");
     assert_eq!(fleet3.len(), fleet2.len());
     assert_eq!(budget3.aie_used, budget2.aie_used);
@@ -237,7 +268,7 @@ fn partitioned_serving_keeps_conservation_and_slo_invariants() {
 }
 
 #[test]
-fn serve_json_schema_v2_with_board_block_v1_without() {
+fn serve_json_schema_v3_with_links_v2_without_v1_unpartitioned() {
     let model = ModelConfig::bert_base();
     let hw = HardwareConfig::vck5000();
     let mut cfg = FleetConfig::new(model, hw);
@@ -247,11 +278,13 @@ fn serve_json_schema_v2_with_board_block_v1_without() {
     cfg.explore_budget = Some(64);
     cfg.seed = 7;
 
+    // default: partitioned WITH the link model -> cat-serve-v3 + board.links
     cfg.partition = true;
-    let v2 = cat::experiments::serve_fleet(&cfg).unwrap().to_json().to_string();
-    assert!(v2.contains("\"schema\":\"cat-serve-v2\""), "partitioned schema tag");
-    let doc = Json::parse(&v2).unwrap();
-    let board = doc.get("board").expect("v2 carries the board block");
+    assert!(cfg.links.is_some(), "the link model defaults on");
+    let v3 = cat::experiments::serve_fleet(&cfg).unwrap().to_json().to_string();
+    assert!(v3.contains("\"schema\":\"cat-serve-v3\""), "partitioned schema tag");
+    let doc = Json::parse(&v3).unwrap();
+    let board = doc.get("board").expect("v3 carries the board block");
     let used = board.get("aie_used").unwrap().as_usize().unwrap();
     let total = board.get("aie_total").unwrap().as_usize().unwrap();
     assert!(used <= total, "board.aie_used must fit board.aie_total");
@@ -261,9 +294,133 @@ fn serve_json_schema_v2_with_board_block_v1_without() {
         "residual accounting"
     );
     assert!(!board.get("shares").unwrap().as_arr().unwrap().is_empty());
+    let links = board.get("links").expect("v3 carries the board.links block");
+    for pool in ["dram", "pcie"] {
+        let p = links.get(pool).unwrap();
+        assert!(p.get("pool_gbps").unwrap().as_f64().unwrap() > 0.0, "{pool} pool");
+        assert!(p.get("demanded_gbps").unwrap().as_f64().unwrap() > 0.0, "{pool} demand");
+        assert!(
+            p.get("granted_gbps").unwrap().as_f64().unwrap()
+                <= p.get("pool_gbps").unwrap().as_f64().unwrap() + 1e-9,
+            "{pool} grants never exceed the pool"
+        );
+    }
+    let members = links.get("members").unwrap().as_arr().unwrap();
+    assert_eq!(members.len(), board.get("shares").unwrap().as_arr().unwrap().len());
+    for m in members {
+        let stretch = m.get("stretch").unwrap().as_f64().unwrap();
+        let throttle = m.get("throttle").unwrap().as_f64().unwrap();
+        assert!(stretch >= 1.0);
+        assert!((throttle * stretch - 1.0).abs() < 1e-9);
+    }
 
+    // link model disabled -> the PR 4 cat-serve-v2 document, no links block
+    cfg.links = None;
+    let v2 = cat::experiments::serve_fleet(&cfg).unwrap().to_json().to_string();
+    assert!(v2.contains("\"schema\":\"cat-serve-v2\""), "v2 retained when links disabled");
+    let doc2 = Json::parse(&v2).unwrap();
+    assert!(doc2.get("board").is_some(), "v2 keeps the board block");
+    assert!(doc2.get("board").unwrap().get("links").is_none(), "v2 has no links block");
+
+    // unpartitioned -> v1, no board block at all
     cfg.partition = false;
     let v1 = cat::experiments::serve_fleet(&cfg).unwrap().to_json().to_string();
     assert!(v1.contains("\"schema\":\"cat-serve-v1\""), "v1 retained without --partition");
     assert!(!v1.contains("\"board\""), "v1 must not grow a board block");
+}
+
+/// Synthetic design point with a chosen footprint, throughput, and
+/// explore-time latency (the partitioner only reads those fields).
+fn synth_point(index: usize, cores: usize, tops: f64, latency_ms: f64) -> DesignPoint {
+    DesignPoint {
+        cand: Candidate {
+            index,
+            opts: CustomizeOptions::default(),
+            batch: 4,
+            edpu_budget: cores,
+            n_edpu: 1,
+            multi_mode: MultiEdpuMode::Parallel,
+        },
+        mmsz: 64,
+        plio_aie: 8,
+        independent_linear: true,
+        p_atb: 4,
+        mha_mode: cat::arch::ParallelMode::Serial,
+        ffn_mode: cat::arch::ParallelMode::Serial,
+        cores_per_edpu: cores,
+        total_cores: cores,
+        pl_luts: 1000,
+        pl_ffs: 1000,
+        pl_brams: 10,
+        pl_urams: 0,
+        tops,
+        latency_ms,
+        gops_per_aie: 1.0,
+        power_w: 10.0,
+        gops_per_w: 1.0,
+    }
+}
+
+#[test]
+fn regression_selection_gate_is_the_admission_bound_not_explore_latency() {
+    // Pins the PR 4 `proxy_tops` mismatch in BOTH directions.  The
+    // pre-fix partitioner gated the SLO objective on the explore-time
+    // per-item latency at the candidate's own batch; the router admits
+    // on the post-deployment worst-case service bound at the serving
+    // batch cap.  Construct a frontier where the two disagree both ways:
+    //
+    //   A: explore latency 1 ms (passes a 50 ms SLO) but a 200 ms
+    //      worst-case serving bound — the router would NEVER admit a
+    //      request to it;
+    //   B: explore latency 90 ms (fails the SLO at explore time — e.g. a
+    //      large own-batch) but a 5 ms serving bound — it serves fine.
+    //
+    // The pre-fix partitioner scores A=9, B=0 and deploys A: a fleet
+    // that sheds 100% of traffic.  The fixed partitioner must invert
+    // that — this test fails on the pre-fix code by construction.
+    let hw = HardwareConfig::vck5000();
+    let pts = [
+        synth_point(0, 100, 9.0, 1.0),  // A: explore-fast, admission-hopeless
+        synth_point(1, 100, 4.0, 90.0), // B: explore-slow, admission-fine
+    ];
+    let refs: Vec<&DesignPoint> = pts.iter().collect();
+    let bounds: Vec<u64> = vec![(200.0 * 1e6) as u64, (5.0 * 1e6) as u64];
+    let mut cfg = PartitionConfig::new(1);
+    cfg.slo_ms = Some(50.0);
+    let part = partition_frontier(&refs, &bounds, &hw, &cfg).unwrap();
+    assert_eq!(part.members, vec![1], "must select the member that actually admits traffic");
+    assert!(
+        (part.objective_tops - 4.0).abs() < 1e-12,
+        "objective counts only admission-feasible TOPS, got {}",
+        part.objective_tops
+    );
+}
+
+#[test]
+fn partition_objective_matches_deployed_admission_bounds() {
+    // End to end on a real frontier: with the link model off (so the
+    // deployed profiles are exactly the scoring profiles), the achieved
+    // objective must equal the Σ TOPS of deployed members whose
+    // worst-case service bound fits the SLO — i.e. selection scored on
+    // precisely what the deployment admits with.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    for slo_ms in [5.0f64, 40.0, 80.0] {
+        let fleet =
+            Fleet::select_partitioned(&model, &hw, &ex, 2, 4, Some(slo_ms), None).unwrap();
+        let budget = fleet.budget.as_ref().unwrap();
+        let slo_ns = slo_ms * 1e6;
+        let admitted_tops: f64 = fleet
+            .backends
+            .iter()
+            .filter(|b| (b.max_service_ns() as f64) <= slo_ns)
+            .map(|b| b.point.tops)
+            .sum();
+        assert!(
+            (budget.objective_tops - admitted_tops).abs() < 1e-6,
+            "slo={slo_ms}: objective {} vs deployed admission-feasible TOPS {admitted_tops}",
+            budget.objective_tops
+        );
+    }
 }

@@ -359,6 +359,58 @@ fn sim_fast_path_matches_exact_des() {
     });
 }
 
+/// Fast-vs-exact parity on **throttled board slices**: a partitioned
+/// member whose shared DRAM/PCIe grant stretches its stream phases
+/// (`hw.mem_throttle < 1`) must simulate identically through the fast
+/// engine and the fast-path-free reference — the throttle only rescales
+/// PU send/receive times before the scenario is built, so every engine
+/// mechanism (isolated-node closed form, cycle fast-forward) must stay
+/// exact under it.  Also asserts the contention direction: a throttled
+/// slice is never faster than the uncontended plan.
+#[test]
+fn sim_fast_path_matches_exact_under_throttled_slices() {
+    property("sim/fast_vs_exact_throttled", 10, |rng| {
+        let model = ModelConfig::bert_base();
+        let mut hw = HardwareConfig::vck5000();
+        let baseline = {
+            let plan = customize(&model, &hw, &CustomizeOptions::default())
+                .map_err(|e| e.to_string())?;
+            let wl = layer_workload(&plan.model, plan.mmsz, plan.independent_linear);
+            let sc = cat::sched::build_mha_pipelined(&plan, &wl, 4, true)
+                .map_err(|e| e.to_string())?;
+            cat::sim::run(&sc).map_err(|e| format!("baseline: {e}"))?.makespan_ns
+        };
+        hw.mem_throttle = *rng.choose(&[0.8, 0.5, 0.25, 0.1]);
+        let plan =
+            customize(&model, &hw, &CustomizeOptions::default()).map_err(|e| e.to_string())?;
+        let wl = layer_workload(&plan.model, plan.mmsz, plan.independent_linear);
+        let sc = cat::sched::build_mha_pipelined(&plan, &wl, 4, true)
+            .map_err(|e| e.to_string())?;
+        let fast = cat::sim::run(&sc).map_err(|e| format!("fast: {e}"))?;
+        let exact = cat::sim::run_exact(&sc).map_err(|e| format!("exact: {e}"))?;
+        close(fast.makespan_ns, exact.makespan_ns, 1e-9)
+            .map_err(|e| format!("throttle {}: makespan {e}", hw.mem_throttle))?;
+        if fast.bytes_moved != exact.bytes_moved {
+            return Err(format!(
+                "bytes_moved {} != exact {}",
+                fast.bytes_moved, exact.bytes_moved
+            ));
+        }
+        for (f, x) in fast.nodes.iter().zip(&exact.nodes) {
+            if f.n_inv != x.n_inv {
+                return Err(format!("{}: n_inv {} != {}", f.name, f.n_inv, x.n_inv));
+            }
+        }
+        if fast.makespan_ns < baseline {
+            return Err(format!(
+                "throttle {} made the slice FASTER: {} < uncontended {baseline}",
+                hw.mem_throttle, fast.makespan_ns
+            ));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn useful_ops_never_exceed_padded_peak() {
     property("metrics/tops_below_peak", 30, |rng| {

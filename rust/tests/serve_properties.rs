@@ -209,8 +209,8 @@ fn partitioned_fleet_keeps_every_serving_invariant() {
         let b = r.board.as_ref().expect("partitioned run carries the board ledger");
         assert!(b.aie_used <= b.aie_total, "{label}: board overcommitted");
         assert!(
-            r.to_json().to_string().contains("\"schema\":\"cat-serve-v2\""),
-            "{label}: partitioned runs report schema v2"
+            r.to_json().to_string().contains("\"schema\":\"cat-serve-v3\""),
+            "{label}: partitioned runs with the (default) link model report schema v3"
         );
     }
 }

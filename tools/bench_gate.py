@@ -8,12 +8,15 @@ perf trajectory regresses:
 
 * the current run must carry non-empty ``rows`` (an empty run means the
   bench recorded nothing — always a failure);
-* every gated ``derived`` metric (higher is better) must stay within the
-  relative tolerance of its baseline value: ``current >= baseline * (1 -
-  tolerance)``.  The default tolerance is 0.5 (±50%) — wide enough for
-  CI-runner jitter, tight enough to catch a real fast-path regression;
-* improvements beyond ``baseline * (1 + tolerance)`` pass with a nudge to
-  refresh the baseline so the trajectory stays honest.
+* every gated ``derived`` metric must stay within the relative tolerance
+  of its baseline value in its stated direction — throughput-style
+  metrics are higher-is-better (``current >= baseline * (1 -
+  tolerance)``), the contention-overhead ratio is lower-is-better
+  (``current <= baseline * (1 + tolerance)``).  The default tolerance is
+  0.5 (±50%) — wide enough for CI-runner jitter, tight enough to catch a
+  real regression;
+* improvements beyond the tolerance pass with a nudge to refresh the
+  baseline so the trajectory stays honest.
 
 Bootstrap: until the first measured trajectory point is committed the
 baseline carries empty rows.  That state fails the gate too (the ROADMAP
@@ -32,14 +35,18 @@ import argparse
 import json
 import sys
 
-# Gated derived metrics (all higher-is-better):
-#   engine_speedup_mha_batch64  — exact/fast DES median ratio (fast path)
-#   dse_points_per_sec          — cold-cache exploration throughput
-#   serve_router_reqs_per_sec   — virtual-clock fleet routing throughput
+# Gated derived metrics, with their direction:
+#   engine_speedup_mha_batch64  (higher) — exact/fast DES median ratio
+#   dse_points_per_sec          (higher) — cold-cache exploration throughput
+#   serve_router_reqs_per_sec   (higher) — virtual-clock routing throughput
+#   serve_contention_overhead   (lower)  — contended/uncontended modeled p50
+#       on the same partition (virtual clock, deterministic); growth means
+#       the shared-memory contention model got more pessimistic
 GATED_METRICS = (
-    "engine_speedup_mha_batch64",
-    "dse_points_per_sec",
-    "serve_router_reqs_per_sec",
+    ("engine_speedup_mha_batch64", "higher"),
+    ("dse_points_per_sec", "higher"),
+    ("serve_router_reqs_per_sec", "higher"),
+    ("serve_contention_overhead", "lower"),
 )
 
 
@@ -102,7 +109,7 @@ def run_gate(current, baseline, tolerance, allow_bootstrap, out=sys.stdout):
                 f"baseline smoke={base_smoke}); comparison is apples-to-oranges",
                 file=out,
             )
-        for name in GATED_METRICS:
+        for name, direction in GATED_METRICS:
             base = metric(baseline, name)
             cur = metric(current, name)
             if base is None:
@@ -115,12 +122,24 @@ def run_gate(current, baseline, tolerance, allow_bootstrap, out=sys.stdout):
                 failures.append(f"{name}: non-positive baseline value {base}")
                 continue
             ratio = cur / base
-            if ratio < 1.0 - tolerance:
+            # the documented contract is symmetric around 1.0 in the
+            # metric's own ratio: higher-is-better regresses below
+            # (1 - tolerance), lower-is-better regresses above
+            # (1 + tolerance)
+            if direction == "higher":
+                regressed = ratio < 1.0 - tolerance
+                improved = ratio > 1.0 + tolerance
+                limit = f"floor {1.0 - tolerance:.2f}x"
+            else:
+                regressed = ratio > 1.0 + tolerance
+                improved = ratio < 1.0 - tolerance
+                limit = f"ceiling {1.0 + tolerance:.2f}x"
+            if regressed:
                 failures.append(
                     f"{name}: regression — {cur:g} vs baseline {base:g} "
-                    f"({ratio:.2f}x, floor {1.0 - tolerance:.2f}x)"
+                    f"({ratio:.2f}x, {direction}-is-better, {limit})"
                 )
-            elif ratio > 1.0 + tolerance:
+            elif improved:
                 print(
                     f"bench gate: {name}: {cur:g} vs baseline {base:g} "
                     f"({ratio:.2f}x) — improvement beyond tolerance; consider "
@@ -130,7 +149,7 @@ def run_gate(current, baseline, tolerance, allow_bootstrap, out=sys.stdout):
             else:
                 print(
                     f"bench gate: {name}: {cur:g} vs baseline {base:g} "
-                    f"({ratio:.2f}x) within ±{tolerance:.0%}",
+                    f"({ratio:.2f}x, {direction}-is-better) within ±{tolerance:.0%}",
                     file=out,
                 )
     if failures:

@@ -20,13 +20,14 @@ def doc(rows=None, derived=None):
     return d
 
 
-def measured(engine=3.0, dse=50.0, serve=200000.0, smoke=True):
+def measured(engine=3.0, dse=50.0, serve=200000.0, contention=2.0, smoke=True):
     return doc(
         rows={"engine/mha_scenario_batch64_fast": {"median_ns": 1.0, "iters": 2}},
         derived={
             "engine_speedup_mha_batch64": engine,
             "dse_points_per_sec": dse,
             "serve_router_reqs_per_sec": serve,
+            "serve_contention_overhead": contention,
             "smoke": smoke,
         },
     )
@@ -61,6 +62,31 @@ class BenchGateTests(unittest.TestCase):
 
     def test_improvement_beyond_tolerance_passes_with_nudge(self):
         code, out = gate(measured(dse=200.0), measured(dse=50.0))
+        self.assertEqual(code, 0, out)
+        self.assertIn("refreshing", out)
+
+    def test_contention_overhead_growth_fails_lower_is_better(self):
+        # overhead is a ratio (contended/uncontended p50): growth beyond
+        # tolerance = the contention model regressed
+        code, out = gate(measured(contention=5.0), measured(contention=2.0))
+        self.assertEqual(code, 1)
+        self.assertIn("serve_contention_overhead", out)
+        self.assertIn("regression", out)
+
+    def test_contention_overhead_within_tolerance_passes(self):
+        code, out = gate(measured(contention=2.8), measured(contention=2.0))
+        self.assertEqual(code, 0, out)  # 1.4x growth < 1.5x ceiling
+
+    def test_contention_overhead_ceiling_is_symmetric_with_the_docs(self):
+        # the contract is cur > baseline * (1 + tolerance) fails — NOT the
+        # looser cur > baseline / (1 - tolerance); 1.75x growth must fail
+        code, out = gate(measured(contention=3.5), measured(contention=2.0))
+        self.assertEqual(code, 1, out)
+        self.assertIn("serve_contention_overhead", out)
+        self.assertIn("ceiling", out)
+
+    def test_contention_overhead_drop_is_an_improvement_not_a_failure(self):
+        code, out = gate(measured(contention=1.05), measured(contention=4.0))
         self.assertEqual(code, 0, out)
         self.assertIn("refreshing", out)
 
