@@ -244,6 +244,31 @@ fn main() {
         cont_ledger.members.iter().map(|m| m.stretch).fold(0.0f64, f64::max),
     );
 
+    // --- failover row: the same 2-backend fleet, but the cheapest
+    //     member crashes 50 ms into the stream and recovers 100 ms
+    //     later (virtual clock — inside the arrival span in both smoke
+    //     and full mode).  Times the fault-era routing path: orphan
+    //     drain, survivor re-admission, recovery rejoin ---
+    let mut fail_cfg = serve_cfg.clone();
+    fail_cfg.faults = Some(cat::serve::FaultPolicy::Schedule(cat::serve::FaultSchedule {
+        events: vec![cat::serve::FaultEvent {
+            at_ns: 50_000_000,
+            kind: cat::serve::FaultKind::Crash { backend: 0, down_ns: 100_000_000 },
+        }],
+    }));
+    let mut fail_requeued = 0usize;
+    let fail_med = run_row("serve/failover_route", 2, 20, &mut || {
+        let r = cat::serve::serve_fleet_on(&fail_cfg, &serve_fleet).unwrap();
+        fail_requeued = r.faults.as_ref().map_or(0, |f| f.requeued);
+        black_box(r);
+    })
+    .median_ns();
+    let failover_reqs_per_sec = fail_cfg.n_requests as f64 / (fail_med / 1e9).max(1e-12);
+    println!(
+        "  serve (failover): mid-stream crash + recovery, {fail_requeued} rider(s) \
+         requeued ({failover_reqs_per_sec:.0} req/s driver throughput)"
+    );
+
     // PJRT hot path (needs artifacts)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         use cat::coordinator::synthetic_request;
@@ -311,6 +336,10 @@ fn main() {
         derived.insert(
             "serve_contended_reqs_per_sec".to_string(),
             Json::Num(cont_reqs_per_sec.round()),
+        );
+        derived.insert(
+            "serve_failover_reqs_per_sec".to_string(),
+            Json::Num(failover_reqs_per_sec.round()),
         );
         derived.insert("smoke".to_string(), Json::Bool(smoke));
         // the record's own regenerate command reproduces the mode it was

@@ -27,6 +27,18 @@ impl SharedLinkModel {
     pub fn of(hw: &HardwareConfig) -> SharedLinkModel {
         SharedLinkModel { dram_gbps: hw.dram_bw_gbps, pcie_gbps: hw.pcie_bw_gbps }
     }
+
+    /// The pools after a degradation event: each scaled by a factor in
+    /// `(0, 1]` (fault injection narrows links, it never widens them —
+    /// the same direction `mem_throttle` is validated to).
+    pub fn scaled(&self, dram_scale: f64, pcie_scale: f64) -> SharedLinkModel {
+        debug_assert!(dram_scale > 0.0 && dram_scale <= 1.0, "dram_scale {dram_scale}");
+        debug_assert!(pcie_scale > 0.0 && pcie_scale <= 1.0, "pcie_scale {pcie_scale}");
+        SharedLinkModel {
+            dram_gbps: self.dram_gbps * dram_scale,
+            pcie_gbps: self.pcie_gbps * pcie_scale,
+        }
+    }
 }
 
 /// Calibrated power-model coefficients (see `sim::power`).

@@ -89,6 +89,17 @@ impl<J: Send + 'static, R: Send + 'static> WorkerPool<J, R> {
         self.shared.available.notify_one();
     }
 
+    /// Pull every not-yet-started job back out of the queue (in-flight
+    /// jobs are untouched — a worker that already popped its job will
+    /// still complete it).  This is the thread-pool analogue of the
+    /// serving loop's fault-time drain: on a backend failure the
+    /// coordinator reclaims the queued work and re-submits it elsewhere
+    /// instead of letting it die with the pool.
+    pub fn drain_queued(&self) -> Vec<J> {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.drain(..).collect()
+    }
+
     /// Results collected so far.
     pub fn results_len(&self) -> usize {
         self.shared.done.lock().unwrap().len()
@@ -232,6 +243,42 @@ mod tests {
         let mut out = pool.shutdown().unwrap();
         out.sort_unstable();
         assert_eq!(out.len(), 20);
+    }
+
+    #[test]
+    fn drain_queued_reclaims_unstarted_jobs() {
+        // a stalled pool (executor blocks on a gate) accumulates a queue;
+        // drain_queued hands the backlog back for re-submission while any
+        // in-flight job still completes on shutdown — the conservation the
+        // serving loop's fault-time drain relies on
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let factory: ExecutorFactory<u64, u64> = Arc::new(move |_wid| {
+            let g = Arc::clone(&g);
+            Ok(Box::new(move |j: u64| {
+                let (lock, cv) = &*g;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                Ok(vec![j])
+            }) as Executor<u64, u64>)
+        });
+        let pool = WorkerPool::start("t", 1, factory).unwrap();
+        for j in 0..10u64 {
+            pool.submit(j);
+        }
+        // the single worker holds at most one popped job at the gate; the
+        // rest come back out, in submission order
+        let reclaimed = pool.drain_queued();
+        assert!(reclaimed.len() >= 9, "at most one job can be in flight");
+        assert!(reclaimed.windows(2).all(|w| w[0] < w[1]), "submission order");
+        assert!(pool.drain_queued().is_empty(), "drain empties the queue");
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        let done = pool.shutdown().unwrap();
+        assert_eq!(done.len() + reclaimed.len(), 10, "every job reclaimed or completed");
     }
 
     #[test]

@@ -151,9 +151,14 @@ pub fn explore(
 /// `None`), one board per member otherwise — and route `cfg.n_requests`
 /// seeded Poisson
 /// arrivals across them with SLO-aware admission
-/// ([`serve`](crate::serve)).  Fully deterministic for a fixed
-/// `cfg.seed` — the report's JSON is byte-identical across runs and
-/// thread counts.
+/// ([`serve`](crate::serve)).  When `cfg.faults` is set, a deterministic
+/// fault schedule (scripted or seeded random) is injected along the way:
+/// failed backends drop out of admission, their work is re-admitted on
+/// the survivors, partitioned fleets re-negotiate the shared links over
+/// the survivors, and the report switches to schema `cat-serve-v4` with
+/// a `faults` block.  Fully deterministic for a fixed `cfg.seed` — the
+/// report's JSON is byte-identical across runs and thread counts, with
+/// or without faults.
 pub fn serve_fleet(cfg: &crate::serve::FleetConfig) -> Result<crate::serve::FleetReport> {
     crate::serve::serve_fleet(cfg)
 }

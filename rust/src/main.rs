@@ -24,6 +24,7 @@ use cat::util::cli;
 const VALUED: &[&str] = &[
     "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
     "max-cores", "slo-ms", "budget", "rps", "backends", "queue-cap", "dram-gbps", "pcie-gbps",
+    "faults", "mtbf-s", "mttr-s", "max-retries",
 ];
 
 fn main() {
@@ -70,7 +71,9 @@ subcommands:
   serve --rps <r> --slo-ms <x> [--model <m>] [--hw <h>] [--backends K]
         [--requests N] [--batch B] [--queue-cap Q] [--budget K]
         [--seed S] [--partition] [--dram-gbps G] [--pcie-gbps G]
-        [--no-links] [--json]               SLO-aware fleet serving across
+        [--no-links]
+        [--faults <spec.json> | --mtbf-s <s> --mttr-s <s>]
+        [--max-retries R] [--json]          SLO-aware fleet serving across
                                             an explore-derived accelerator
                                             family (virtual clock);
                                             --partition co-locates the
@@ -84,7 +87,20 @@ subcommands:
                                             override the board's link
                                             pools, --no-links disables the
                                             contention model (schema
-                                            cat-serve-v2)
+                                            cat-serve-v2);
+                                            --faults injects a scripted
+                                            crash/stall/slowdown/
+                                            link_degrade schedule,
+                                            --mtbf-s/--mttr-s a seeded
+                                            random one (virtual seconds):
+                                            failed backends are excluded
+                                            from admission, their work is
+                                            re-admitted on survivors
+                                            (bounded by --max-retries,
+                                            default 3), and the report
+                                            switches to schema
+                                            cat-serve-v4 with a faults
+                                            block
   codegen --model <m> --hw <h> [--json]     emit the AIE graph design
 models: bert-base | vit-base | <path>.json
 hardware: vck5000 | vck190 | vck5000-limited-<n> | <path>.json
@@ -437,6 +453,43 @@ fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
                 }
             }
         };
+    }
+    let mtbf = args.opt("mtbf-s");
+    let mttr = args.opt("mttr-s");
+    if let Some(path) = args.opt("faults") {
+        if mtbf.is_some() || mttr.is_some() {
+            return Err(anyhow!(
+                "--faults (scripted schedule) and --mtbf-s/--mttr-s (random faults) are \
+                 mutually exclusive"
+            ));
+        }
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading fault spec '{path}': {e}"))?;
+        let j = cat::util::json::Json::parse(&src)
+            .map_err(|e| anyhow!("parsing fault spec '{path}': {e}"))?;
+        cfg.faults = Some(cat::serve::FaultPolicy::Schedule(
+            cat::serve::FaultSchedule::from_json(&j)?,
+        ));
+    } else {
+        match (mtbf, mttr) {
+            (None, None) => {}
+            (Some(b), Some(r)) => {
+                let parse_s = |flag: &str, s: &str| -> Result<f64> {
+                    s.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0).ok_or_else(
+                        || anyhow!("--{flag} expects a positive number of seconds, got '{s}'"),
+                    )
+                };
+                cfg.faults = Some(cat::serve::FaultPolicy::Random {
+                    mtbf_s: parse_s("mtbf-s", b)?,
+                    mttr_s: parse_s("mttr-s", r)?,
+                });
+            }
+            _ => return Err(anyhow!("--mtbf-s and --mttr-s must be given together")),
+        }
+    }
+    if let Some(s) = args.opt("max-retries") {
+        cfg.max_retries =
+            s.parse().map_err(|_| anyhow!("--max-retries expects an integer, got '{s}'"))?;
     }
     let r = experiments::serve_fleet(&cfg)?;
     if args.flag("json") {

@@ -278,15 +278,30 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
         ]);
     }
     let mut out = t.render();
-    out.push_str(&format!(
-        "  {} submitted: {} completed, {} shed ({} SLO / {} capacity, rate {:.1}%)\n",
-        a.submitted,
-        a.completed,
-        a.shed(),
-        a.shed_slo,
-        a.shed_capacity,
-        a.shed_rate() * 100.0,
-    ));
+    if r.faults.is_some() {
+        out.push_str(&format!(
+            "  {} submitted: {} completed, {} shed ({} SLO / {} capacity / {} fault / \
+             {} retry-exhausted, rate {:.1}%)\n",
+            a.submitted,
+            a.completed,
+            a.shed(),
+            a.shed_slo,
+            a.shed_capacity,
+            a.shed_fault,
+            a.shed_retry,
+            a.shed_rate() * 100.0,
+        ));
+    } else {
+        out.push_str(&format!(
+            "  {} submitted: {} completed, {} shed ({} SLO / {} capacity, rate {:.1}%)\n",
+            a.submitted,
+            a.completed,
+            a.shed(),
+            a.shed_slo,
+            a.shed_capacity,
+            a.shed_rate() * 100.0,
+        ));
+    }
     let s = &r.fleet_stats;
     out.push_str(&format!(
         "  fleet p50/p95/p99: {:.3} / {:.3} / {:.3} ms (SLO {} ms, {} violation(s)); \
@@ -361,6 +376,42 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
                     factors.join(", ")
                 ));
             }
+        }
+    }
+    if let Some(f) = &r.faults {
+        let injected = f.timeline.iter().filter(|(_, applied)| *applied).count();
+        out.push_str(&format!(
+            "  faults: {} injected of {} scheduled; {} rider(s) requeued, {} re-admitted; \
+             degraded-window p99 {:.3} ms\n",
+            injected,
+            f.timeline.len(),
+            f.requeued,
+            f.retried,
+            f.degraded_p99_ms,
+        ));
+        for (i, b) in f.backends.iter().enumerate() {
+            if b.downs == 0 && b.requeued == 0 {
+                continue;
+            }
+            let avail = if r.wall_ns == 0 {
+                1.0
+            } else {
+                (r.wall_ns - b.down_ns) as f64 / r.wall_ns as f64
+            };
+            out.push_str(&format!(
+                "  BE{i}: {} down window(s), {:.3} ms down (availability {:.2}%), \
+                 {} requeued\n",
+                b.downs,
+                b.down_ns as f64 / 1e6,
+                avail * 100.0,
+                b.requeued,
+            ));
+        }
+        if !f.renegotiations.is_empty() {
+            out.push_str(&format!(
+                "  link renegotiations: {} (freed bandwidth relaxes survivor throttles)\n",
+                f.renegotiations.len(),
+            ));
         }
     }
     out

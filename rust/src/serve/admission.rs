@@ -11,6 +11,10 @@
 use crate::util::prng::Prng;
 
 /// Why a request was shed.
+///
+/// `as_str` is matched without a wildcard arm on purpose: adding a
+/// variant without naming its JSON string is a compile error, not a
+/// silent `"unknown"` in reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShedReason {
     /// Some backend had queue room, but none could bound completion
@@ -18,6 +22,12 @@ pub enum ShedReason {
     Slo,
     /// Every backend's bounded queue was full.
     Capacity,
+    /// Orphaned by a backend fault and no surviving backend could still
+    /// bound completion within the SLO (or all survivors were full/down).
+    Fault,
+    /// Orphaned and re-admitted, but bounced more than `max_retries`
+    /// times before any backend could retire it.
+    RetryExhausted,
 }
 
 impl ShedReason {
@@ -25,14 +35,18 @@ impl ShedReason {
         match self {
             ShedReason::Slo => "slo",
             ShedReason::Capacity => "capacity",
+            ShedReason::Fault => "fault",
+            ShedReason::RetryExhausted => "retry_exhausted",
         }
     }
 }
 
-/// Fleet-level request accounting.  Conservation:
-/// `submitted == completed + shed_slo + shed_capacity` and
-/// `admitted == completed` once the stream has drained (everything
-/// admitted completes — admission is the only drop point).
+/// Fleet-level request accounting.  Conservation once the stream has
+/// drained: `submitted == admitted + shed_slo + shed_capacity` (the
+/// arrival-time split) and `admitted == completed + shed_fault +
+/// shed_retry` (everything admitted either completes or is attributed
+/// to a fault).  Fault-free both collapse to the original invariant
+/// `submitted == completed + shed` with `admitted == completed`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AdmissionStats {
     pub submitted: usize,
@@ -40,11 +54,19 @@ pub struct AdmissionStats {
     pub completed: usize,
     pub shed_slo: usize,
     pub shed_capacity: usize,
+    /// Orphaned by a fault, unservable on the survivors within the SLO.
+    pub shed_fault: usize,
+    /// Orphaned, re-admitted, and bounced past the retry budget.
+    pub shed_retry: usize,
+    /// Riders drained off a faulted backend (each may retry or shed).
+    pub requeued: usize,
+    /// Requeued riders successfully re-admitted on a survivor.
+    pub retried: usize,
 }
 
 impl AdmissionStats {
     pub fn shed(&self) -> usize {
-        self.shed_slo + self.shed_capacity
+        self.shed_slo + self.shed_capacity + self.shed_fault + self.shed_retry
     }
 
     pub fn shed_rate(&self) -> f64 {
@@ -55,14 +77,19 @@ impl AdmissionStats {
     }
 
     /// The conservation invariant (valid after the stream has drained).
+    /// `admitted` counts *distinct requests* that ever entered a queue —
+    /// a requeued rider's re-admission does not re-increment it.
     pub fn accounted(&self) -> bool {
-        self.completed + self.shed() == self.submitted && self.admitted == self.completed
+        self.admitted + self.shed_slo + self.shed_capacity == self.submitted
+            && self.completed + self.shed_fault + self.shed_retry == self.admitted
     }
 
     pub fn record_shed(&mut self, reason: ShedReason) {
         match reason {
             ShedReason::Slo => self.shed_slo += 1,
             ShedReason::Capacity => self.shed_capacity += 1,
+            ShedReason::Fault => self.shed_fault += 1,
+            ShedReason::RetryExhausted => self.shed_retry += 1,
         }
     }
 }
@@ -146,5 +173,32 @@ mod tests {
         assert!(s.accounted());
         assert!((s.shed_rate() - 0.3).abs() < 1e-12);
         assert_eq!(ShedReason::Capacity.as_str(), "capacity");
+    }
+
+    #[test]
+    fn stats_conserve_with_fault_sheds() {
+        // 12 submitted: 2 shed at arrival, 10 admitted; of those, 7
+        // completed, 2 shed to a fault, 1 exhausted its retries
+        let mut s =
+            AdmissionStats { submitted: 12, admitted: 10, completed: 7, ..Default::default() };
+        s.record_shed(ShedReason::Slo);
+        s.record_shed(ShedReason::Capacity);
+        s.record_shed(ShedReason::Fault);
+        s.record_shed(ShedReason::Fault);
+        s.record_shed(ShedReason::RetryExhausted);
+        assert_eq!(s.shed(), 5);
+        assert!(s.accounted());
+        // losing a fault shed breaks conservation
+        s.shed_fault -= 1;
+        assert!(!s.accounted());
+    }
+
+    #[test]
+    fn shed_reason_strings_are_pinned() {
+        // the JSON schema strings — changing one is a report break
+        assert_eq!(ShedReason::Slo.as_str(), "slo");
+        assert_eq!(ShedReason::Capacity.as_str(), "capacity");
+        assert_eq!(ShedReason::Fault.as_str(), "fault");
+        assert_eq!(ShedReason::RetryExhausted.as_str(), "retry_exhausted");
     }
 }

@@ -1,0 +1,516 @@
+//! Deterministic fault injection for the fleet-serving loop.
+//!
+//! A [`FaultSchedule`] is a sorted list of virtual-clock events the
+//! serving loop applies while it drives the request stream:
+//!
+//! * **crash** — the backend dies at `at`: its forming batch and every
+//!   in-flight batch are orphaned and re-admitted on the survivors, and
+//!   the backend is excluded from admission until `at + down`
+//!   (omitting `down_ms` means it never comes back);
+//! * **stall** — the backend freezes for the window: nothing is lost,
+//!   every queued completion shifts by the window, and batches whose
+//!   riders can no longer meet their deadlines are orphaned instead of
+//!   served late;
+//! * **slowdown** — the backend stays up but batches *dispatched* inside
+//!   the window take `factor`× their simulated service time (admission
+//!   prices the stretched worst case, so completed requests still meet
+//!   the SLO);
+//! * **link_degrade** — the shared DRAM/PCIe pools scale down from `at`
+//!   on (partitioned fleets with the link model only): the loop
+//!   re-negotiates every member's grant against the shrunken pools.
+//!
+//! Schedules come from a `--faults <spec.json>` file or are generated
+//! from `--mtbf-s`/`--mttr-s` by [`FaultSchedule::random`] — seeded and
+//! virtual-clock, so every fault run is exactly reproducible.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use anyhow::{anyhow, Result};
+
+/// Down-time cap (virtual ns): far beyond any experiment horizon, but
+/// low enough that `busy_until + service` arithmetic can never overflow
+/// (the serving loop clamps its cursor to `u64::MAX / 2`).
+pub const DOWN_CAP_NS: u64 = u64::MAX / 4;
+
+/// What a fault event does to the fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The backend dies: queued/in-flight work is orphaned and
+    /// re-admitted on survivors; down for `down_ns` (saturating —
+    /// `DOWN_CAP_NS` means it never recovers).
+    Crash { backend: usize, down_ns: u64 },
+    /// The backend freezes for `down_ns`: nothing is lost, completions
+    /// shift by the window, deadline-violating batches are orphaned.
+    Stall { backend: usize, down_ns: u64 },
+    /// Batches dispatched during the window serve `factor`× slower.
+    Slowdown { backend: usize, down_ns: u64, factor: f64 },
+    /// The shared link pools scale to `dram_scale`/`pcie_scale` of their
+    /// current width from this point on (partition + link model only).
+    LinkDegrade { dram_scale: f64, pcie_scale: f64 },
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Crash { .. } => "crash",
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::Slowdown { .. } => "slowdown",
+            FaultKind::LinkDegrade { .. } => "link_degrade",
+        }
+    }
+
+    /// The backend a fault targets (`None` for fleet-wide events).
+    pub fn backend(&self) -> Option<usize> {
+        match self {
+            FaultKind::Crash { backend, .. }
+            | FaultKind::Stall { backend, .. }
+            | FaultKind::Slowdown { backend, .. } => Some(*backend),
+            FaultKind::LinkDegrade { .. } => None,
+        }
+    }
+}
+
+/// One scheduled fault at a virtual timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_ns: u64,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// One `faults.timeline` entry (`applied` = whether the loop reached
+    /// this event before the stream drained).
+    pub fn to_json(&self, applied: bool) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("at_ms".into(), Json::Num(self.at_ns as f64 / 1e6));
+        m.insert("kind".into(), Json::Str(self.kind.name().into()));
+        if let Some(b) = self.kind.backend() {
+            m.insert("backend".into(), Json::Num(b as f64));
+        }
+        match self.kind {
+            FaultKind::Crash { down_ns, .. } | FaultKind::Stall { down_ns, .. } => {
+                m.insert("down_ms".into(), Json::Num(down_ns.min(DOWN_CAP_NS) as f64 / 1e6));
+            }
+            FaultKind::Slowdown { down_ns, factor, .. } => {
+                m.insert("down_ms".into(), Json::Num(down_ns as f64 / 1e6));
+                m.insert("factor".into(), Json::Num(factor));
+            }
+            FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
+                m.insert("dram_scale".into(), Json::Num(dram_scale));
+                m.insert("pcie_scale".into(), Json::Num(pcie_scale));
+            }
+        }
+        m.insert("applied".into(), Json::Bool(applied));
+        Json::Obj(m)
+    }
+}
+
+/// A sorted, validated fault timeline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+}
+
+/// How the serving loop obtains its fault timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultPolicy {
+    /// An explicit schedule (`--faults <spec.json>`).
+    Schedule(FaultSchedule),
+    /// Seeded random faults (`--mtbf-s`/`--mttr-s`): exponential
+    /// inter-fault gaps with mean `mtbf_s` and repair windows with mean
+    /// `mttr_s`, resolved into a [`FaultSchedule`] at serve time (the
+    /// generator needs the fleet size and the arrival horizon).
+    Random { mtbf_s: f64, mttr_s: f64 },
+}
+
+fn ns_of_ms(ms: f64) -> u64 {
+    (ms * 1e6).round() as u64
+}
+
+impl FaultSchedule {
+    /// Parse a `--faults` spec: either a bare array of event objects or
+    /// `{"events": [...]}`.  Each event carries `at_ms`, `kind`, and the
+    /// kind's own fields:
+    ///
+    /// ```json
+    /// {"events": [
+    ///   {"at_ms": 40, "kind": "crash", "backend": 0, "down_ms": 200},
+    ///   {"at_ms": 60, "kind": "stall", "backend": 1, "down_ms": 5},
+    ///   {"at_ms": 80, "kind": "slowdown", "backend": 1, "down_ms": 10, "factor": 1.5},
+    ///   {"at_ms": 90, "kind": "link_degrade", "dram_scale": 0.5, "pcie_scale": 1.0}
+    /// ]}
+    /// ```
+    ///
+    /// A crash without `down_ms` never recovers.  Backend indices are
+    /// checked against the actual fleet later ([`FaultSchedule::validate`],
+    /// the fleet size is unknown at parse time).
+    pub fn from_json(j: &Json) -> Result<FaultSchedule> {
+        let arr = j
+            .as_arr()
+            .or_else(|| j.get("events").and_then(Json::as_arr))
+            .ok_or_else(|| {
+                anyhow!("fault spec must be an array of events or {{\"events\": [...]}}")
+            })?;
+        let mut events = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let ctx = |msg: String| anyhow!("fault event #{i}: {msg}");
+            let num = |key: &str| -> Result<f64> {
+                e.get(key)
+                    .and_then(Json::as_f64)
+                    .filter(|v| v.is_finite())
+                    .ok_or_else(|| ctx(format!("'{key}' must be a finite number")))
+            };
+            let at_ms = num("at_ms")?;
+            if at_ms < 0.0 {
+                return Err(ctx(format!("'at_ms' must be >= 0, got {at_ms}")));
+            }
+            let backend = || -> Result<usize> {
+                e.get("backend")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| ctx("'backend' must be a non-negative integer".into()))
+            };
+            let down_ns = |required: bool| -> Result<u64> {
+                match e.get("down_ms") {
+                    None if required => Err(ctx("'down_ms' is required for this kind".into())),
+                    None => Ok(DOWN_CAP_NS),
+                    Some(_) => {
+                        let ms = num("down_ms")?;
+                        if ms <= 0.0 {
+                            return Err(ctx(format!("'down_ms' must be positive, got {ms}")));
+                        }
+                        Ok(ns_of_ms(ms).min(DOWN_CAP_NS))
+                    }
+                }
+            };
+            let scale = |key: &str| -> Result<f64> {
+                let v = num(key)?;
+                if !(v > 0.0 && v <= 1.0) {
+                    return Err(ctx(format!("'{key}' must be in (0, 1], got {v}")));
+                }
+                Ok(v)
+            };
+            let kind = match e.get("kind").and_then(Json::as_str) {
+                Some("crash") => FaultKind::Crash { backend: backend()?, down_ns: down_ns(false)? },
+                Some("stall") => FaultKind::Stall { backend: backend()?, down_ns: down_ns(true)? },
+                Some("slowdown") => {
+                    let factor = num("factor")?;
+                    if factor < 1.0 {
+                        return Err(ctx(format!("'factor' must be >= 1, got {factor}")));
+                    }
+                    FaultKind::Slowdown { backend: backend()?, down_ns: down_ns(true)?, factor }
+                }
+                Some("link_degrade") => FaultKind::LinkDegrade {
+                    dram_scale: scale("dram_scale")?,
+                    pcie_scale: scale("pcie_scale")?,
+                },
+                other => {
+                    return Err(ctx(format!(
+                        "'kind' must be crash|stall|slowdown|link_degrade, got {other:?}"
+                    )))
+                }
+            };
+            events.push(FaultEvent { at_ns: ns_of_ms(at_ms), kind });
+        }
+        let mut s = FaultSchedule { events };
+        s.sort();
+        Ok(s)
+    }
+
+    /// Generate a seeded random schedule: exponential inter-fault gaps
+    /// (mean `mtbf_s` virtual seconds) up to `horizon_ns`, each fault a
+    /// uniformly chosen crash/stall/slowdown on a uniformly chosen
+    /// backend with an exponential repair window (mean `mttr_s`).  Only
+    /// backend faults are generated — link degradation needs the
+    /// partitioned link model, which random schedules cannot assume.
+    pub fn random(
+        seed: u64,
+        mtbf_s: f64,
+        mttr_s: f64,
+        n_backends: usize,
+        horizon_ns: u64,
+    ) -> FaultSchedule {
+        assert!(mtbf_s > 0.0 && mttr_s > 0.0, "MTBF/MTTR must be positive");
+        assert!(n_backends > 0, "need a fleet to fault");
+        let mut rng = Prng::new(seed);
+        let mut exp_ns = |mean_s: f64| -> u64 {
+            let gap_s = -(1.0 - rng.f64()).ln() * mean_s;
+            (gap_s * 1e9).round().min(DOWN_CAP_NS as f64) as u64
+        };
+        let mut events = Vec::new();
+        let mut t_ns = 0u64;
+        loop {
+            t_ns = t_ns.saturating_add(exp_ns(mtbf_s));
+            if t_ns >= horizon_ns {
+                break;
+            }
+            let backend = rng.below(n_backends as u64) as usize;
+            let down_ns = exp_ns(mttr_s).max(1);
+            let kind = match rng.below(3) {
+                0 => FaultKind::Crash { backend, down_ns },
+                1 => FaultKind::Stall { backend, down_ns },
+                _ => {
+                    // a stretch in [1.25, 2.0): strong enough to perturb
+                    // admission, bounded so dispatch pricing stays sane
+                    let factor = 1.25 + 0.75 * rng.f64();
+                    FaultKind::Slowdown { backend, down_ns, factor }
+                }
+            };
+            events.push(FaultEvent { at_ns: t_ns, kind });
+        }
+        FaultSchedule { events }
+    }
+
+    /// Stable sort by timestamp (equal-time events keep spec order).
+    pub fn sort(&mut self) {
+        self.events.sort_by_key(|e| e.at_ns);
+    }
+
+    /// Validate against the actual fleet: backend indices in range, and
+    /// link degradation only when the fleet carries a link ledger.
+    pub fn validate(&self, n_backends: usize, has_links: bool) -> Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            if let Some(b) = e.kind.backend() {
+                if b >= n_backends {
+                    return Err(anyhow!(
+                        "fault event #{i} targets backend {b}, but the fleet has only \
+                         {n_backends} backend(s)"
+                    ));
+                }
+            } else if !has_links {
+                return Err(anyhow!(
+                    "fault event #{i} is a link_degrade, which needs --partition with the \
+                     shared link model enabled (the pools don't exist otherwise)"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-backend fault accounting for the report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BackendFaultStats {
+    /// Crash/stall windows that hit this backend.
+    pub downs: usize,
+    /// Total downtime, clamped to the experiment wall (virtual ns).
+    pub down_ns: u64,
+    /// Riders orphaned off this backend (drained for re-admission).
+    pub requeued: usize,
+}
+
+/// The `faults` block of the `cat-serve-v4` schema.
+#[derive(Debug, Clone, Default)]
+pub struct FaultsReport {
+    /// Every scheduled event, with whether the loop applied it (events
+    /// past the end of all serving work are reported but not applied).
+    pub timeline: Vec<(FaultEvent, bool)>,
+    /// `backends[i]` belongs to fleet position `i`.
+    pub backends: Vec<BackendFaultStats>,
+    /// Riders orphaned by faults (forming + in-flight drains).
+    pub requeued: usize,
+    /// Orphaned riders successfully re-admitted on a survivor.
+    pub retried: usize,
+    /// p99 latency over responses completing inside an applied fault
+    /// window (crash/stall/slowdown), ms; 0 when no response did.
+    pub degraded_p99_ms: f64,
+    /// Link re-negotiations: `(at_ns, stretch per member)` — `None` for
+    /// members that were down at that point.
+    pub renegotiations: Vec<(u64, Vec<Option<f64>>)>,
+}
+
+impl FaultsReport {
+    pub fn to_json(&self, wall_ns: u64) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "timeline".into(),
+            Json::Arr(self.timeline.iter().map(|(e, ap)| e.to_json(*ap)).collect()),
+        );
+        m.insert(
+            "injected".into(),
+            Json::Num(self.timeline.iter().filter(|(_, ap)| *ap).count() as f64),
+        );
+        m.insert(
+            "backends".into(),
+            Json::Arr(
+                self.backends
+                    .iter()
+                    .enumerate()
+                    .map(|(i, b)| {
+                        let mut bm = BTreeMap::new();
+                        bm.insert("id".into(), Json::Num(i as f64));
+                        bm.insert("downs".into(), Json::Num(b.downs as f64));
+                        bm.insert("down_ms".into(), Json::Num(b.down_ns as f64 / 1e6));
+                        let avail = if wall_ns == 0 {
+                            1.0
+                        } else {
+                            (wall_ns - b.down_ns) as f64 / wall_ns as f64
+                        };
+                        bm.insert("availability".into(), Json::Num(avail));
+                        bm.insert("requeued".into(), Json::Num(b.requeued as f64));
+                        Json::Obj(bm)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("requeued".into(), Json::Num(self.requeued as f64));
+        m.insert("retried".into(), Json::Num(self.retried as f64));
+        m.insert("degraded_p99_ms".into(), Json::Num(self.degraded_p99_ms));
+        m.insert(
+            "link_renegotiations".into(),
+            Json::Arr(
+                self.renegotiations
+                    .iter()
+                    .map(|(at, stretches)| {
+                        let mut rm = BTreeMap::new();
+                        rm.insert("at_ms".into(), Json::Num(*at as f64 / 1e6));
+                        rm.insert(
+                            "stretches".into(),
+                            Json::Arr(
+                                stretches
+                                    .iter()
+                                    .map(|s| s.map(Json::Num).unwrap_or(Json::Null))
+                                    .collect(),
+                            ),
+                        );
+                        Json::Obj(rm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> Result<FaultSchedule> {
+        FaultSchedule::from_json(&Json::parse(src).unwrap())
+    }
+
+    #[test]
+    fn parses_every_kind_and_sorts_by_time() {
+        let s = parse(
+            r#"{"events": [
+                {"at_ms": 80, "kind": "slowdown", "backend": 1, "down_ms": 10, "factor": 1.5},
+                {"at_ms": 40, "kind": "crash", "backend": 0, "down_ms": 200},
+                {"at_ms": 60, "kind": "stall", "backend": 1, "down_ms": 5},
+                {"at_ms": 90, "kind": "link_degrade", "dram_scale": 0.5, "pcie_scale": 1.0}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.events.len(), 4);
+        assert!(s.events.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        assert_eq!(s.events[0].kind, FaultKind::Crash { backend: 0, down_ns: 200_000_000 });
+        assert_eq!(s.events[0].at_ns, 40_000_000);
+        match s.events[3].kind {
+            FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
+                assert_eq!(dram_scale, 0.5);
+                assert_eq!(pcie_scale, 1.0);
+            }
+            other => panic!("expected link_degrade, got {other:?}"),
+        }
+        // a bare array parses identically
+        let bare = parse(r#"[{"at_ms": 1, "kind": "crash", "backend": 2}]"#).unwrap();
+        assert_eq!(bare.events[0].kind, FaultKind::Crash { backend: 2, down_ns: DOWN_CAP_NS });
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        assert!(parse(r#"{"no_events": 1}"#).is_err());
+        assert!(parse(r#"[{"kind": "crash", "backend": 0}]"#).is_err(), "missing at_ms");
+        assert!(parse(r#"[{"at_ms": -1, "kind": "crash", "backend": 0}]"#).is_err());
+        assert!(parse(r#"[{"at_ms": 1, "kind": "meteor", "backend": 0}]"#).is_err());
+        assert!(parse(r#"[{"at_ms": 1, "kind": "crash"}]"#).is_err(), "missing backend");
+        assert!(
+            parse(r#"[{"at_ms": 1, "kind": "stall", "backend": 0}]"#).is_err(),
+            "stall requires down_ms"
+        );
+        assert!(
+            parse(r#"[{"at_ms": 1, "kind": "stall", "backend": 0, "down_ms": 0}]"#).is_err(),
+            "down_ms must be positive"
+        );
+        assert!(
+            parse(
+                r#"[{"at_ms": 1, "kind": "slowdown", "backend": 0, "down_ms": 1, "factor": 0.5}]"#
+            )
+            .is_err(),
+            "factor < 1 would be a speedup"
+        );
+        assert!(
+            parse(r#"[{"at_ms": 1, "kind": "link_degrade", "dram_scale": 0, "pcie_scale": 1}]"#)
+                .is_err(),
+            "zero-width pool"
+        );
+        assert!(
+            parse(r#"[{"at_ms": 1, "kind": "link_degrade", "dram_scale": 2, "pcie_scale": 1}]"#)
+                .is_err(),
+            "degradation cannot widen a pool"
+        );
+    }
+
+    #[test]
+    fn validate_checks_fleet_shape() {
+        let s = parse(r#"[{"at_ms": 1, "kind": "crash", "backend": 2}]"#).unwrap();
+        assert!(s.validate(3, false).is_ok());
+        assert!(s.validate(2, false).is_err(), "backend 2 of a 2-backend fleet");
+        let l =
+            parse(r#"[{"at_ms": 1, "kind": "link_degrade", "dram_scale": 0.5, "pcie_scale": 1}]"#)
+                .unwrap();
+        assert!(l.validate(2, true).is_ok());
+        assert!(l.validate(2, false).is_err(), "link_degrade without the link model");
+    }
+
+    #[test]
+    fn random_schedules_are_seeded_sorted_and_in_horizon() {
+        let horizon = 30_000_000_000; // 30 virtual seconds
+        let a = FaultSchedule::random(7, 2.0, 0.5, 3, horizon);
+        let b = FaultSchedule::random(7, 2.0, 0.5, 3, horizon);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_ne!(a, FaultSchedule::random(8, 2.0, 0.5, 3, horizon));
+        assert!(!a.events.is_empty(), "30s horizon at 2s MTBF must fault");
+        assert!(a.events.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        for e in &a.events {
+            assert!(e.at_ns < horizon);
+            let b = e.kind.backend().expect("random schedules only emit backend faults");
+            assert!(b < 3);
+            match e.kind {
+                FaultKind::Crash { down_ns, .. } | FaultKind::Stall { down_ns, .. } => {
+                    assert!(down_ns >= 1)
+                }
+                FaultKind::Slowdown { down_ns, factor, .. } => {
+                    assert!(down_ns >= 1);
+                    assert!((1.25..2.0).contains(&factor));
+                }
+                FaultKind::LinkDegrade { .. } => unreachable!(),
+            }
+        }
+        // validates against any fleet of >= 3 backends, link model or not
+        assert!(a.validate(3, false).is_ok());
+    }
+
+    #[test]
+    fn timeline_json_carries_kind_fields_and_applied() {
+        let e = FaultEvent {
+            at_ns: 40_000_000,
+            kind: FaultKind::Slowdown { backend: 1, down_ns: 10_000_000, factor: 1.5 },
+        };
+        let j = e.to_json(true);
+        assert_eq!(j.get("at_ms").unwrap().as_f64(), Some(40.0));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("slowdown"));
+        assert_eq!(j.get("backend").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("factor").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("applied").unwrap().as_bool(), Some(true));
+        let d = FaultEvent {
+            at_ns: 0,
+            kind: FaultKind::LinkDegrade { dram_scale: 0.5, pcie_scale: 0.75 },
+        };
+        let dj = d.to_json(false);
+        assert!(dj.get("backend").is_none());
+        assert_eq!(dj.get("dram_scale").unwrap().as_f64(), Some(0.5));
+        assert_eq!(dj.get("applied").unwrap().as_bool(), Some(false));
+    }
+}

@@ -209,6 +209,26 @@ pub fn negotiate(pools: &SharedLinkModel, demands: &[LinkDemand]) -> LinkLedger 
     LinkLedger { pools: *pools, members }
 }
 
+/// [`negotiate`] over the `up` subset of a partition: down members stop
+/// demanding bandwidth, so the survivors split the pools among
+/// themselves — the failover path's graceful-degradation step.  Returns
+/// one entry per original position (`None` for down members), so fleet
+/// indices stay stable across the fault window.  With every member up
+/// this is exactly [`negotiate`]; with one survivor it degenerates to
+/// the PR 4 single-member case (stretch 1 whatever its appetite).
+pub fn negotiate_masked(
+    pools: &SharedLinkModel,
+    demands: &[LinkDemand],
+    up: &[bool],
+) -> Vec<Option<MemberLink>> {
+    assert_eq!(demands.len(), up.len());
+    let live: Vec<LinkDemand> =
+        demands.iter().zip(up).filter(|(_, u)| **u).map(|(d, _)| *d).collect();
+    let ledger = negotiate(pools, &live);
+    let mut granted = ledger.members.into_iter();
+    up.iter().map(|u| if *u { granted.next() } else { None }).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,6 +322,38 @@ mod tests {
             assert!(m.stretch.is_infinite());
         }
         assert!(l.throttled());
+    }
+
+    #[test]
+    fn masked_negotiation_relaxes_survivors() {
+        // both up: 150 vs the 100 pool stretches both 1.5x; kill the
+        // heavy member and the survivor (demand 50 < pool 100) runs
+        // uncontended — stretch drops to exactly 1
+        let demands = [d(100.0, 0.0), d(50.0, 0.0)];
+        let p = pools(100.0, 1e9);
+        let both = negotiate_masked(&p, &demands, &[true, true]);
+        assert!(both.iter().all(Option::is_some));
+        assert!((both[1].unwrap().stretch - 1.5).abs() < 1e-9);
+        // all-up masked == plain negotiate
+        let plain = negotiate(&p, &demands);
+        assert_eq!(both[0].unwrap(), plain.members[0]);
+        let after = negotiate_masked(&p, &demands, &[false, true]);
+        assert!(after[0].is_none(), "down member gets no grant");
+        let survivor = after[1].unwrap();
+        assert_eq!(survivor.stretch, 1.0);
+        assert_eq!(survivor.granted, survivor.demand);
+        // monotone: losing a contender never worsens a survivor's stretch
+        assert!(survivor.stretch <= both[1].unwrap().stretch);
+    }
+
+    #[test]
+    fn masked_negotiation_single_survivor_matches_single_member_degeneracy() {
+        // survivor demand above the pool: solo rate is its baseline, so
+        // masked negotiation must preserve the PR 4 lone-member rule
+        let after = negotiate_masked(&pools(100.0, 16.0), &[d(1.0, 1.0), d(250.0, 40.0)], &[
+            false, true,
+        ]);
+        assert_eq!(after[1].unwrap().stretch, 1.0);
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //!
 //! * a seeded open-loop Poisson generator ([`admission::TrafficGen`])
 //!   produces arrivals at `--rps`;
-//! * each arrival is routed ([`router`]) to the **cheapest** backend whose
-//!   worst-case completion bound fits `--slo-ms`, or shed
+//! * each arrival is routed ([`router`]) to the **cheapest** healthy
+//!   backend whose worst-case completion bound fits `--slo-ms`, or shed
 //!   ([`admission`]) when no bounded queue can make the deadline;
 //! * per-backend continuous batching reuses the coordinator's
 //!   [`Batcher`] (staleness flushes fire at their exact virtual
@@ -40,13 +40,35 @@
 //! worst-case service bound) change, and the report carries the board
 //! ledger under schema `cat-serve-v3` (`cat-serve-v2` when the link
 //! model is disabled).
+//!
+//! **Fault injection** ([`faults`], `--faults`/`--mtbf-s`/`--mttr-s`):
+//! a seeded virtual-clock schedule of crashes, stalls, slowdowns, and
+//! link degradations is threaded through the same event pump that fires
+//! staleness flushes, so fault application is exactly ordered against
+//! every other virtual event.  A failed backend drops out of admission;
+//! its forming and in-flight batches are drained and **re-admitted**
+//! against each rider's *original* deadline on the survivors (bounded
+//! retries — unsalvageable riders shed with [`ShedReason::Fault`] /
+//! [`ShedReason::RetryExhausted`] so conservation balances exactly).
+//! Recovery is event-driven: the backend rejoins the cheapest-first
+//! order at its scheduled recovery instant.  On partitioned fleets every
+//! down/up transition re-runs the link negotiation over the survivors
+//! ([`links::negotiate_masked`]) and redeploys changed members through
+//! [`Backend::deploy_in_share`] + the stage-sim cache, so freed
+//! bandwidth measurably speeds the survivors up.  Fault runs report
+//! schema `cat-serve-v4` with a `faults` block; fault-free runs stay
+//! byte-identical `cat-serve-v3`/`v2`/`v1`.
 
 mod admission;
+pub mod faults;
 mod fleet;
 pub mod links;
 mod router;
 
 pub use admission::{AdmissionStats, ShedReason, TrafficGen};
+pub use faults::{
+    BackendFaultStats, FaultEvent, FaultKind, FaultPolicy, FaultSchedule, FaultsReport,
+};
 pub use fleet::{Backend, Fleet, FleetBudget};
 pub use links::{LinkDemand, LinkLedger, MemberLink};
 pub use router::{route, BackendLoad, RouteDecision};
@@ -58,7 +80,7 @@ use crate::config::{HardwareConfig, ModelConfig, SharedLinkModel};
 use crate::coordinator::{Batcher, BatcherConfig, ServeStats};
 use crate::dse;
 use crate::util::json::Json;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// One fleet-serving experiment.
 #[derive(Debug, Clone)]
@@ -81,7 +103,8 @@ pub struct FleetConfig {
     /// How long a forming batch may wait for more requests before the
     /// staleness flush dispatches it (`None` = SLO/8).
     pub batch_wait: Option<Duration>,
-    /// Seed for the Poisson arrivals (and the in-process exploration).
+    /// Seed for the Poisson arrivals (and the in-process exploration;
+    /// `--mtbf-s` random fault schedules derive from it too).
     pub seed: u64,
     /// `cat explore` sampling budget for the in-process frontier
     /// derivation (`None` = exhaustive).
@@ -99,6 +122,14 @@ pub struct FleetConfig {
     /// schema `cat-serve-v2`).  Ignored without `partition` — a
     /// one-board-per-member fleet owns its links outright.
     pub links: Option<SharedLinkModel>,
+    /// Fault injection ([`faults`]): an explicit schedule or seeded
+    /// random faults.  `Some` switches the report to `cat-serve-v4`
+    /// with a `faults` block (even when the schedule is empty); `None`
+    /// keeps the fault-free path byte-identical to earlier schemas.
+    pub faults: Option<FaultPolicy>,
+    /// How many times an orphaned rider may be re-admitted after a
+    /// fault before it is shed with [`ShedReason::RetryExhausted`].
+    pub max_retries: usize,
 }
 
 impl FleetConfig {
@@ -118,6 +149,8 @@ impl FleetConfig {
             explore_budget: Some(128),
             partition: false,
             links,
+            faults: None,
+            max_retries: 3,
         }
     }
 
@@ -191,7 +224,9 @@ impl BackendSummary {
 /// The fleet-serving experiment outcome (schema `cat-serve-v1`;
 /// `cat-serve-v2` when a partitioned deployment carries its board
 /// ledger; `cat-serve-v3` when the board ledger additionally carries
-/// the shared memory-path `links` block).
+/// the shared memory-path `links` block; `cat-serve-v4` whenever fault
+/// injection was enabled — the `faults` block rides on top of whichever
+/// board/links blocks the deployment produced).
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub model: String,
@@ -212,21 +247,30 @@ pub struct FleetReport {
     /// energy (Σ power·busy), i.e. busy-time-weighted GOPS/W.
     pub fleet_gops_per_w: f64,
     /// Completed requests whose latency exceeded the SLO — zero by
-    /// construction (admission bounds completion; see [`router`]).
+    /// construction (admission bounds completion, and a batch a fault
+    /// pushed past a rider's deadline is re-admitted, never executed
+    /// late; see [`router`]).
     pub slo_violations: usize,
     /// One-board resource ledger when the fleet was deployed with
     /// `--partition` (`None` = PR 3 semantics, one board per member).
     pub board: Option<FleetBudget>,
+    /// Fault-injection accounting when [`FleetConfig::faults`] was set
+    /// (`None` on the byte-identical fault-free path).
+    pub faults: Option<FaultsReport>,
 }
 
 impl FleetReport {
     pub fn to_json(&self) -> Json {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
         let mut m = BTreeMap::new();
-        let schema = match &self.board {
-            Some(b) if b.links.is_some() => "cat-serve-v3",
-            Some(_) => "cat-serve-v2",
-            None => "cat-serve-v1",
+        let schema = if self.faults.is_some() {
+            "cat-serve-v4"
+        } else {
+            match &self.board {
+                Some(b) if b.links.is_some() => "cat-serve-v3",
+                Some(_) => "cat-serve-v2",
+                None => "cat-serve-v1",
+            }
         };
         m.insert("schema".into(), Json::Str(schema.into()));
         if let Some(b) = &self.board {
@@ -245,6 +289,12 @@ impl FleetReport {
         adm.insert("completed".into(), Json::Num(a.completed as f64));
         adm.insert("shed_slo".into(), Json::Num(a.shed_slo as f64));
         adm.insert("shed_capacity".into(), Json::Num(a.shed_capacity as f64));
+        if self.faults.is_some() {
+            adm.insert("shed_fault".into(), Json::Num(a.shed_fault as f64));
+            adm.insert("shed_retry".into(), Json::Num(a.shed_retry as f64));
+            adm.insert("requeued".into(), Json::Num(a.requeued as f64));
+            adm.insert("retried".into(), Json::Num(a.retried as f64));
+        }
         adm.insert("shed_rate".into(), Json::Num(a.shed_rate()));
         m.insert("admission".into(), Json::Obj(adm));
 
@@ -283,24 +333,88 @@ impl FleetReport {
                     .collect(),
             ),
         );
+        if let Some(f) = &self.faults {
+            m.insert("faults".into(), f.to_json(self.wall_ns));
+        }
         Json::Obj(m)
     }
 }
 
+/// One request riding through the serving loop.  Carries its own
+/// arrival time so the deadline survives re-admission (an orphaned
+/// rider keeps its ORIGINAL SLO budget — the batcher's enqueue instant
+/// only drives staleness), and its retry count so fault-time bouncing
+/// is bounded.
+#[derive(Debug, Clone, Copy)]
+struct Rider {
+    id: u64,
+    arrival_ns: u64,
+    retries: u32,
+}
+
+/// One dispatched-but-unretired batch.  Responses are emitted at
+/// *retirement*, not dispatch, so a fault can still orphan the riders
+/// of a batch whose virtual completion hasn't passed.
+struct InFlightBatch {
+    completion_ns: u64,
+    service_ns: u64,
+    ops: u64,
+    riders: Vec<Rider>,
+}
+
 /// Per-backend mutable serving state (virtual clock).
 struct BackendState {
-    batcher: Batcher<u64>,
+    batcher: Batcher<Rider>,
     /// Completion time of everything dispatched so far.
     busy_until_ns: u64,
     /// Dispatched batches not yet past their completion time.
-    outstanding: VecDeque<(u64, usize)>,
+    outstanding: VecDeque<InFlightBatch>,
     in_flight: usize,
     admitted: usize,
     batches: usize,
     busy_ns: u64,
     ops: u64,
     latencies: Vec<Duration>,
+    /// `Some(end)` while inside a crash/stall window — excluded from
+    /// admission until the recovery event at `end` clears it.
+    down_until_ns: Option<u64>,
+    /// Batches dispatched before this instant serve `slow_factor`×
+    /// slower (slowdown fault window).
+    slow_until_ns: u64,
+    slow_factor: f64,
+    /// Riders orphaned off this backend by faults.
+    requeued: usize,
+    /// Crash/stall windows that hit this backend (merged for downtime).
+    down_windows: Vec<(u64, u64)>,
+    downs: usize,
 }
+
+/// Merge possibly-overlapping `(start, end)` windows, clamped to
+/// `wall_ns`, into disjoint sorted intervals.
+fn merge_windows(mut windows: Vec<(u64, u64)>, wall_ns: u64) -> Vec<(u64, u64)> {
+    for w in &mut windows {
+        w.0 = w.0.min(wall_ns);
+        w.1 = w.1.min(wall_ns);
+    }
+    windows.retain(|&(s, e)| e > s);
+    windows.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(windows.len());
+    for (s, e) in windows {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Event classes of the virtual-clock pump, in tie-break order at equal
+/// timestamps: a recovering backend rejoins *before* a co-timed fault
+/// or flush sees the fleet, and faults apply before flushes so a flush
+/// never dispatches into a backend that is crashing at the same instant.
+const CLASS_RECOVER: u8 = 0;
+const CLASS_FAULT: u8 = 1;
+const CLASS_FLUSH: u8 = 2;
 
 /// The virtual-clock serving loop over an already-built fleet.
 struct ServeLoop<'a> {
@@ -314,10 +428,35 @@ struct ServeLoop<'a> {
     cursor_ns: u64,
     states: Vec<BackendState>,
     responses: Vec<FleetResponse>,
+    stats: AdmissionStats,
+    shed: Vec<ShedRecord>,
+    /// Resolved fault timeline (sorted) and the application cursor.
+    schedule: Vec<FaultEvent>,
+    fault_cursor: usize,
+    applied: Vec<bool>,
+    /// Gates every fault-only code path so the fault-free loop is
+    /// *provably* byte-identical to the pre-fault implementation.
+    faults_enabled: bool,
+    /// Renegotiated redeployments (partitioned fleets): `Some` shadows
+    /// the fleet's original backend at that position.
+    overrides: Vec<Option<Backend>>,
+    /// Last deployed `mem_throttle` per member (1/stretch).
+    cur_throttle: Vec<f64>,
+    /// Cumulative link-degradation scales (products of event scales).
+    dram_scale: f64,
+    pcie_scale: f64,
+    renegotiations: Vec<(u64, Vec<Option<f64>>)>,
+    /// Crash/stall/slowdown windows, for the degraded-window p99.
+    degraded_windows: Vec<(u64, u64)>,
 }
 
 impl<'a> ServeLoop<'a> {
-    fn new(cfg: &'a FleetConfig, fleet: &'a Fleet) -> ServeLoop<'a> {
+    fn new(
+        cfg: &'a FleetConfig,
+        fleet: &'a Fleet,
+        schedule: Vec<FaultEvent>,
+        faults_enabled: bool,
+    ) -> ServeLoop<'a> {
         let wait = cfg.resolved_batch_wait();
         // never emit a batch the service profiles can't price
         let max_batch = cfg.max_batch.clamp(1, fleet.max_batch());
@@ -334,8 +473,19 @@ impl<'a> ServeLoop<'a> {
                 busy_ns: 0,
                 ops: 0,
                 latencies: Vec::new(),
+                down_until_ns: None,
+                slow_until_ns: 0,
+                slow_factor: 1.0,
+                requeued: 0,
+                down_windows: Vec::new(),
+                downs: 0,
             })
             .collect();
+        let cur_throttle = match fleet.budget.as_ref().and_then(|b| b.links.as_ref()) {
+            Some(l) => l.members.iter().map(|m| 1.0 / m.stretch).collect(),
+            None => vec![1.0; fleet.backends.len()],
+        };
+        let applied = vec![false; schedule.len()];
         ServeLoop {
             cfg,
             fleet,
@@ -344,6 +494,18 @@ impl<'a> ServeLoop<'a> {
             cursor_ns: 0,
             states,
             responses: Vec::new(),
+            stats: AdmissionStats::default(),
+            shed: Vec::new(),
+            schedule,
+            fault_cursor: 0,
+            applied,
+            faults_enabled,
+            overrides: fleet.backends.iter().map(|_| None).collect(),
+            cur_throttle,
+            dram_scale: 1.0,
+            pcie_scale: 1.0,
+            renegotiations: Vec::new(),
+            degraded_windows: Vec::new(),
         }
     }
 
@@ -351,103 +513,449 @@ impl<'a> ServeLoop<'a> {
         self.epoch + Duration::from_nanos(ns)
     }
 
-    /// Absolute flush deadline of backend `b`'s forming batch (`None`
-    /// when empty).  Evaluated at the cursor, where deadlines are exact.
-    fn flush_deadline(&self, b: usize) -> Option<u64> {
-        self.states[b]
-            .batcher
-            .time_until_stale(self.at(self.cursor_ns))
-            .map(|d| self.cursor_ns + d.as_nanos() as u64)
+    /// The live deployment at fleet position `b`: the renegotiated
+    /// override when a fault redeployed it, the original otherwise.
+    fn backend(&self, b: usize) -> &Backend {
+        self.overrides[b].as_ref().unwrap_or(&self.fleet.backends[b])
     }
 
-    /// Fire every staleness flush due at or before `t_ns`, each at its
-    /// own virtual deadline, in (deadline, backend) order.
-    fn flush_stale_up_to(&mut self, t_ns: u64) {
-        loop {
-            let next = (0..self.states.len())
-                .filter_map(|b| self.flush_deadline(b).map(|d| (d, b)))
-                .min();
-            match next {
-                Some((deadline, b)) if deadline <= t_ns => {
-                    self.cursor_ns = deadline;
-                    if let Some(batch) = self.states[b].batcher.flush() {
-                        self.dispatch(b, batch, deadline);
+    /// Effective service time of a batch of `k` dispatched at `at_ns`:
+    /// the live profile, stretched while a slowdown window is active.
+    fn service_ns_at(&self, b: usize, k: usize, at_ns: u64) -> u64 {
+        let base = self.backend(b).service_ns(k);
+        let st = &self.states[b];
+        if at_ns < st.slow_until_ns {
+            (base as f64 * st.slow_factor).ceil() as u64
+        } else {
+            base
+        }
+    }
+
+    /// Effective worst-case service time at `at_ns` — what admission
+    /// prices, so a request admitted during a slowdown window is bounded
+    /// against the stretched profile.
+    fn max_service_at(&self, b: usize, at_ns: u64) -> u64 {
+        let base = self.backend(b).max_service_ns();
+        let st = &self.states[b];
+        if at_ns < st.slow_until_ns {
+            (base as f64 * st.slow_factor).ceil() as u64
+        } else {
+            base
+        }
+    }
+
+    /// Absolute flush deadline of backend `b`'s forming batch (`None`
+    /// when empty).  Evaluated at the cursor, where deadlines are exact.
+    /// A down backend defers its flush to the recovery instant (a stall
+    /// freezes the forming batch; a crash leaves the batcher empty).
+    fn flush_deadline(&self, b: usize) -> Option<u64> {
+        let natural = self.states[b]
+            .batcher
+            .time_until_stale(self.at(self.cursor_ns))
+            .map(|d| self.cursor_ns.saturating_add(d.as_nanos() as u64))?;
+        Some(match self.states[b].down_until_ns {
+            Some(end) => natural.max(end),
+            None => natural,
+        })
+    }
+
+    /// The next virtual event at or before `limit_ns`: recoveries,
+    /// scheduled faults, and staleness flushes, ordered by
+    /// `(time, class, position)` so ties are deterministic.
+    fn next_event(&self, limit_ns: u64) -> Option<(u64, u8, usize)> {
+        let recoveries = self
+            .states
+            .iter()
+            .enumerate()
+            .filter_map(|(b, st)| st.down_until_ns.map(|d| (d, CLASS_RECOVER, b)));
+        let fault = self
+            .schedule
+            .get(self.fault_cursor)
+            .map(|e| (e.at_ns.max(self.cursor_ns), CLASS_FAULT, self.fault_cursor));
+        let flushes =
+            (0..self.states.len()).filter_map(|b| self.flush_deadline(b).map(|d| (d, CLASS_FLUSH, b)));
+        recoveries.chain(fault).chain(flushes).min().filter(|&(when, _, _)| when <= limit_ns)
+    }
+
+    /// Drive the virtual clock to `t_ns`: retire completed batches and
+    /// fire every recovery, fault, and staleness flush due on the way,
+    /// each at its own virtual timestamp in deterministic order.  With
+    /// no faults scheduled this degenerates to the historical
+    /// flush-then-advance loop (recoveries and faults never fire).
+    fn process_until(&mut self, t_ns: u64) -> Result<()> {
+        while let Some((when, class, idx)) = self.next_event(t_ns) {
+            self.advance(when);
+            self.cursor_ns = self.cursor_ns.max(when);
+            match class {
+                CLASS_RECOVER => {
+                    self.states[idx].down_until_ns = None;
+                    self.renegotiate(when)?;
+                }
+                CLASS_FAULT => {
+                    let ev = self.schedule[idx];
+                    self.fault_cursor += 1;
+                    self.applied[idx] = true;
+                    self.apply_fault(ev, when)?;
+                }
+                _ => {
+                    if let Some(batch) = self.states[idx].batcher.flush() {
+                        self.dispatch(idx, batch, when);
                     }
                 }
-                _ => break,
             }
         }
+        self.advance(t_ns);
         self.cursor_ns = self.cursor_ns.max(t_ns.min(u64::MAX / 2));
+        Ok(())
+    }
+
+    /// Apply one scheduled fault at `now_ns` (== the event's timestamp,
+    /// clamped forward to the cursor).
+    fn apply_fault(&mut self, ev: FaultEvent, now_ns: u64) -> Result<()> {
+        match ev.kind {
+            FaultKind::Crash { backend: b, down_ns } => {
+                let end = now_ns.saturating_add(down_ns).min(faults::DOWN_CAP_NS);
+                let st = &mut self.states[b];
+                // the crash loses everything on the backend: the forming
+                // batch and every dispatched-but-unretired batch
+                let mut orphans: Vec<Rider> = st
+                    .batcher
+                    .flush()
+                    .map(|batch| batch.into_iter().map(|(r, _)| r).collect())
+                    .unwrap_or_default();
+                for ifb in st.outstanding.drain(..) {
+                    orphans.extend(ifb.riders);
+                }
+                debug_assert_eq!(st.in_flight, orphans.len(), "in-flight ≠ orphaned riders");
+                st.in_flight = 0;
+                st.admitted -= orphans.len();
+                st.busy_until_ns = now_ns;
+                st.slow_until_ns = 0;
+                st.slow_factor = 1.0;
+                st.down_until_ns = Some(st.down_until_ns.unwrap_or(0).max(end));
+                st.downs += 1;
+                st.down_windows.push((now_ns, end));
+                self.degraded_windows.push((now_ns, end));
+                self.renegotiate(now_ns)?;
+                self.requeue(b, orphans, now_ns);
+            }
+            FaultKind::Stall { backend: b, down_ns } => {
+                let end = now_ns.saturating_add(down_ns).min(faults::DOWN_CAP_NS);
+                let slo_ns = self.cfg.slo_ns();
+                let st = &mut self.states[b];
+                // nothing is lost, but every queued completion shifts by
+                // the window; batches whose riders can no longer meet
+                // their deadlines are orphaned instead of served late
+                if st.busy_until_ns > now_ns {
+                    st.busy_until_ns =
+                        st.busy_until_ns.saturating_add(down_ns).min(faults::DOWN_CAP_NS);
+                }
+                let mut orphans = Vec::new();
+                let mut kept = VecDeque::with_capacity(st.outstanding.len());
+                for mut ifb in st.outstanding.drain(..) {
+                    ifb.completion_ns =
+                        ifb.completion_ns.saturating_add(down_ns).min(faults::DOWN_CAP_NS);
+                    let late = ifb
+                        .riders
+                        .iter()
+                        .any(|r| ifb.completion_ns > r.arrival_ns.saturating_add(slo_ns));
+                    if late {
+                        orphans.extend(ifb.riders);
+                    } else {
+                        kept.push_back(ifb);
+                    }
+                }
+                st.outstanding = kept;
+                st.in_flight -= orphans.len();
+                st.admitted -= orphans.len();
+                st.down_until_ns = Some(st.down_until_ns.unwrap_or(0).max(end));
+                st.downs += 1;
+                st.down_windows.push((now_ns, end));
+                self.degraded_windows.push((now_ns, end));
+                self.renegotiate(now_ns)?;
+                self.requeue(b, orphans, now_ns);
+            }
+            FaultKind::Slowdown { backend: b, down_ns, factor } => {
+                let end = now_ns.saturating_add(down_ns).min(faults::DOWN_CAP_NS);
+                let st = &mut self.states[b];
+                if now_ns < st.slow_until_ns {
+                    // overlapping windows: the harsher factor wins, the
+                    // window extends to the later end
+                    st.slow_factor = st.slow_factor.max(factor);
+                    st.slow_until_ns = st.slow_until_ns.max(end);
+                } else {
+                    st.slow_factor = factor;
+                    st.slow_until_ns = end;
+                }
+                self.degraded_windows.push((now_ns, end));
+            }
+            FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
+                self.dram_scale *= dram_scale;
+                self.pcie_scale *= pcie_scale;
+                self.renegotiate(now_ns)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-run the shared-link negotiation over the *up* members against
+    /// the (possibly degraded) pools and redeploy every member whose
+    /// throttle changed — the graceful-degradation step: a dead member
+    /// stops demanding bandwidth, so survivors' grants grow, their
+    /// stretch drops, and their re-simulated profiles speed up.
+    /// No-op for unpartitioned fleets or with the link model off.
+    fn renegotiate(&mut self, now_ns: u64) -> Result<()> {
+        if !self.faults_enabled {
+            return Ok(());
+        }
+        let cfg = self.cfg;
+        let fleet = self.fleet;
+        let Some(budget) = fleet.budget.as_ref() else { return Ok(()) };
+        let Some(ledger0) = budget.links.as_ref() else { return Ok(()) };
+        let pools = ledger0.pools.scaled(self.dram_scale, self.pcie_scale);
+        let demands: Vec<LinkDemand> = ledger0.members.iter().map(|m| m.demand).collect();
+        let up: Vec<bool> = self.states.iter().map(|st| st.down_until_ns.is_none()).collect();
+        let grants = links::negotiate_masked(&pools, &demands, &up);
+        let mut stretches = Vec::with_capacity(grants.len());
+        for (b, grant) in grants.iter().enumerate() {
+            let Some(ml) = grant else {
+                stretches.push(None);
+                continue;
+            };
+            stretches.push(Some(ml.stretch));
+            let throttle = 1.0 / ml.stretch;
+            if (throttle - self.cur_throttle[b]).abs() <= 1e-12 {
+                continue;
+            }
+            let base = &fleet.backends[b];
+            let mut nb = Backend::deploy_in_share(
+                &cfg.model,
+                &cfg.hw,
+                &base.point,
+                base.max_batch(),
+                &budget.shares[b],
+                throttle,
+            )
+            .map_err(|e| {
+                anyhow!("re-deploying backend {b} at throttle {throttle:.4} after a fault: {e}")
+            })?;
+            nb.id = base.id;
+            self.overrides[b] = Some(nb);
+            self.cur_throttle[b] = throttle;
+        }
+        self.renegotiations.push((now_ns, stretches));
+        Ok(())
     }
 
     /// Commit one batch to backend `b` at virtual time `now_ns`.
-    fn dispatch(&mut self, b: usize, batch: Vec<(u64, Instant)>, now_ns: u64) {
+    /// Responses are deferred to retirement ([`ServeLoop::advance`]).
+    fn dispatch(&mut self, b: usize, batch: Vec<(Rider, Instant)>, now_ns: u64) {
         let size = batch.len();
-        let backend = &self.fleet.backends[b];
-        let service = backend.service_ns(size);
-        let st = &mut self.states[b];
-        let start = st.busy_until_ns.max(now_ns);
-        let completion = start + service;
-        st.busy_until_ns = completion;
-        st.busy_ns += service;
-        st.batches += 1;
-        st.ops += backend.ops(size);
-        st.outstanding.push_back((completion, size));
-        for (id, enq) in batch {
-            let arrival_ns = enq.duration_since(self.epoch).as_nanos() as u64;
-            st.latencies.push(Duration::from_nanos(completion - arrival_ns));
-            self.responses.push(FleetResponse {
-                id,
-                backend: b,
-                arrival_ns,
-                completion_ns: completion,
-                batch_size: size,
-                batch_service_ns: service,
-            });
+        let service = self.service_ns_at(b, size, now_ns);
+        let ops = self.backend(b).ops(size);
+        let start = self.states[b].busy_until_ns.max(now_ns);
+        let completion = start.saturating_add(service);
+        if self.faults_enabled {
+            // a fault between admission and flush (slowdown repricing, a
+            // stall's deferred backlog) can push this batch past a
+            // rider's deadline; executing it would break the "every
+            // completed request meets the SLO" guarantee, so the whole
+            // batch is orphaned for re-admission instead.  Fault-free
+            // this can never fire: the admission bound majorizes the
+            // dispatch arithmetic term by term.
+            let slo_ns = self.cfg.slo_ns();
+            if batch.iter().any(|(r, _)| completion > r.arrival_ns.saturating_add(slo_ns)) {
+                let riders: Vec<Rider> = batch.into_iter().map(|(r, _)| r).collect();
+                let st = &mut self.states[b];
+                st.admitted -= riders.len();
+                st.in_flight -= riders.len();
+                self.requeue(b, riders, now_ns);
+                return;
+            }
         }
+        let st = &mut self.states[b];
+        st.busy_until_ns = completion;
+        st.outstanding.push_back(InFlightBatch {
+            completion_ns: completion,
+            service_ns: service,
+            ops,
+            riders: batch.into_iter().map(|(r, _)| r).collect(),
+        });
     }
 
-    /// Retire batches whose completion time has passed (frees queue room).
+    /// Retire batches whose completion time has passed: emit their
+    /// responses, credit the backend, and free queue room.
     fn advance(&mut self, now_ns: u64) {
-        for st in &mut self.states {
-            while st.outstanding.front().is_some_and(|&(c, _)| c <= now_ns) {
-                let (_, n) = st.outstanding.pop_front().unwrap();
-                st.in_flight -= n;
+        for b in 0..self.states.len() {
+            while self.states[b]
+                .outstanding
+                .front()
+                .is_some_and(|f| f.completion_ns <= now_ns)
+            {
+                let batch = self.states[b].outstanding.pop_front().unwrap();
+                let size = batch.riders.len();
+                let st = &mut self.states[b];
+                st.in_flight -= size;
+                st.batches += 1;
+                st.busy_ns += batch.service_ns;
+                st.ops += batch.ops;
+                for r in &batch.riders {
+                    st.latencies.push(Duration::from_nanos(batch.completion_ns - r.arrival_ns));
+                    self.responses.push(FleetResponse {
+                        id: r.id,
+                        backend: b,
+                        arrival_ns: r.arrival_ns,
+                        completion_ns: batch.completion_ns,
+                        batch_size: size,
+                        batch_service_ns: batch.service_ns,
+                    });
+                }
             }
         }
     }
 
-    /// Route + admit (or shed) one arrival at `t_ns`.
-    fn arrive(&mut self, id: u64, t_ns: u64) -> Result<RouteDecision, ShedReason> {
-        self.flush_stale_up_to(t_ns);
-        self.advance(t_ns);
+    /// Try to admit one rider at `now_ns` (fresh arrival or fault-time
+    /// re-admission).  Routes against the rider's ORIGINAL deadline —
+    /// an orphan gets no fresh SLO budget — and joins the chosen
+    /// backend's forming batch.
+    fn admit(&mut self, rider: Rider, now_ns: u64) -> std::result::Result<RouteDecision, ShedReason> {
+        let deadline_ns = rider.arrival_ns.saturating_add(self.cfg.slo_ns());
         let loads: Vec<BackendLoad> = (0..self.states.len())
             .map(|b| {
                 let st = &self.states[b];
                 BackendLoad {
                     busy_until_ns: st.busy_until_ns,
                     pending: st.batcher.pending_len(),
-                    flush_deadline_ns: self.flush_deadline(b).unwrap_or(t_ns + self.wait_ns),
+                    flush_deadline_ns: self
+                        .flush_deadline(b)
+                        .unwrap_or_else(|| now_ns.saturating_add(self.wait_ns)),
                     in_flight: st.in_flight,
+                    up: st.down_until_ns.is_none(),
+                    max_service_ns: self.max_service_at(b, now_ns),
                 }
             })
             .collect();
-        let decision = route(
-            &self.fleet.backends,
-            &loads,
-            t_ns,
-            self.cfg.slo_ns(),
-            self.cfg.queue_cap,
-        )?;
+        let decision = route(&loads, now_ns, deadline_ns, self.cfg.queue_cap)?;
         let b = decision.backend;
-        let at = self.at(t_ns);
+        let at = self.at(now_ns);
         let st = &mut self.states[b];
         st.admitted += 1;
         st.in_flight += 1;
-        if let Some(batch) = st.batcher.push(id, at) {
-            self.dispatch(b, batch, t_ns);
+        if let Some(batch) = st.batcher.push(rider, at) {
+            self.dispatch(b, batch, now_ns);
         }
         Ok(decision)
+    }
+
+    /// Re-admit riders orphaned off `source` by a fault: oldest deadline
+    /// first, bounded retries, unsalvageable riders shed with exact
+    /// attribution so conservation balances.
+    fn requeue(&mut self, source: usize, mut riders: Vec<Rider>, now_ns: u64) {
+        if riders.is_empty() {
+            return;
+        }
+        riders.sort_by_key(|r| (r.arrival_ns, r.id));
+        self.states[source].requeued += riders.len();
+        self.stats.requeued += riders.len();
+        for mut r in riders {
+            r.retries += 1;
+            if r.retries as usize > self.cfg.max_retries {
+                self.shed_rider(&r, ShedReason::RetryExhausted);
+                continue;
+            }
+            match self.admit(r, now_ns) {
+                Ok(_) => self.stats.retried += 1,
+                Err(_) => self.shed_rider(&r, ShedReason::Fault),
+            }
+        }
+    }
+
+    fn shed_rider(&mut self, r: &Rider, reason: ShedReason) {
+        self.stats.record_shed(reason);
+        self.shed.push(ShedRecord { id: r.id, arrival_ns: r.arrival_ns, reason });
+    }
+
+    /// Route + admit (or shed) one arrival at `t_ns`.
+    fn arrive(&mut self, id: u64, t_ns: u64) -> Result<()> {
+        self.process_until(t_ns)?;
+        self.stats.submitted += 1;
+        let rider = Rider { id, arrival_ns: t_ns, retries: 0 };
+        match self.admit(rider, t_ns) {
+            Ok(_) => self.stats.admitted += 1,
+            Err(ShedReason::Fault) => {
+                // a fresh arrival during a TOTAL outage: counted
+                // admitted-then-fault-shed so both conservation
+                // equations stay exact (see AdmissionStats::accounted)
+                self.stats.admitted += 1;
+                self.shed_rider(&rider, ShedReason::Fault);
+            }
+            Err(reason) => {
+                self.stats.record_shed(reason);
+                self.shed.push(ShedRecord { id, arrival_ns: t_ns, reason });
+            }
+        }
+        Ok(())
+    }
+
+    /// End of stream: run the virtual clock until every forming batch
+    /// has flushed and every dispatched batch has retired.  Faults
+    /// scheduled past the last piece of work are reported unapplied.
+    fn drain(&mut self) -> Result<()> {
+        loop {
+            let next_flush = (0..self.states.len()).filter_map(|b| self.flush_deadline(b)).min();
+            let next_completion = self
+                .states
+                .iter()
+                .filter_map(|st| st.outstanding.front().map(|f| f.completion_ns))
+                .min();
+            let Some(t) = next_flush.into_iter().chain(next_completion).min() else {
+                return Ok(());
+            };
+            self.process_until(t)?;
+        }
+    }
+
+    /// The `faults` block (only built when fault injection was enabled).
+    fn faults_report(&self, wall_ns: u64) -> FaultsReport {
+        let backends = self
+            .states
+            .iter()
+            .map(|st| BackendFaultStats {
+                downs: st.downs,
+                down_ns: merge_windows(st.down_windows.clone(), wall_ns)
+                    .iter()
+                    .map(|&(s, e)| e - s)
+                    .sum(),
+                requeued: st.requeued,
+            })
+            .collect();
+        let degraded = merge_windows(self.degraded_windows.clone(), wall_ns);
+        let mut lat: Vec<Duration> = self
+            .responses
+            .iter()
+            .filter(|r| degraded.iter().any(|&(s, e)| r.completion_ns >= s && r.completion_ns <= e))
+            .map(|r| Duration::from_nanos(r.latency_ns()))
+            .collect();
+        lat.sort_unstable();
+        let degraded_p99_ms = if lat.is_empty() {
+            0.0
+        } else {
+            let stats = ServeStats {
+                completed: lat.len(),
+                batches: 0,
+                latencies: lat,
+                wall: Duration::from_nanos(wall_ns),
+            };
+            stats.percentile(0.99).as_secs_f64() * 1e3
+        };
+        FaultsReport {
+            timeline: self.schedule.iter().zip(&self.applied).map(|(e, a)| (*e, *a)).collect(),
+            backends,
+            requeued: self.stats.requeued,
+            retried: self.stats.retried,
+            degraded_p99_ms,
+            renegotiations: self.renegotiations.clone(),
+        }
     }
 }
 
@@ -494,22 +1002,39 @@ pub fn serve_fleet_stream(
     arrivals: &[u64],
 ) -> Result<FleetReport> {
     debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
-    let mut lp = ServeLoop::new(cfg, fleet);
-    let mut stats = AdmissionStats::default();
-    let mut shed = Vec::new();
-    for (id, &t_ns) in arrivals.iter().enumerate() {
-        stats.submitted += 1;
-        match lp.arrive(id as u64, t_ns) {
-            Ok(_) => stats.admitted += 1,
-            Err(reason) => {
-                stats.record_shed(reason);
-                shed.push(ShedRecord { id: id as u64, arrival_ns: t_ns, reason });
-            }
+    let has_links = fleet.budget.as_ref().is_some_and(|b| b.links.is_some());
+    let schedule: Vec<FaultEvent> = match &cfg.faults {
+        None => Vec::new(),
+        Some(FaultPolicy::Schedule(s)) => {
+            s.validate(fleet.len(), has_links)?;
+            s.events.clone()
         }
+        Some(FaultPolicy::Random { mtbf_s, mttr_s }) => {
+            if !(mtbf_s.is_finite() && *mtbf_s > 0.0 && mttr_s.is_finite() && *mttr_s > 0.0) {
+                return Err(anyhow!(
+                    "--mtbf-s/--mttr-s must be positive and finite, got {mtbf_s}/{mttr_s}"
+                ));
+            }
+            // the horizon is the arrival span: faults beyond the last
+            // arrival could only ever hit drain-phase stragglers, and an
+            // empty stream faults nothing.  The seed is derived from the
+            // traffic seed so one `--seed` pins the whole experiment.
+            let horizon_ns = arrivals.last().copied().unwrap_or(0);
+            FaultSchedule::random(cfg.seed ^ 0xFA17, *mtbf_s, *mttr_s, fleet.len(), horizon_ns)
+                .events
+        }
+    };
+    let faults_enabled = cfg.faults.is_some();
+    let mut lp = ServeLoop::new(cfg, fleet, schedule, faults_enabled);
+    for (id, &t_ns) in arrivals.iter().enumerate() {
+        lp.arrive(id as u64, t_ns)?;
     }
-    // end of stream: every forming batch still flushes at its own deadline
-    lp.flush_stale_up_to(u64::MAX);
+    // end of stream: flushes, retirements, and in-horizon faults all
+    // keep firing at their own virtual deadlines until the work drains
+    lp.drain()?;
+    let mut stats = lp.stats;
     stats.completed = lp.responses.len();
+    let shed = std::mem::take(&mut lp.shed);
 
     let slo_ns = cfg.slo_ns();
     let wall_ns = lp
@@ -520,6 +1045,7 @@ pub fn serve_fleet_stream(
         .max()
         .unwrap_or(0);
     let slo_violations = lp.responses.iter().filter(|r| r.latency_ns() > slo_ns).count();
+    let faults_report = if faults_enabled { Some(lp.faults_report(wall_ns)) } else { None };
 
     // Energy accounting: each member's `power_w` includes the board's
     // static floor.  With one board per member (PR 3 semantics) that is
@@ -597,5 +1123,6 @@ pub fn serve_fleet_stream(
         fleet_gops_per_w: if energy_ns_w > 0.0 { total_ops as f64 / energy_ns_w } else { 0.0 },
         slo_violations,
         board: fleet.budget.clone(),
+        faults: faults_report,
     })
 }

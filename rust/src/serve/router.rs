@@ -1,5 +1,5 @@
-//! SLO-aware dispatch: pick the **cheapest** backend whose worst-case
-//! completion bound fits the request's SLO.
+//! SLO-aware dispatch: pick the **cheapest** healthy backend whose
+//! worst-case completion bound fits the request's deadline.
 //!
 //! The bound is constructed so that admission implies compliance:
 //!
@@ -14,25 +14,38 @@
 //!   forming batch: its start is bounded by
 //!   `max(busy_until, flush_deadline)` where `busy_until` covers every
 //!   batch already dispatched;
-//! * the batch serves in at most [`max_service_ns`] (the profile's
-//!   worst case over every emittable batch size).
+//! * the batch serves in at most `max_service_ns` — the snapshot carries
+//!   the backend's *effective* worst case, so an active slowdown window
+//!   is priced into admission.
 //!
 //! Every term is an upper bound, so every *admitted* request completes
-//! within its SLO — load shedding, not queue collapse, is how overload
-//! manifests (the property tests assert exactly this).
+//! within its deadline — load shedding, not queue collapse, is how
+//! overload manifests (the property tests assert exactly this).
+//!
+//! **Backend health** is part of the snapshot: a crashed or stalled
+//! backend reports `up: false` and is skipped entirely — it neither
+//! admits nor counts as queue room, and when *no* backend is up the shed
+//! reason is [`ShedReason::Fault`] rather than `Capacity`.  Recovery is
+//! event-driven: the serving loop flips the flag back at the scheduled
+//! recovery time and the backend simply reappears at its old position in
+//! the cheapest-first order — no polling, no re-sorting.
+//!
+//! **Deadlines, not SLO offsets:** the router compares against an
+//! absolute `deadline_ns`.  For fresh arrivals the caller passes
+//! `arrival + SLO`, so the check is identical to the historical
+//! `completion - now ≤ slo`; for *re-admissions* after a fault the
+//! original arrival keeps anchoring the deadline — a rider does not get
+//! a fresh SLO budget just because its first backend died.
 //!
 //! **Partitioned fleets** change nothing in the admission logic, but the
 //! bound's ingredients are re-derived per member: each backend's service
 //! profile is re-simulated against its budget-constrained deployment
 //! ([`Backend::deploy_in_share`](super::Backend::deploy_in_share)), so
-//! [`max_service_ns`] already reflects the member's board share and the
+//! `max_service_ns` already reflects the member's board share and the
 //! `admission ⇒ compliance` argument carries over unchanged to
 //! co-resident backends.
-//!
-//! [`max_service_ns`]: super::Backend::max_service_ns
 
 use super::admission::ShedReason;
-use super::fleet::Backend;
 
 /// One backend's queue snapshot at routing time (virtual ns).
 #[derive(Debug, Clone, Copy)]
@@ -48,9 +61,15 @@ pub struct BackendLoad {
     /// (`pending`) plus dispatched-but-unfinished batches.  This is the
     /// quantity the bounded queue caps.
     pub in_flight: usize,
+    /// Health: `false` while the backend is inside a crash/stall window.
+    /// Down backends are excluded from admission entirely.
+    pub up: bool,
+    /// The backend's *effective* worst-case service time — the profile
+    /// maximum, stretched when a slowdown window is active.
+    pub max_service_ns: u64,
 }
 
-/// A routing decision: which backend (as a **position** in the slices
+/// A routing decision: which backend (as a **position** in the slice
 /// passed to [`route`], not `Backend::id` — the two coincide only for
 /// [`Fleet::select`](super::Fleet::select)-built fleets), and the
 /// completion bound the admission promised (for diagnostics/tests).
@@ -60,31 +79,99 @@ pub struct RouteDecision {
     pub completion_bound_ns: u64,
 }
 
-/// Route one arrival.  `backends` must be in cost order (cheapest first —
-/// [`Fleet::select`](super::Fleet::select) guarantees it); the first
-/// SLO-feasible backend with queue room wins.  `Err` is the shed reason:
-/// `Capacity` when every queue was full, `Slo` when room existed but no
-/// bound fit.
+/// Route one arrival (or re-admission).  `loads` must be in cost order
+/// (cheapest first — [`Fleet::select`](super::Fleet::select) guarantees
+/// it); the first healthy, SLO-feasible backend with queue room wins.
+/// `Err` is the shed reason: `Fault` when every backend is down,
+/// `Capacity` when every *up* queue was full, `Slo` when room existed
+/// but no completion bound fit `deadline_ns`.
 pub fn route(
-    backends: &[Backend],
     loads: &[BackendLoad],
     now_ns: u64,
-    slo_ns: u64,
+    deadline_ns: u64,
     queue_cap: usize,
 ) -> Result<RouteDecision, ShedReason> {
-    debug_assert_eq!(backends.len(), loads.len());
+    let mut any_up = false;
     let mut any_room = false;
-    for (i, (b, l)) in backends.iter().zip(loads).enumerate() {
+    for (i, l) in loads.iter().enumerate() {
+        if !l.up {
+            continue;
+        }
+        any_up = true;
         if l.in_flight >= queue_cap {
             continue;
         }
         any_room = true;
         debug_assert!(l.flush_deadline_ns >= now_ns, "stale batch not flushed before routing");
         let start_bound = l.busy_until_ns.max(l.flush_deadline_ns);
-        let completion_bound = start_bound + b.max_service_ns();
-        if completion_bound.saturating_sub(now_ns) <= slo_ns {
+        let completion_bound = start_bound.saturating_add(l.max_service_ns);
+        if completion_bound <= deadline_ns {
             return Ok(RouteDecision { backend: i, completion_bound_ns: completion_bound });
         }
     }
-    Err(if any_room { ShedReason::Slo } else { ShedReason::Capacity })
+    Err(if !any_up {
+        ShedReason::Fault
+    } else if any_room {
+        ShedReason::Slo
+    } else {
+        ShedReason::Capacity
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(busy: u64, in_flight: usize, up: bool, max_service: u64) -> BackendLoad {
+        BackendLoad {
+            busy_until_ns: busy,
+            pending: 0,
+            flush_deadline_ns: busy.max(100),
+            in_flight,
+            up,
+            max_service_ns: max_service,
+        }
+    }
+
+    #[test]
+    fn cheapest_feasible_backend_wins() {
+        let loads = [load(0, 0, true, 50), load(0, 0, true, 10)];
+        let d = route(&loads, 0, 1_000, 8).unwrap();
+        assert_eq!(d.backend, 0, "cost order, not service time, breaks ties");
+    }
+
+    #[test]
+    fn down_backends_are_skipped() {
+        let loads = [load(0, 0, false, 50), load(0, 0, true, 10)];
+        let d = route(&loads, 0, 1_000, 8).unwrap();
+        assert_eq!(d.backend, 1);
+    }
+
+    #[test]
+    fn total_outage_sheds_with_fault() {
+        let loads = [load(0, 0, false, 50), load(0, 0, false, 10)];
+        assert_eq!(route(&loads, 0, 1_000, 8).unwrap_err(), ShedReason::Fault);
+    }
+
+    #[test]
+    fn full_up_queues_shed_capacity_and_deadline_misses_shed_slo() {
+        // up-but-full dominates down: the fleet is alive, just saturated
+        let full = [load(0, 8, true, 50), load(0, 0, false, 10)];
+        assert_eq!(route(&full, 0, 1_000, 8).unwrap_err(), ShedReason::Capacity);
+        // room exists but no bound fits the deadline
+        let slow = [load(5_000, 0, true, 50)];
+        assert_eq!(route(&slow, 0, 1_000, 8).unwrap_err(), ShedReason::Slo);
+    }
+
+    #[test]
+    fn deadline_is_absolute() {
+        // busy_until 900 + service 90 = 990 ≤ deadline 1000 admits even
+        // though now is 950 (the old now-relative check would too: the
+        // equivalence `completion - now ≤ slo ⇔ completion ≤ arrival+slo`
+        // holds only when deadline anchors at arrival — which re-admission
+        // exploits by NOT refreshing it)
+        let loads = [load(900, 0, true, 90)];
+        assert!(route(&loads, 950, 1_000, 8).is_ok());
+        assert_eq!(route(&loads, 950, 989, 8).unwrap_err(), ShedReason::Slo);
+    }
 }

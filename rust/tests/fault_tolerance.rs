@@ -1,0 +1,348 @@
+//! Property tests for fault-tolerant fleet serving (`--faults`,
+//! `--mtbf-s`/`--mttr-s`):
+//!
+//! * **conservation with faults** — `submitted == completed + shed_slo +
+//!   shed_capacity + shed_fault + shed_retry`, every id answered exactly
+//!   once or attributed to exactly one shed reason;
+//! * **SLO compliance survives failover** — every *completed* request
+//!   still meets its original deadline, even when its first backend died
+//!   and it was re-admitted on a survivor;
+//! * **determinism** — a fixed seed reproduces a fault run's JSON byte
+//!   for byte, scripted or random;
+//! * **availability accounting** — per-backend downtime is clamped to
+//!   the wall and availability stays in [0, 1];
+//! * **graceful degradation** — on a partitioned fleet, a member crash
+//!   re-negotiates the shared links over the survivors and their
+//!   contention stretch can only relax.
+
+use std::collections::BTreeSet;
+
+use cat::config::{HardwareConfig, ModelConfig, SharedLinkModel};
+use cat::dse::{explore, ExploreConfig, SpaceSpec};
+use cat::serve::{
+    serve_fleet_stream, FaultEvent, FaultKind, FaultPolicy, FaultSchedule, Fleet, FleetConfig,
+    FleetReport,
+};
+
+const MS: u64 = 1_000_000;
+
+/// Same compact exhaustive space as `serve_properties.rs`.
+fn compact_fleet(model: &ModelConfig, hw: &HardwareConfig, max_backends: usize) -> Fleet {
+    let mut cfg = ExploreConfig::new(model.clone(), hw.clone());
+    cfg.sample_budget = None;
+    cfg.space = SpaceSpec::compact_9pt();
+    let explored = explore(&cfg).unwrap();
+    Fleet::select(model, hw, &explored, max_backends, 8).unwrap()
+}
+
+/// The fault-era conservation and SLO invariants.
+fn check_fault_invariants(r: &FleetReport, cfg: &FleetConfig, n: usize, label: &str) {
+    let a = &r.admission;
+    assert_eq!(a.submitted, n, "{label}: submitted");
+    assert!(a.accounted(), "{label}: stats leak requests: {a:?}");
+    assert_eq!(
+        a.submitted,
+        a.completed + a.shed_slo + a.shed_capacity + a.shed_fault + a.shed_retry,
+        "{label}: five-term conservation: {a:?}"
+    );
+    assert_eq!(r.responses.len(), a.completed, "{label}: responses vs stats");
+    assert_eq!(r.shed.len(), a.shed(), "{label}: shed records vs stats");
+    let mut seen = BTreeSet::new();
+    for resp in &r.responses {
+        assert!(seen.insert(resp.id), "{label}: duplicate response id {}", resp.id);
+    }
+    for s in &r.shed {
+        assert!(seen.insert(s.id), "{label}: id {} both served and shed", s.id);
+    }
+    assert_eq!(seen.len(), n, "{label}: lost request ids");
+
+    // every COMPLETED request meets its original deadline — failover must
+    // never serve a request late, only shed it
+    let slo_ns = cfg.slo_ns();
+    for resp in &r.responses {
+        assert!(
+            resp.latency_ns() <= slo_ns,
+            "{label}: req {} violated the SLO after failover: {} ns > {slo_ns} ns",
+            resp.id,
+            resp.latency_ns()
+        );
+    }
+    assert_eq!(r.slo_violations, 0, "{label}: report disagrees on violations");
+
+    // per-backend admitted == served holds WITH faults too: orphaning
+    // decrements the source's admitted count, re-admission increments the
+    // survivor's
+    for (i, b) in r.backends.iter().enumerate() {
+        let served = r.responses.iter().filter(|x| x.backend == i).count();
+        assert_eq!(b.admitted, served, "{label}: backend {i} admitted==served");
+    }
+
+    let f = r.faults.as_ref().unwrap_or_else(|| panic!("{label}: fault run without faults block"));
+    // requeue/retry accounting: a rider re-admits at most max_retries
+    // times, and every requeued rider is either re-admitted or shed
+    assert!(f.retried <= f.requeued, "{label}: retried > requeued");
+    assert_eq!(
+        f.requeued,
+        r.backends.iter().zip(&f.backends).map(|(_, fb)| fb.requeued).sum::<usize>(),
+        "{label}: per-backend requeues don't sum"
+    );
+    // availability: downtime clamped to the wall, availability in [0, 1]
+    for (i, fb) in f.backends.iter().enumerate() {
+        assert!(fb.down_ns <= r.wall_ns, "{label}: backend {i} down longer than the wall");
+        let avail = if r.wall_ns == 0 {
+            1.0
+        } else {
+            (r.wall_ns - fb.down_ns) as f64 / r.wall_ns as f64
+        };
+        assert!((0.0..=1.0).contains(&avail), "{label}: availability {avail}");
+    }
+}
+
+/// Scripted mid-run crash of the cheapest backend: its in-flight work
+/// fails over to the survivors, nothing completes late, everything is
+/// attributed, and the run is byte-for-byte reproducible.
+#[test]
+fn scripted_crash_of_cheapest_backend_fails_over_to_survivors() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 3);
+    assert!(fleet.len() >= 2, "need survivors, got {} backend(s)", fleet.len());
+
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1000.0; // label only — the stream below is explicit
+    cfg.slo_ms = 80.0;
+    cfg.seed = 5;
+    // warmup, a queue-filling burst 0.5 ms before the crash, arrivals
+    // through the down window, and a tail after the recovery
+    let mut arrivals: Vec<u64> = (0..10).map(|i| i * 3 * MS / 2).collect();
+    arrivals.extend(std::iter::repeat(19 * MS).take(20));
+    arrivals.extend((0..20).map(|i| (25 + i) * MS));
+    arrivals.extend((0..10).map(|i| (60 + i) * MS));
+    cfg.n_requests = arrivals.len();
+    let crash_at = 19 * MS + MS / 2;
+    let recovery_at = crash_at + 30 * MS;
+    cfg.faults = Some(FaultPolicy::Schedule(FaultSchedule {
+        events: vec![FaultEvent {
+            at_ns: crash_at,
+            kind: FaultKind::Crash { backend: 0, down_ns: 30 * MS },
+        }],
+    }));
+
+    let r = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    check_fault_invariants(&r, &cfg, arrivals.len(), "scripted-crash");
+    assert!(r.to_json().to_string().contains("\"schema\":\"cat-serve-v4\""));
+
+    let f = r.faults.as_ref().unwrap();
+    assert_eq!(f.timeline.len(), 1);
+    assert!(f.timeline[0].1, "the crash must actually be applied");
+    assert_eq!(f.backends[0].downs, 1);
+    assert_eq!(f.backends[0].down_ns, 30 * MS, "downtime is the scheduled window");
+    // the burst guarantees backend 0 holds forming/in-flight work at the
+    // crash: it must be drained for re-admission, and with live survivors
+    // some of it must actually land on them
+    assert!(f.backends[0].requeued > 0, "crash caught no in-flight work");
+    assert!(f.retried > 0, "no orphan was re-admitted on a survivor");
+    // during the down window nothing routes to backend 0 ...
+    assert!(
+        !r.responses
+            .iter()
+            .any(|x| x.backend == 0 && x.completion_ns > crash_at && x.completion_ns < recovery_at),
+        "a response completed on the crashed backend inside its down window"
+    );
+    // ... and after recovery the cheapest backend rejoins the rotation
+    assert!(
+        r.responses.iter().any(|x| x.backend == 0 && x.completion_ns >= recovery_at),
+        "backend 0 never rejoined after recovery"
+    );
+
+    // byte-for-byte deterministic
+    let again = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    assert_eq!(r.to_json().to_string(), again.to_json().to_string());
+}
+
+/// A permanent crash of a single-backend fleet: orphans have no
+/// survivors (shed as fault / retry-exhausted depending on the retry
+/// budget) and arrivals during the total outage are attributed exactly.
+#[test]
+fn total_outage_attributes_every_request() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 1);
+    assert_eq!(fleet.len(), 1);
+
+    // generous SLO so the whole pre-crash burst is admitted; the crash
+    // then orphans everything still queued or in flight
+    let mut arrivals: Vec<u64> = (0..10).map(|i| i * 3 * MS / 2).collect();
+    arrivals.extend(std::iter::repeat(28 * MS).take(20));
+    arrivals.extend(std::iter::repeat(40 * MS).take(10));
+    let schedule = FaultSchedule {
+        events: vec![FaultEvent {
+            at_ns: 28 * MS + MS / 2,
+            kind: FaultKind::Crash { backend: 0, down_ns: u64::MAX / 4 },
+        }],
+    };
+
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1000.0;
+    cfg.slo_ms = 500.0;
+    cfg.seed = 6;
+    cfg.n_requests = arrivals.len();
+    cfg.faults = Some(FaultPolicy::Schedule(schedule.clone()));
+
+    let r = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    check_fault_invariants(&r, &cfg, arrivals.len(), "total-outage");
+    let a = &r.admission;
+    // the 20-burst leaves well over 4 riders queued/in-flight at the
+    // crash, and all 10 post-crash arrivals face a total outage
+    assert!(a.shed_fault >= 10, "outage arrivals must shed as fault: {a:?}");
+    assert!(a.requeued >= 4, "the crash must orphan the queued burst: {a:?}");
+    assert_eq!(a.retried, 0, "no survivors — nothing can be re-admitted");
+
+    // with a zero retry budget the same orphans are attributed to
+    // retry-exhaustion instead of survivor-less re-admission
+    cfg.max_retries = 0;
+    let r0 = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    check_fault_invariants(&r0, &cfg, arrivals.len(), "total-outage-retry0");
+    assert!(r0.admission.shed_retry >= 4, "orphans must exhaust a zero retry budget");
+    assert_eq!(
+        r0.admission.requeued, r.admission.requeued,
+        "the retry budget changes attribution, not what the crash orphans"
+    );
+}
+
+/// Seeded random fault schedules (the `--mtbf-s/--mttr-s` path): the
+/// invariants hold across seeds, and each run reproduces byte-for-byte.
+#[test]
+fn random_fault_schedules_conserve_across_seeds() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 3);
+
+    let mut any_fault_applied = false;
+    for seed in [1u64, 2, 3, 4] {
+        let mut cfg = FleetConfig::new(model.clone(), hw.clone());
+        cfg.rps = 2500.0;
+        cfg.slo_ms = 90.0;
+        cfg.n_requests = 400;
+        cfg.seed = seed;
+        // the arrival span is ~0.16 virtual seconds: a 40 ms MTBF lands a
+        // handful of faults inside it, 8 ms MTTR keeps windows survivable
+        cfg.faults = Some(FaultPolicy::Random { mtbf_s: 0.04, mttr_s: 0.008 });
+        let arrivals = cat::serve::TrafficGen::poisson(seed, cfg.rps, cfg.n_requests);
+        let r = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+        check_fault_invariants(&r, &cfg, cfg.n_requests, &format!("random-{seed}"));
+        let f = r.faults.as_ref().unwrap();
+        any_fault_applied |= f.timeline.iter().any(|(_, applied)| *applied);
+
+        let again = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+        assert_eq!(
+            r.to_json().to_string(),
+            again.to_json().to_string(),
+            "random fault run must be deterministic for seed {seed}"
+        );
+    }
+    assert!(any_fault_applied, "no seed ever injected a fault — the test is vacuous");
+
+    // different seeds draw different schedules (via seed ^ 0xFA17)
+    let a = FaultSchedule::random(1 ^ 0xFA17, 0.04, 0.008, 3, 160_000_000);
+    let b = FaultSchedule::random(2 ^ 0xFA17, 0.04, 0.008, 3, 160_000_000);
+    assert_ne!(a, b, "fault schedules must vary with the seed");
+}
+
+/// Stalls and slowdowns: deadline-violating work is orphaned (stall) or
+/// re-priced at admission (slowdown) — completed requests never miss.
+#[test]
+fn stalls_and_slowdowns_never_serve_late() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 3);
+    assert!(fleet.len() >= 2);
+
+    let mut arrivals: Vec<u64> = (0..60).map(|i| i * MS).collect();
+    arrivals.extend(std::iter::repeat(20 * MS).take(16));
+    arrivals.sort_unstable();
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1000.0;
+    cfg.slo_ms = 60.0;
+    cfg.seed = 7;
+    cfg.n_requests = arrivals.len();
+    cfg.faults = Some(FaultPolicy::Schedule(FaultSchedule {
+        events: vec![
+            FaultEvent {
+                at_ns: 21 * MS,
+                kind: FaultKind::Stall { backend: 0, down_ns: 25 * MS },
+            },
+            FaultEvent {
+                at_ns: 35 * MS,
+                kind: FaultKind::Slowdown { backend: 1, down_ns: 20 * MS, factor: 1.8 },
+            },
+        ],
+    }));
+    let r = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    check_fault_invariants(&r, &cfg, arrivals.len(), "stall-slowdown");
+    let f = r.faults.as_ref().unwrap();
+    assert_eq!(f.timeline.len(), 2);
+    assert!(f.timeline.iter().all(|(_, applied)| *applied));
+    assert_eq!(f.backends[0].downs, 1, "the stall is a down window");
+    assert_eq!(f.backends[1].downs, 0, "a slowdown keeps the backend up");
+}
+
+/// Graceful degradation on a partitioned fleet: when a co-resident
+/// member dies, the shared DRAM/PCIe pools are re-negotiated over the
+/// survivors — freed bandwidth can only RELAX their contention stretch.
+#[test]
+fn partitioned_crash_relaxes_survivor_link_stretch() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    // mirror the hotpath bench's contended configuration exactly: the
+    // compact exhaustive space, a 2-member co-resident partition, and
+    // pools tight enough that the members are throttled pre-crash
+    let mut ecfg = ExploreConfig::new(model.clone(), hw.clone());
+    ecfg.sample_budget = None;
+    ecfg.space = SpaceSpec::compact_9pt();
+    let explored = explore(&ecfg).unwrap();
+    let tight = SharedLinkModel { dram_gbps: 30.0, pcie_gbps: 8.0 };
+    let fleet =
+        Fleet::select_partitioned(&model, &hw, &explored, 2, 8, Some(50.0), Some(&tight)).unwrap();
+
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 2000.0;
+    cfg.slo_ms = 50.0;
+    cfg.n_requests = 300;
+    cfg.seed = 11;
+    cfg.faults = Some(FaultPolicy::Schedule(FaultSchedule {
+        events: vec![FaultEvent {
+            at_ns: 50 * MS,
+            kind: FaultKind::Crash { backend: 0, down_ns: u64::MAX / 4 },
+        }],
+    }));
+    let arrivals = cat::serve::TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
+
+    let r = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    check_fault_invariants(&r, &cfg, cfg.n_requests, "part-crash");
+    assert!(r.to_json().to_string().contains("\"schema\":\"cat-serve-v4\""));
+    let board = r.board.as_ref().expect("partitioned run carries the board ledger");
+    let ledger = board.links.as_ref().expect("link model enabled");
+    assert!(r.n_backends >= 2, "need co-resident survivors, got {}", r.n_backends);
+    assert!(ledger.throttled(), "pools must be oversubscribed pre-crash for a meaningful test");
+
+    let f = r.faults.as_ref().unwrap();
+    assert_eq!(f.renegotiations.len(), 1, "one crash, one renegotiation");
+    let (at_ns, stretches) = &f.renegotiations[0];
+    assert_eq!(*at_ns, 50 * MS);
+    assert!(stretches[0].is_none(), "the dead member holds no grant");
+    let mut any_relaxed = false;
+    for (i, s) in stretches.iter().enumerate().skip(1) {
+        let pre = ledger.members[i].stretch;
+        let post = s.expect("survivors keep a grant");
+        assert!(
+            post <= pre + 1e-9,
+            "survivor {i} stretch must relax after the crash: {post} > {pre}"
+        );
+        any_relaxed |= post < pre - 1e-9;
+    }
+    assert!(
+        any_relaxed,
+        "freeing an oversubscribed member's demand must strictly relax some survivor"
+    );
+}

@@ -20,7 +20,10 @@ use std::collections::BTreeSet;
 
 use cat::config::{HardwareConfig, ModelConfig};
 use cat::dse::{explore, ExploreConfig, SpaceSpec};
-use cat::serve::{serve_fleet_on, serve_fleet_stream, Fleet, FleetConfig, FleetReport, TrafficGen};
+use cat::serve::{
+    serve_fleet_on, serve_fleet_stream, FaultPolicy, FaultSchedule, Fleet, FleetConfig,
+    FleetReport, TrafficGen,
+};
 
 /// The shared compact exhaustive space ([`SpaceSpec::compact_9pt`], the
 /// same fixture the hotpath bench sweeps): three EDPU sizes × up to
@@ -213,6 +216,51 @@ fn partitioned_fleet_keeps_every_serving_invariant() {
             "{label}: partitioned runs with the (default) link model report schema v3"
         );
     }
+}
+
+#[test]
+fn fault_free_reports_pin_the_pre_fault_schema() {
+    // the fault subsystem must be invisible unless enabled: schema stays
+    // v1, no faults block, no fault-era admission keys — and enabling an
+    // EMPTY schedule flips to v4 without changing any serving outcome
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 8);
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 3000.0;
+    cfg.slo_ms = 80.0;
+    cfg.n_requests = 200;
+    cfg.seed = 77;
+    let base = serve_fleet_on(&cfg, &fleet).unwrap();
+    check_invariants(&base, &cfg, "fault-free");
+    let j = base.to_json();
+    let js = j.to_string();
+    assert!(js.contains("\"schema\":\"cat-serve-v1\""), "fault-free stays v1");
+    assert!(!js.contains("\"faults\""), "no faults block without fault injection");
+    assert!(!js.contains("shed_fault") && !js.contains("shed_retry"));
+    assert!(!js.contains("\"requeued\"") && !js.contains("\"retried\""));
+    // the admission block carries exactly the six pre-fault keys
+    let adm = j.get("admission").and_then(|a| a.as_obj()).expect("admission block");
+    let keys: Vec<&str> = adm.keys().map(String::as_str).collect();
+    assert_eq!(
+        keys,
+        ["admitted", "completed", "shed_capacity", "shed_rate", "shed_slo", "submitted"],
+        "fault-free admission keys are pinned"
+    );
+
+    // empty schedule: v4 schema + faults block, byte-equal serving outcome
+    let mut fcfg = cfg.clone();
+    fcfg.faults = Some(FaultPolicy::Schedule(FaultSchedule::default()));
+    let v4 = serve_fleet_on(&fcfg, &fleet).unwrap();
+    let v4s = v4.to_json().to_string();
+    assert!(v4s.contains("\"schema\":\"cat-serve-v4\""), "empty schedule still reports v4");
+    assert!(v4s.contains("\"faults\""));
+    assert_eq!(v4.responses.len(), base.responses.len());
+    for (x, y) in base.responses.iter().zip(&v4.responses) {
+        assert_eq!((x.id, x.backend, x.completion_ns), (y.id, y.backend, y.completion_ns));
+    }
+    let f = v4.faults.as_ref().expect("faults accounting present");
+    assert!(f.timeline.is_empty() && f.requeued == 0 && f.retried == 0);
 }
 
 #[test]

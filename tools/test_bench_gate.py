@@ -20,7 +20,7 @@ def doc(rows=None, derived=None):
     return d
 
 
-def measured(engine=3.0, dse=50.0, serve=200000.0, contention=2.0, smoke=True):
+def measured(engine=3.0, dse=50.0, serve=200000.0, contention=2.0, failover=150000.0, smoke=True):
     return doc(
         rows={"engine/mha_scenario_batch64_fast": {"median_ns": 1.0, "iters": 2}},
         derived={
@@ -28,6 +28,7 @@ def measured(engine=3.0, dse=50.0, serve=200000.0, contention=2.0, smoke=True):
             "dse_points_per_sec": dse,
             "serve_router_reqs_per_sec": serve,
             "serve_contention_overhead": contention,
+            "serve_failover_reqs_per_sec": failover,
             "smoke": smoke,
         },
     )
@@ -117,12 +118,28 @@ class BenchGateTests(unittest.TestCase):
         self.assertEqual(code, 1)
         self.assertIn("missing from current", out)
 
-    def test_missing_metric_in_baseline_fails(self):
+    def test_missing_metric_in_baseline_warns_and_passes(self):
+        # a newly added bench row predates the committed baseline — the
+        # gate must not fail the PR that introduces the metric
         base = measured()
-        del base["derived"]["serve_router_reqs_per_sec"]
+        del base["derived"]["serve_failover_reqs_per_sec"]
         code, out = gate(measured(), base)
-        self.assertEqual(code, 1)
+        self.assertEqual(code, 0, out)
         self.assertIn("missing from baseline", out)
+        self.assertIn("warning", out)
+
+    def test_missing_baseline_metric_does_not_mask_other_regressions(self):
+        base = measured()
+        del base["derived"]["serve_failover_reqs_per_sec"]
+        code, out = gate(measured(engine=1.4), base)
+        self.assertEqual(code, 1)
+        self.assertIn("engine_speedup_mha_batch64", out)
+
+    def test_failover_throughput_regression_fails(self):
+        code, out = gate(measured(failover=50000.0), measured())
+        self.assertEqual(code, 1)
+        self.assertIn("serve_failover_reqs_per_sec", out)
+        self.assertIn("regression", out)
 
     def test_mode_mismatch_warns_but_compares(self):
         code, out = gate(measured(smoke=True), measured(smoke=False))
@@ -135,10 +152,12 @@ class BenchGateTests(unittest.TestCase):
         code, out = gate(cur, measured())
         self.assertEqual(code, 1)
         self.assertIn("missing from current", out)
+        # a baseline with no derived block at all warns per metric but
+        # passes (the missing-from-baseline policy, degenerately)
         base = measured()
         base["derived"] = None
         code, out = gate(measured(), base)
-        self.assertEqual(code, 1)
+        self.assertEqual(code, 0, out)
         self.assertIn("missing from baseline", out)
 
     def test_unreadable_file_exits_2_not_1(self):
