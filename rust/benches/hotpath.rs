@@ -269,6 +269,26 @@ fn main() {
          requeued ({failover_reqs_per_sec:.0} req/s driver throughput)"
     );
 
+    // --- traced-serve row: the identical routing loop with the full
+    //     observability layer attached (trace sink + metrics registry).
+    //     The derived `serve_trace_overhead` (traced/untraced host-time
+    //     median ratio, lower-is-better) gates the instrumentation cost:
+    //     growth means the "zero-cost-when-off, cheap-when-on" contract
+    //     is eroding ---
+    let mut traced_events = 0usize;
+    let traced_med = run_row("serve/traced_route", 2, 20, &mut || {
+        let mut obs = cat::obs::Obs::new(true, true);
+        let r = cat::serve::serve_fleet_on_obs(&serve_cfg, &serve_fleet, &mut obs).unwrap();
+        traced_events = obs.trace.as_ref().map_or(0, |t| t.len());
+        black_box(r);
+    })
+    .median_ns();
+    let serve_trace_overhead = traced_med / serve_med.max(1.0);
+    println!(
+        "  serve (traced): {traced_events} trace event(s) per pass \
+         ({serve_trace_overhead:.3}x host-time overhead vs untraced routing)"
+    );
+
     // PJRT hot path (needs artifacts)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         use cat::coordinator::synthetic_request;
@@ -341,6 +361,11 @@ fn main() {
             "serve_failover_reqs_per_sec".to_string(),
             Json::Num(failover_reqs_per_sec.round()),
         );
+        derived.insert(
+            "serve_trace_overhead".to_string(),
+            Json::Num((serve_trace_overhead * 1000.0).round() / 1000.0),
+        );
+        derived.insert("serve_trace_events".to_string(), Json::Num(traced_events as f64));
         derived.insert("smoke".to_string(), Json::Bool(smoke));
         // the record's own regenerate command reproduces the mode it was
         // measured in, so a refreshed baseline stays gate-comparable

@@ -100,6 +100,18 @@ impl DesignPoint {
         m.insert("gops_per_w".into(), Json::Num(self.gops_per_w));
         Json::Obj(m)
     }
+
+    /// Compact args for this point's evaluate-span in the DSE trace —
+    /// the subset of [`DesignPoint::to_json`] worth reading in Perfetto.
+    pub fn trace_args(&self) -> Vec<(String, Json)> {
+        vec![
+            ("index".to_string(), Json::Num(self.cand.index as f64)),
+            ("tops".to_string(), Json::Num(self.tops)),
+            ("latency_ms".to_string(), Json::Num(self.latency_ms)),
+            ("total_cores".to_string(), Json::Num(self.total_cores as f64)),
+            ("gops_per_w".to_string(), Json::Num(self.gops_per_w)),
+        ]
+    }
 }
 
 /// Simulate one pruned survivor.  `plan.hw` must already be the

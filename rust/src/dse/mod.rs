@@ -42,6 +42,7 @@ use std::collections::BTreeMap;
 use crate::arch::AcceleratorPlan;
 use crate::config::{HardwareConfig, ModelConfig};
 use crate::customize::customize;
+use crate::obs::{Obs, PID_DSE};
 use crate::util::json::Json;
 use crate::util::par::par_map;
 use anyhow::{anyhow, Result};
@@ -256,6 +257,15 @@ pub fn deploy_plan_in_share(
 /// Run one exploration: enumerate/sample → customize+prune → simulate in
 /// parallel → select the frontier.
 pub fn explore(cfg: &ExploreConfig) -> Result<ExploreResult> {
+    explore_obs(cfg, None)
+}
+
+/// [`explore`] with an optional observability sink: phase timing on a
+/// synthetic deterministic timeline (`--trace`) and `dse.*` counters /
+/// histograms (`--metrics`).  `None` is the zero-cost path; the
+/// returned [`ExploreResult`] is identical either way — the sink is
+/// filled from the finished result, never consulted during the search.
+pub fn explore_obs(cfg: &ExploreConfig, obs: Option<&mut Obs>) -> Result<ExploreResult> {
     let board = cfg.board();
     // Effective space: per-EDPU budgets above the (possibly `max_cores`-
     // capped) board all clamp to the same board-sized budget, so collapse
@@ -319,7 +329,7 @@ pub fn explore(cfg: &ExploreConfig) -> Result<ExploreResult> {
     let query = Query { max_latency_ms: cfg.slo_ms, ..Query::default() };
     let best_constrained = best_tops_under(&points, &query);
 
-    Ok(ExploreResult {
+    let res = ExploreResult {
         space_size: n,
         sampled,
         points,
@@ -329,5 +339,68 @@ pub fn explore(cfg: &ExploreConfig) -> Result<ExploreResult> {
         stats,
         slo_ms: cfg.slo_ms,
         best_constrained,
-    })
+    };
+    if let Some(o) = obs {
+        fill_explore_obs(o, &res);
+    }
+    Ok(res)
+}
+
+/// Fill the observability sink from a finished exploration.
+///
+/// The DSE has no virtual clock, so the trace timeline is *synthetic*
+/// but deterministic: the prune phase spans 1 µs per candidate
+/// considered, then every evaluated point is laid end to end on its own
+/// track with its simulated per-item latency as the span width (points
+/// are in candidate order — `par_map` preserves it — so the layout is
+/// thread-count independent), and the selection phase closes the
+/// timeline.  Perfetto then shows *where the search spent its modeled
+/// time*, which is the quantity the paper's DSE trades off.
+fn fill_explore_obs(o: &mut Obs, r: &ExploreResult) {
+    if let Some(t) = o.trace.as_mut() {
+        t.process_name(PID_DSE, "cat explore (synthetic timeline)");
+        t.thread_name(PID_DSE, 0, "phases");
+        t.thread_name(PID_DSE, 1, "evaluate");
+        let prune_ns = (r.stats.sampled as u64).max(1) * 1_000;
+        let prune_args = vec![
+            ("considered".to_string(), Json::Num(r.stats.sampled as f64)),
+            ("customize_rejected".to_string(), Json::Num(r.stats.customize_rejected as f64)),
+            ("aie_rejected".to_string(), Json::Num(r.stats.aie_rejected as f64)),
+            ("pl_rejected".to_string(), Json::Num(r.stats.pl_rejected as f64)),
+        ];
+        t.complete("customize+prune", "dse", PID_DSE, 0, 0, prune_ns, prune_args);
+        let mut cursor = prune_ns;
+        for p in &r.points {
+            let dur = ((p.latency_ms * 1e6) as u64).max(1);
+            let name = format!("eval#{}", p.cand.index);
+            t.complete(&name, "dse", PID_DSE, 1, cursor, dur, p.trace_args());
+            cursor += dur;
+        }
+        let select_ns = (r.points.len() as u64 + 1) * 1_000;
+        let select_args = vec![
+            ("frontier".to_string(), Json::Num(r.frontier.len() as f64)),
+            ("dominated".to_string(), Json::Num(r.dominated as f64)),
+            ("duplicates".to_string(), Json::Num(r.duplicates as f64)),
+        ];
+        t.complete("pareto+query", "dse", PID_DSE, 0, cursor, select_ns, select_args);
+    }
+    if let Some(m) = o.metrics.as_mut() {
+        m.add("dse.considered", r.stats.sampled as u64);
+        m.add("dse.customize_rejected", r.stats.customize_rejected as u64);
+        m.add("dse.aie_rejected", r.stats.aie_rejected as u64);
+        m.add("dse.pl_rejected", r.stats.pl_rejected as u64);
+        m.add("dse.sim_failed", r.stats.sim_failed as u64);
+        m.add("dse.evaluated", r.stats.evaluated as u64);
+        m.add("dse.frontier", r.frontier.len() as u64);
+        m.add("dse.dominated", r.dominated as u64);
+        m.add("dse.duplicates", r.duplicates as u64);
+        for p in &r.points {
+            m.record("dse.point_latency_ns", (p.latency_ms * 1e6) as u64);
+            m.record("dse.point_total_cores", p.total_cores as u64);
+        }
+        if let Some(i) = r.best_constrained {
+            m.set_gauge("dse.best_tops", r.points[i].tops);
+        }
+    }
+    o.record_global_deltas();
 }

@@ -163,6 +163,18 @@ pub fn serve_fleet(cfg: &crate::serve::FleetConfig) -> Result<crate::serve::Flee
     crate::serve::serve_fleet(cfg)
 }
 
+/// [`serve_fleet`] with the observability layer attached: the run's
+/// request lifecycle lands in `obs.trace` and its counters/histograms in
+/// `obs.metrics` (whichever sides are enabled).  The report itself is
+/// byte-identical to the plain entry point — observation never perturbs
+/// the virtual clock.
+pub fn serve_fleet_obs(
+    cfg: &crate::serve::FleetConfig,
+    obs: &mut crate::obs::Obs,
+) -> Result<crate::serve::FleetReport> {
+    crate::serve::serve_fleet_obs(cfg, obs)
+}
+
 /// EXP-O1 — Observation 1: serial vs pipelined send/compute/receive on
 /// the PL side.  Returns (serial_ns, pipelined_ns).
 pub fn obs1_times() -> Result<(f64, f64)> {

@@ -18,6 +18,8 @@
 //! * [`coordinator`] — HOST-side request batching over an EDPU pool;
 //! * [`serve`] — SLO-aware fleet serving across an explore-derived
 //!   accelerator family (virtual-clock routing + admission control);
+//! * [`obs`] — zero-cost-when-off observability: virtual-clock traces
+//!   (Chrome trace-event JSON for Perfetto) + `cat-obs-v1` metrics;
 //! * [`report`] — renderers for every paper table/figure.
 //!
 //! See DESIGN.md for the substitution map (real board → simulator) and
@@ -32,6 +34,7 @@ pub mod coordinator;
 pub mod customize;
 pub mod dse;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sched;

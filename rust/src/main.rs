@@ -24,7 +24,7 @@ use cat::util::cli;
 const VALUED: &[&str] = &[
     "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
     "max-cores", "slo-ms", "budget", "rps", "backends", "queue-cap", "dram-gbps", "pcie-gbps",
-    "faults", "mtbf-s", "mttr-s", "max-retries",
+    "faults", "mtbf-s", "mttr-s", "max-retries", "trace", "metrics",
 ];
 
 fn main() {
@@ -58,9 +58,15 @@ subcommands:
   customize --model <m> --hw <h> [--json]   derive an accelerator plan
   explore   --model <m> --hw <h> [--max-cores N] [--slo-ms X]
             [--budget K|all] [--seed S] [--json]
+            [--trace <f>] [--metrics <f>]
                                             sweep the joint customization x
                                             deployment space and report the
-                                            Pareto-optimal accelerator family
+                                            Pareto-optimal accelerator family;
+                                            --trace writes the DSE phase
+                                            timeline as Chrome trace-event
+                                            JSON (load in Perfetto),
+                                            --metrics a cat-obs-v1
+                                            counters/histograms document
   simulate  --model <m> --hw <h> [--batch N]  run the EDPU simulator
   table <2|5|6|7>                           reproduce a paper table
   fig5                                      reproduce Figure 5
@@ -73,7 +79,8 @@ subcommands:
         [--seed S] [--partition] [--dram-gbps G] [--pcie-gbps G]
         [--no-links]
         [--faults <spec.json> | --mtbf-s <s> --mttr-s <s>]
-        [--max-retries R] [--json]          SLO-aware fleet serving across
+        [--max-retries R] [--trace <f>]
+        [--metrics <f>] [--json]            SLO-aware fleet serving across
                                             an explore-derived accelerator
                                             family (virtual clock);
                                             --partition co-locates the
@@ -100,7 +107,15 @@ subcommands:
                                             default 3), and the report
                                             switches to schema
                                             cat-serve-v4 with a faults
-                                            block
+                                            block;
+                                            --trace writes the request
+                                            lifecycle on the virtual clock
+                                            as Chrome trace-event JSON
+                                            (load in Perfetto), --metrics
+                                            a cat-obs-v1 document with
+                                            counters + deterministic
+                                            histograms; neither flag
+                                            perturbs the report
   codegen --model <m> --hw <h> [--json]     emit the AIE graph design
 models: bert-base | vit-base | <path>.json
 hardware: vck5000 | vck190 | vck5000-limited-<n> | <path>.json
@@ -186,11 +201,42 @@ fn cmd_explore(args: &cli::Args) -> Result<()> {
     if let Some(s) = args.opt("seed") {
         cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
     }
+    let trace_on = args.opt("trace").is_some();
+    let metrics_on = args.opt("metrics").is_some();
+    if trace_on || metrics_on {
+        let mut obs = cat::obs::Obs::new(trace_on, metrics_on);
+        let res = cat::dse::explore_obs(&cfg, Some(&mut obs))?;
+        write_obs_outputs(args, &obs)?;
+        if args.flag("json") {
+            println!("{}", res.to_json());
+        } else {
+            print!("{}", report::explore(&res));
+            if let Some(m) = &obs.metrics {
+                print!("{}", report::obs_footer(m));
+            }
+        }
+        return Ok(());
+    }
     let res = cat::dse::explore(&cfg)?;
     if args.flag("json") {
         println!("{}", res.to_json());
     } else {
         print!("{}", report::explore(&res));
+    }
+    Ok(())
+}
+
+/// Write the `--trace` / `--metrics` files from a finished observability
+/// capture.  Only the sides that were enabled (and given a path) land on
+/// disk; both documents end with a trailing newline for clean `cat`/`cmp`.
+fn write_obs_outputs(args: &cli::Args, obs: &cat::obs::Obs) -> Result<()> {
+    if let (Some(path), Some(t)) = (args.opt("trace"), obs.trace.as_ref()) {
+        std::fs::write(path, format!("{}\n", t.to_json()))
+            .map_err(|e| anyhow!("writing trace '{path}': {e}"))?;
+    }
+    if let (Some(path), Some(m)) = (args.opt("metrics"), obs.metrics.as_ref()) {
+        std::fs::write(path, format!("{}\n", m.to_json()))
+            .map_err(|e| anyhow!("writing metrics '{path}': {e}"))?;
     }
     Ok(())
 }
@@ -334,6 +380,12 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     // without it `serve` keeps its original single-host PJRT meaning.
     if args.opt("rps").is_some() {
         return cmd_serve_fleet(args);
+    }
+    if args.opt("trace").is_some() || args.opt("metrics").is_some() {
+        return Err(anyhow!(
+            "--trace/--metrics require the fleet path (`cat serve --rps ...`): the \
+             single-host PJRT loop runs on the wall clock, not the virtual clock"
+        ));
     }
     let model = model_of(args)?;
     let hw = hw_of(args)?;
@@ -490,6 +542,22 @@ fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
     if let Some(s) = args.opt("max-retries") {
         cfg.max_retries =
             s.parse().map_err(|_| anyhow!("--max-retries expects an integer, got '{s}'"))?;
+    }
+    let trace_on = args.opt("trace").is_some();
+    let metrics_on = args.opt("metrics").is_some();
+    if trace_on || metrics_on {
+        let mut obs = cat::obs::Obs::new(trace_on, metrics_on);
+        let r = experiments::serve_fleet_obs(&cfg, &mut obs)?;
+        write_obs_outputs(args, &obs)?;
+        if args.flag("json") {
+            println!("{}", r.to_json());
+        } else {
+            print!("{}", report::serve_fleet(&r));
+            if let Some(m) = &obs.metrics {
+                print!("{}", report::obs_footer(m));
+            }
+        }
+        return Ok(());
     }
     let r = experiments::serve_fleet(&cfg)?;
     if args.flag("json") {

@@ -1,0 +1,301 @@
+//! Deterministic metrics primitives: counters, gauges, and fixed
+//! log2-bucket histograms.
+//!
+//! Everything here is driven off the virtual clock or plain event
+//! counts — no wall-clock reads, and no floating point in bucket
+//! boundaries — so a registry filled by a seeded run is byte-stable
+//! across hosts and thread counts (modulo process-global counters the
+//! caller snapshots; see `obs::Snapshot`).  The registry serializes as
+//! the `cat-obs-v1` JSON document consumed by `--metrics <path>`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets: one for zero plus one per power of
+/// two up to `u64::MAX` (bucket `i >= 1` covers `[2^(i-1), 2^i - 1]`).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed log2-bucket histogram over `u64` samples (virtual-clock
+/// nanoseconds, queue depths, batch sizes...).  Bucket boundaries are
+/// integers known at compile time, so two histograms fed the same
+/// samples are bit-identical regardless of insertion order, and merge
+/// is plain element-wise addition (associative and commutative).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; HIST_BUCKETS],
+    sum: u64,
+}
+
+impl Default for LogHistogram {
+    // [u64; 65] has no derived Default (arrays stop at 32); spell it out.
+    fn default() -> LogHistogram {
+        LogHistogram { counts: [0; HIST_BUCKETS], sum: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Bucket index for a sample: 0 for 0, else `floor(log2(v)) + 1`.
+    pub fn bucket_of(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    pub fn bucket_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`.
+    pub fn bucket_hi(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Element-wise addition; `(a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)`.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Saturating sum of recorded samples.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.counts[i]
+    }
+
+    /// `{"count":N,"sum":S,"buckets":[[lo,hi,count],...]}` with empty
+    /// buckets omitted (the document stays small for sparse data).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![
+                    Json::Num(Self::bucket_lo(i) as f64),
+                    Json::Num(Self::bucket_hi(i) as f64),
+                    Json::Num(c as f64),
+                ])
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count() as f64));
+        o.insert("sum".into(), Json::Num(self.sum as f64));
+        o.insert("buckets".into(), Json::Arr(buckets));
+        Json::Obj(o)
+    }
+}
+
+/// Named counters, gauges, and histograms; serializes as `cat-obs-v1`.
+/// BTreeMap keys give a stable field order in the emitted document.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, LogHistogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `delta` to a named counter (created at zero on first use).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Current counter value (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a named gauge (last write wins).
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record one sample into a named histogram.
+    pub fn record(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histograms.get(name)
+    }
+
+    /// Fold another registry in: counters add, gauges last-write-wins,
+    /// histograms merge.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// The `cat-obs-v1` document.
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> =
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        let hists: BTreeMap<String, Json> =
+            self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        let mut o = BTreeMap::new();
+        o.insert("schema".into(), Json::Str("cat-obs-v1".into()));
+        o.insert("counters".into(), Json::Obj(counters));
+        o.insert("gauges".into(), Json::Obj(gauges));
+        o.insert("histograms".into(), Json::Obj(hists));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(LogHistogram::bucket_of(0), 0);
+        assert_eq!(LogHistogram::bucket_of(1), 1);
+        assert_eq!(LogHistogram::bucket_of(2), 2);
+        assert_eq!(LogHistogram::bucket_of(3), 2);
+        assert_eq!(LogHistogram::bucket_of(4), 3);
+        assert_eq!(LogHistogram::bucket_of(u64::MAX), 64);
+        // zero lands in its own bucket
+        assert_eq!(LogHistogram::bucket_lo(0), 0);
+        assert_eq!(LogHistogram::bucket_hi(0), 0);
+        // the top bucket reaches u64::MAX
+        assert_eq!(LogHistogram::bucket_hi(64), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_monotone_and_contiguous() {
+        for i in 1..HIST_BUCKETS {
+            assert_eq!(
+                LogHistogram::bucket_lo(i),
+                LogHistogram::bucket_hi(i - 1).wrapping_add(1),
+                "bucket {i} lower bound must follow bucket {} upper bound",
+                i - 1
+            );
+            assert!(LogHistogram::bucket_hi(i) >= LogHistogram::bucket_lo(i));
+        }
+        // every sample lands inside its bucket's bounds
+        for v in [0u64, 1, 2, 3, 7, 8, 1023, 1024, u64::MAX - 1, u64::MAX] {
+            let i = LogHistogram::bucket_of(v);
+            assert!(v >= LogHistogram::bucket_lo(i) && v <= LogHistogram::bucket_hi(i));
+        }
+    }
+
+    #[test]
+    fn record_counts_and_saturating_sum() {
+        let mut h = LogHistogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(u64::MAX);
+        h.record(u64::MAX); // sum saturates instead of wrapping
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), u64::MAX);
+        assert_eq!(h.bucket_count(0), 1);
+        assert_eq!(h.bucket_count(1), 1);
+        assert_eq!(h.bucket_count(64), 2);
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let fill = |vals: &[u64]| {
+            let mut h = LogHistogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = fill(&[0, 5, 17, 1 << 40]);
+        let b = fill(&[3, 3, 900]);
+        let c = fill(&[u64::MAX, 1]);
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+    }
+
+    #[test]
+    fn registry_document_shape() {
+        let mut m = MetricsRegistry::new();
+        m.add("serve.submitted", 10);
+        m.add("serve.submitted", 5);
+        m.set_gauge("serve.shed_rate", 0.25);
+        m.record("serve.latency_ns", 1500);
+        m.record("serve.latency_ns", 0);
+        assert_eq!(m.counter("serve.submitted"), 15);
+        assert_eq!(m.counter("never.touched"), 0);
+        let doc = m.to_json().to_string();
+        assert!(doc.contains("\"schema\":\"cat-obs-v1\""), "{doc}");
+        assert!(doc.contains("\"serve.submitted\":15"), "{doc}");
+        assert!(doc.contains("\"serve.shed_rate\":0.25"), "{doc}");
+        assert!(doc.contains("\"serve.latency_ns\""), "{doc}");
+        // only non-empty buckets are emitted: zero-bucket + [1024,2047]
+        let parsed = Json::parse(&doc).unwrap();
+        let buckets =
+            parsed.path(&["histograms", "serve.latency_ns", "buckets"]).and_then(Json::as_arr);
+        assert_eq!(buckets.map(<[Json]>::len), Some(2));
+    }
+
+    #[test]
+    fn registry_merge_folds_counters_and_histograms() {
+        let mut a = MetricsRegistry::new();
+        a.add("c", 2);
+        a.record("h", 10);
+        let mut b = MetricsRegistry::new();
+        b.add("c", 3);
+        b.record("h", 20);
+        b.set_gauge("g", 1.5);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 5);
+        assert_eq!(a.histogram("h").unwrap().count(), 2);
+        assert_eq!(a.gauge("g"), Some(1.5));
+    }
+}

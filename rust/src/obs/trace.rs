@@ -1,0 +1,241 @@
+//! Chrome trace-event sink on the virtual clock.
+//!
+//! `TraceSink` buffers structured events stamped in integer virtual
+//! nanoseconds and exports the Chrome trace-event JSON format
+//! (`{"traceEvents":[...]}`) that Perfetto and `chrome://tracing`
+//! load directly.  Timestamps convert to microseconds only at export
+//! (the format's unit); the division by 1000 is exact for the `.5`/
+//! `.25` fractions the integer clock can produce, so the emitted text
+//! is byte-reproducible per seed.
+//!
+//! Export sorts events by `(virtual time, emission order)` with
+//! metadata first, so per-track timestamps are monotone in file order
+//! no matter when the simulator learned about an interval (e.g. batch
+//! service spans are only known at retirement).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Trace process id for the serving loop's tracks.
+pub const PID_SERVE: u32 = 1;
+/// Trace process id for the DSE synthetic timeline.
+pub const PID_DSE: u32 = 2;
+
+#[derive(Debug, Clone)]
+struct TraceEvent {
+    name: String,
+    cat: &'static str,
+    ph: char,
+    ts_ns: u64,
+    dur_ns: Option<u64>,
+    pid: u32,
+    tid: u32,
+    args: Vec<(String, Json)>,
+}
+
+/// Buffer of virtual-clock trace events.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Complete event (`ph:"X"`): an interval `[ts, ts+dur)` on one track.
+    pub fn complete(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        ts_ns: u64,
+        dur_ns: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'X',
+            ts_ns,
+            dur_ns: Some(dur_ns),
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Instant event (`ph:"i"`, thread scope): a point on one track.
+    pub fn instant(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        ts_ns: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'i',
+            ts_ns,
+            dur_ns: None,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// Counter event (`ph:"C"`): every arg is a numeric series sample.
+    pub fn counter(
+        &mut self,
+        name: &str,
+        cat: &'static str,
+        pid: u32,
+        tid: u32,
+        ts_ns: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        self.events.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'C',
+            ts_ns,
+            dur_ns: None,
+            pid,
+            tid,
+            args,
+        });
+    }
+
+    /// `process_name` metadata: labels a pid in the Perfetto UI.
+    pub fn process_name(&mut self, pid: u32, name: &str) {
+        self.metadata("process_name", pid, 0, name);
+    }
+
+    /// `thread_name` metadata: labels a (pid, tid) track.
+    pub fn thread_name(&mut self, pid: u32, tid: u32, name: &str) {
+        self.metadata("thread_name", pid, tid, name);
+    }
+
+    fn metadata(&mut self, kind: &str, pid: u32, tid: u32, name: &str) {
+        self.events.push(TraceEvent {
+            name: kind.to_string(),
+            cat: "__metadata",
+            ph: 'M',
+            ts_ns: 0,
+            dur_ns: None,
+            pid,
+            tid,
+            args: vec![("name".to_string(), Json::Str(name.to_string()))],
+        });
+    }
+
+    /// Export as `{"traceEvents":[...]}`.  Events are ordered by
+    /// `(ts, emission order)` with metadata first; `ts`/`dur` are in
+    /// microseconds per the trace-event spec (exact division of the
+    /// integer-ns clock, so the text is deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut order: Vec<usize> = (0..self.events.len()).collect();
+        order.sort_by_key(|&i| {
+            let e = &self.events[i];
+            (e.ph != 'M', e.ts_ns, i)
+        });
+        let events: Vec<Json> = order.iter().map(|&i| event_json(&self.events[i])).collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("traceEvents".to_string(), Json::Arr(events));
+        Json::Obj(doc)
+    }
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(e.name.clone()));
+    o.insert("cat".to_string(), Json::Str(e.cat.to_string()));
+    o.insert("ph".to_string(), Json::Str(e.ph.to_string()));
+    o.insert("pid".to_string(), Json::Num(f64::from(e.pid)));
+    o.insert("tid".to_string(), Json::Num(f64::from(e.tid)));
+    if e.ph != 'M' {
+        o.insert("ts".to_string(), Json::Num(e.ts_ns as f64 / 1000.0));
+    }
+    if let Some(d) = e.dur_ns {
+        o.insert("dur".to_string(), Json::Num(d as f64 / 1000.0));
+    }
+    if e.ph == 'i' {
+        // thread-scoped instant: renders as a tick on its own track
+        o.insert("s".to_string(), Json::Str("t".to_string()));
+    }
+    if !e.args.is_empty() {
+        let args: BTreeMap<String, Json> = e.args.iter().cloned().collect();
+        o.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_sorts_by_virtual_time_with_metadata_first() {
+        let mut t = TraceSink::new();
+        t.complete("late", "serve", PID_SERVE, 1, 5_000, 2_000, vec![]);
+        t.instant("early", "serve", PID_SERVE, 0, 1_000, vec![]);
+        t.process_name(PID_SERVE, "cat serve");
+        let doc = t.to_json();
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("ph").and_then(Json::as_str), Some("M"));
+        assert_eq!(evs[1].get("name").and_then(Json::as_str), Some("early"));
+        assert_eq!(evs[2].get("name").and_then(Json::as_str), Some("late"));
+    }
+
+    #[test]
+    fn timestamps_export_as_exact_microseconds() {
+        let mut t = TraceSink::new();
+        t.instant("p", "serve", PID_SERVE, 0, 1_500, vec![]);
+        let doc = t.to_json().to_string();
+        // 1500 ns = 1.5 µs, printed exactly
+        assert!(doc.contains("\"ts\":1.5"), "{doc}");
+        // whole microseconds print as integers (Json::Num i64 fast path)
+        let mut t2 = TraceSink::new();
+        t2.complete("q", "serve", PID_SERVE, 0, 2_000, 1_000, vec![]);
+        let doc2 = t2.to_json().to_string();
+        assert!(doc2.contains("\"ts\":2"), "{doc2}");
+        assert!(doc2.contains("\"dur\":1"), "{doc2}");
+    }
+
+    #[test]
+    fn instant_and_counter_shapes() {
+        let mut t = TraceSink::new();
+        t.instant(
+            "shed",
+            "serve",
+            PID_SERVE,
+            0,
+            10,
+            vec![("reason".to_string(), Json::Str("slo".to_string()))],
+        );
+        let depth = vec![("in_flight".to_string(), Json::Num(3.0))];
+        t.counter("queue", "serve", PID_SERVE, 1, 20, depth);
+        let doc = t.to_json().to_string();
+        assert!(doc.contains("\"ph\":\"i\""), "{doc}");
+        assert!(doc.contains("\"s\":\"t\""), "{doc}");
+        assert!(doc.contains("\"ph\":\"C\""), "{doc}");
+        assert!(doc.contains("\"in_flight\":3"), "{doc}");
+        assert!(!t.is_empty());
+        assert_eq!(t.len(), 2);
+    }
+}

@@ -417,6 +417,37 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
     out
 }
 
+/// Observability footer for the human-readable `explore`/`serve` reports
+/// (printed only when `--metrics` is given): the process-global engine
+/// counters the run bracketed — stage-sim cache effectiveness, fast-forward
+/// reuse inside the simulator, and `par_map` occupancy.
+pub fn obs_footer(m: &crate::obs::MetricsRegistry) -> String {
+    let hits = m.counter("sched.stage_cache_hits");
+    let misses = m.counter("sched.stage_cache_misses");
+    let runs = m.counter("sched.stage_runs");
+    let ff = m.counter("sim.fast_forwarded");
+    let calls = m.counter("par.calls");
+    let items = m.counter("par.items");
+    let launches = m.counter("par.worker_launches");
+    let pct = |n: u64, d: u64| if d == 0 { 0.0 } else { n as f64 / d as f64 * 100.0 };
+    let mut out = String::new();
+    out.push_str("  -- observability (cat-obs-v1) --\n");
+    out.push_str(&format!(
+        "  stage-sim cache: {hits} hit(s), {misses} miss(es) ({:.1}% hit rate) \
+         over {runs} stage run(s)\n",
+        pct(hits, hits + misses),
+    ));
+    out.push_str(&format!(
+        "  simulator fast-forward: {ff} invocation(s) reused a computed period\n"
+    ));
+    out.push_str(&format!(
+        "  par_map: {calls} call(s), {items} item(s), {launches} worker launch(es) \
+         ({:.1} workers/call)\n",
+        if calls == 0 { 0.0 } else { launches as f64 / calls as f64 },
+    ));
+    out
+}
+
 /// Figure 5 series: throughput vs batch size for MHA / FFN / System.
 #[derive(Debug, Clone)]
 pub struct BatchPoint {

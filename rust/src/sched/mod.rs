@@ -642,6 +642,9 @@ pub fn run_stage_opts(
     });
     if let Some(k) = &key {
         if let Some(cached) = cache::lookup(k) {
+            // cache hits still count as a stage run for observability:
+            // the cached report keeps its fast-forward coverage
+            crate::obs::record_stage_run(cached.sim.fast_forwarded);
             return Ok(cached);
         }
     }
@@ -833,6 +836,7 @@ pub fn run_stage_opts(
     if let Some(k) = key {
         cache::insert(k, &report);
     }
+    crate::obs::record_stage_run(report.sim.fast_forwarded);
     Ok(report)
 }
 

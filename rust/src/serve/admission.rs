@@ -92,6 +92,20 @@ impl AdmissionStats {
             ShedReason::RetryExhausted => self.shed_retry += 1,
         }
     }
+
+    /// Export the admission split as `serve.*` counters in the
+    /// `cat-obs-v1` registry (one counter per field, same names).
+    pub fn export_metrics(&self, m: &mut crate::obs::MetricsRegistry) {
+        m.add("serve.submitted", self.submitted as u64);
+        m.add("serve.admitted", self.admitted as u64);
+        m.add("serve.completed", self.completed as u64);
+        m.add("serve.shed_slo", self.shed_slo as u64);
+        m.add("serve.shed_capacity", self.shed_capacity as u64);
+        m.add("serve.shed_fault", self.shed_fault as u64);
+        m.add("serve.shed_retry", self.shed_retry as u64);
+        m.add("serve.requeued", self.requeued as u64);
+        m.add("serve.retried", self.retried as u64);
+    }
 }
 
 /// Seeded synthetic traffic (virtual-clock timestamps, ns from stream

@@ -70,6 +70,31 @@ impl FaultKind {
             FaultKind::LinkDegrade { .. } => None,
         }
     }
+
+    /// Args for the fault's trace instant — the same fields
+    /// [`FaultEvent::to_json`] reports, minus `applied` (a traced fault
+    /// was applied by construction).
+    pub fn trace_args(&self) -> Vec<(String, Json)> {
+        let mut args = Vec::new();
+        if let Some(b) = self.backend() {
+            args.push(("backend".to_string(), Json::Num(b as f64)));
+        }
+        match *self {
+            FaultKind::Crash { down_ns, .. } | FaultKind::Stall { down_ns, .. } => {
+                let ms = down_ns.min(DOWN_CAP_NS) as f64 / 1e6;
+                args.push(("down_ms".to_string(), Json::Num(ms)));
+            }
+            FaultKind::Slowdown { down_ns, factor, .. } => {
+                args.push(("down_ms".to_string(), Json::Num(down_ns as f64 / 1e6)));
+                args.push(("factor".to_string(), Json::Num(factor)));
+            }
+            FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
+                args.push(("dram_scale".to_string(), Json::Num(dram_scale)));
+                args.push(("pcie_scale".to_string(), Json::Num(pcie_scale)));
+            }
+        }
+        args
+    }
 }
 
 /// One scheduled fault at a virtual timestamp.

@@ -107,6 +107,14 @@ impl Backend {
         self.profile.len()
     }
 
+    /// The full pre-simulated service profile: `profile()[k-1]` is
+    /// `(service ns, useful ops)` for a batch of `k`.  Read-only — the
+    /// observability layer exports it so a trace viewer can relate
+    /// observed batch spans back to the simulated table.
+    pub fn profile(&self) -> &[(u64, u64)] {
+        &self.profile
+    }
+
     /// Routing cost: board power of this deployment (W) — "cheapest
     /// backend that fits the SLO" minimizes energy, the Table VI currency.
     pub fn power_w(&self) -> f64 {

@@ -79,6 +79,7 @@ use std::time::{Duration, Instant};
 use crate::config::{HardwareConfig, ModelConfig, SharedLinkModel};
 use crate::coordinator::{Batcher, BatcherConfig, ServeStats};
 use crate::dse;
+use crate::obs::{Obs, PID_SERVE};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -416,6 +417,11 @@ const CLASS_RECOVER: u8 = 0;
 const CLASS_FAULT: u8 = 1;
 const CLASS_FLUSH: u8 = 2;
 
+/// Trace track ids inside the serve trace (pid [`PID_SERVE`]): tid 0
+/// carries the request lifecycle, tid `1 + b` backend `b`, and the tid
+/// after the last backend the fault timeline.
+const TID_REQUESTS: u32 = 0;
+
 /// The virtual-clock serving loop over an already-built fleet.
 struct ServeLoop<'a> {
     cfg: &'a FleetConfig,
@@ -448,6 +454,10 @@ struct ServeLoop<'a> {
     renegotiations: Vec<(u64, Vec<Option<f64>>)>,
     /// Crash/stall/slowdown windows, for the degraded-window p99.
     degraded_windows: Vec<(u64, u64)>,
+    /// Observability sink — `None` on the zero-cost flag-off path.
+    /// Every emission site gates on it, so `None` changes nothing
+    /// (pinned byte-for-byte by `obs_properties.rs`).
+    obs: Option<&'a mut Obs>,
 }
 
 impl<'a> ServeLoop<'a> {
@@ -456,6 +466,7 @@ impl<'a> ServeLoop<'a> {
         fleet: &'a Fleet,
         schedule: Vec<FaultEvent>,
         faults_enabled: bool,
+        obs: Option<&'a mut Obs>,
     ) -> ServeLoop<'a> {
         let wait = cfg.resolved_batch_wait();
         // never emit a batch the service profiles can't price
@@ -506,6 +517,7 @@ impl<'a> ServeLoop<'a> {
             pcie_scale: 1.0,
             renegotiations: Vec::new(),
             degraded_windows: Vec::new(),
+            obs,
         }
     }
 
@@ -517,6 +529,62 @@ impl<'a> ServeLoop<'a> {
     /// override when a fault redeployed it, the original otherwise.
     fn backend(&self, b: usize) -> &Backend {
         self.overrides[b].as_ref().unwrap_or(&self.fleet.backends[b])
+    }
+
+    fn tid_backend(b: usize) -> u32 {
+        b as u32 + 1
+    }
+
+    fn tid_faults(&self) -> u32 {
+        self.fleet.len() as u32 + 1
+    }
+
+    /// `true` when a trace sink is attached.  Emission sites gate arg
+    /// construction on this, so the flag-off path allocates nothing.
+    fn tracing(&self) -> bool {
+        self.obs.as_ref().is_some_and(|o| o.tracing())
+    }
+
+    /// `true` when a metrics registry is attached.
+    fn metering(&self) -> bool {
+        self.obs.as_ref().is_some_and(|o| o.metering())
+    }
+
+    fn trace_instant(&mut self, name: &str, tid: u32, ts_ns: u64, args: Vec<(String, Json)>) {
+        if let Some(t) = self.obs.as_deref_mut().and_then(|o| o.trace.as_mut()) {
+            t.instant(name, "serve", PID_SERVE, tid, ts_ns, args);
+        }
+    }
+
+    fn trace_complete(
+        &mut self,
+        name: &str,
+        tid: u32,
+        ts_ns: u64,
+        dur_ns: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        if let Some(t) = self.obs.as_deref_mut().and_then(|o| o.trace.as_mut()) {
+            t.complete(name, "serve", PID_SERVE, tid, ts_ns, dur_ns, args);
+        }
+    }
+
+    fn trace_counter(&mut self, name: &str, tid: u32, ts_ns: u64, args: Vec<(String, Json)>) {
+        if let Some(t) = self.obs.as_deref_mut().and_then(|o| o.trace.as_mut()) {
+            t.counter(name, "serve", PID_SERVE, tid, ts_ns, args);
+        }
+    }
+
+    fn metric_record(&mut self, name: &str, v: u64) {
+        if let Some(m) = self.obs.as_deref_mut().and_then(|o| o.metrics.as_mut()) {
+            m.record(name, v);
+        }
+    }
+
+    fn metric_add(&mut self, name: &str, delta: u64) {
+        if let Some(m) = self.obs.as_deref_mut().and_then(|o| o.metrics.as_mut()) {
+            m.add(name, delta);
+        }
     }
 
     /// Effective service time of a batch of `k` dispatched at `at_ns`:
@@ -589,6 +657,9 @@ impl<'a> ServeLoop<'a> {
             match class {
                 CLASS_RECOVER => {
                     self.states[idx].down_until_ns = None;
+                    if self.tracing() {
+                        self.trace_instant("up", Self::tid_backend(idx), when, Vec::new());
+                    }
                     self.renegotiate(when)?;
                 }
                 CLASS_FAULT => {
@@ -599,6 +670,10 @@ impl<'a> ServeLoop<'a> {
                 }
                 _ => {
                     if let Some(batch) = self.states[idx].batcher.flush() {
+                        if self.tracing() {
+                            let args = vec![("batch".to_string(), Json::Num(batch.len() as f64))];
+                            self.trace_instant("flush", Self::tid_backend(idx), when, args);
+                        }
                         self.dispatch(idx, batch, when);
                     }
                 }
@@ -612,6 +687,13 @@ impl<'a> ServeLoop<'a> {
     /// Apply one scheduled fault at `now_ns` (== the event's timestamp,
     /// clamped forward to the cursor).
     fn apply_fault(&mut self, ev: FaultEvent, now_ns: u64) -> Result<()> {
+        if self.tracing() {
+            let tid = self.tid_faults();
+            self.trace_instant(ev.kind.name(), tid, now_ns, ev.kind.trace_args());
+        }
+        if self.metering() {
+            self.metric_add(&format!("serve.faults.{}", ev.kind.name()), 1);
+        }
         match ev.kind {
             FaultKind::Crash { backend: b, down_ns } => {
                 let end = now_ns.saturating_add(down_ns).min(faults::DOWN_CAP_NS);
@@ -636,6 +718,10 @@ impl<'a> ServeLoop<'a> {
                 st.downs += 1;
                 st.down_windows.push((now_ns, end));
                 self.degraded_windows.push((now_ns, end));
+                if self.tracing() {
+                    let args = vec![("until_ms".to_string(), Json::Num(end as f64 / 1e6))];
+                    self.trace_instant("down", Self::tid_backend(b), now_ns, args);
+                }
                 self.renegotiate(now_ns)?;
                 self.requeue(b, orphans, now_ns);
             }
@@ -672,6 +758,10 @@ impl<'a> ServeLoop<'a> {
                 st.downs += 1;
                 st.down_windows.push((now_ns, end));
                 self.degraded_windows.push((now_ns, end));
+                if self.tracing() {
+                    let args = vec![("until_ms".to_string(), Json::Num(end as f64 / 1e6))];
+                    self.trace_instant("down", Self::tid_backend(b), now_ns, args);
+                }
                 self.renegotiate(now_ns)?;
                 self.requeue(b, orphans, now_ns);
             }
@@ -688,6 +778,13 @@ impl<'a> ServeLoop<'a> {
                     st.slow_until_ns = end;
                 }
                 self.degraded_windows.push((now_ns, end));
+                if self.tracing() {
+                    let args = vec![
+                        ("factor".to_string(), Json::Num(factor)),
+                        ("until_ms".to_string(), Json::Num(end as f64 / 1e6)),
+                    ];
+                    self.trace_instant("slow", Self::tid_backend(b), now_ns, args);
+                }
             }
             FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
                 self.dram_scale *= dram_scale;
@@ -743,6 +840,12 @@ impl<'a> ServeLoop<'a> {
             self.overrides[b] = Some(nb);
             self.cur_throttle[b] = throttle;
         }
+        if self.tracing() {
+            let members_up = stretches.iter().filter(|s| s.is_some()).count();
+            let tid = self.tid_faults();
+            let args = vec![("members_up".to_string(), Json::Num(members_up as f64))];
+            self.trace_instant("renegotiate", tid, now_ns, args);
+        }
         self.renegotiations.push((now_ns, stretches));
         Ok(())
     }
@@ -781,6 +884,14 @@ impl<'a> ServeLoop<'a> {
             ops,
             riders: batch.into_iter().map(|(r, _)| r).collect(),
         });
+        if self.tracing() {
+            let args = vec![
+                ("batch".to_string(), Json::Num(size as f64)),
+                ("start_ms".to_string(), Json::Num(start as f64 / 1e6)),
+                ("service_ms".to_string(), Json::Num(service as f64 / 1e6)),
+            ];
+            self.trace_instant("dispatch", Self::tid_backend(b), now_ns, args);
+        }
     }
 
     /// Retire batches whose completion time has passed: emit their
@@ -810,6 +921,41 @@ impl<'a> ServeLoop<'a> {
                         batch_service_ns: batch.service_ns,
                     });
                 }
+                if self.obs.is_some() {
+                    self.retire_obs(b, &batch);
+                }
+            }
+        }
+    }
+
+    /// Observability for one retired batch: the service-window span on
+    /// the backend track plus a completion instant and latency sample
+    /// per rider.  Spans are emitted at *retirement*, where the final
+    /// window is known — a stall shifts completions after dispatch, and
+    /// a crash resets `busy_until`, so dispatch-time emission could
+    /// produce non-monotone track timestamps (orphaned batches never
+    /// ran, so they get no span at all).
+    fn retire_obs(&mut self, b: usize, batch: &InFlightBatch) {
+        let start = batch.completion_ns.saturating_sub(batch.service_ns);
+        let size = batch.riders.len();
+        self.metric_record("serve.batch_size", size as u64);
+        if self.tracing() {
+            let args = vec![
+                ("batch".to_string(), Json::Num(size as f64)),
+                ("ops".to_string(), Json::Num(batch.ops as f64)),
+            ];
+            self.trace_complete("batch", Self::tid_backend(b), start, batch.service_ns, args);
+        }
+        for r in &batch.riders {
+            let latency_ns = batch.completion_ns - r.arrival_ns;
+            self.metric_record("serve.latency_ns", latency_ns);
+            if self.tracing() {
+                let args = vec![
+                    ("id".to_string(), Json::Num(r.id as f64)),
+                    ("backend".to_string(), Json::Num(b as f64)),
+                    ("latency_ms".to_string(), Json::Num(latency_ns as f64 / 1e6)),
+                ];
+                self.trace_instant("complete", TID_REQUESTS, batch.completion_ns, args);
             }
         }
     }
@@ -844,6 +990,15 @@ impl<'a> ServeLoop<'a> {
         if let Some(batch) = st.batcher.push(rider, at) {
             self.dispatch(b, batch, now_ns);
         }
+        if self.obs.is_some() {
+            let depth = self.states[b].in_flight as u64;
+            self.metric_record("serve.queue_depth", depth);
+            self.metric_record("serve.route_scanned", decision.scanned as u64);
+            if self.tracing() {
+                let args = vec![("in_flight".to_string(), Json::Num(depth as f64))];
+                self.trace_counter("queue", Self::tid_backend(b), now_ns, args);
+            }
+        }
         Ok(decision)
     }
 
@@ -860,39 +1015,68 @@ impl<'a> ServeLoop<'a> {
         for mut r in riders {
             r.retries += 1;
             if r.retries as usize > self.cfg.max_retries {
-                self.shed_rider(&r, ShedReason::RetryExhausted);
+                self.shed_rider(&r, ShedReason::RetryExhausted, now_ns);
                 continue;
             }
             match self.admit(r, now_ns) {
-                Ok(_) => self.stats.retried += 1,
-                Err(_) => self.shed_rider(&r, ShedReason::Fault),
+                Ok(d) => {
+                    self.stats.retried += 1;
+                    if self.tracing() {
+                        let args = vec![
+                            ("id".to_string(), Json::Num(r.id as f64)),
+                            ("from".to_string(), Json::Num(source as f64)),
+                            ("backend".to_string(), Json::Num(d.backend as f64)),
+                            ("retries".to_string(), Json::Num(f64::from(r.retries))),
+                        ];
+                        self.trace_instant("retry", TID_REQUESTS, now_ns, args);
+                    }
+                }
+                Err(_) => self.shed_rider(&r, ShedReason::Fault, now_ns),
             }
         }
     }
 
-    fn shed_rider(&mut self, r: &Rider, reason: ShedReason) {
+    fn shed_rider(&mut self, r: &Rider, reason: ShedReason, now_ns: u64) {
         self.stats.record_shed(reason);
         self.shed.push(ShedRecord { id: r.id, arrival_ns: r.arrival_ns, reason });
+        if self.tracing() {
+            let args = vec![
+                ("id".to_string(), Json::Num(r.id as f64)),
+                ("reason".to_string(), Json::Str(reason.as_str().to_string())),
+            ];
+            self.trace_instant("shed", TID_REQUESTS, now_ns, args);
+        }
     }
 
     /// Route + admit (or shed) one arrival at `t_ns`.
     fn arrive(&mut self, id: u64, t_ns: u64) -> Result<()> {
         self.process_until(t_ns)?;
         self.stats.submitted += 1;
+        if self.tracing() {
+            let args = vec![("id".to_string(), Json::Num(id as f64))];
+            self.trace_instant("submit", TID_REQUESTS, t_ns, args);
+        }
         let rider = Rider { id, arrival_ns: t_ns, retries: 0 };
         match self.admit(rider, t_ns) {
-            Ok(_) => self.stats.admitted += 1,
+            Ok(d) => {
+                self.stats.admitted += 1;
+                if self.tracing() {
+                    let args = vec![
+                        ("id".to_string(), Json::Num(id as f64)),
+                        ("backend".to_string(), Json::Num(d.backend as f64)),
+                        ("scanned".to_string(), Json::Num(d.scanned as f64)),
+                    ];
+                    self.trace_instant("admit", TID_REQUESTS, t_ns, args);
+                }
+            }
             Err(ShedReason::Fault) => {
                 // a fresh arrival during a TOTAL outage: counted
                 // admitted-then-fault-shed so both conservation
                 // equations stay exact (see AdmissionStats::accounted)
                 self.stats.admitted += 1;
-                self.shed_rider(&rider, ShedReason::Fault);
+                self.shed_rider(&rider, ShedReason::Fault, t_ns);
             }
-            Err(reason) => {
-                self.stats.record_shed(reason);
-                self.shed.push(ShedRecord { id, arrival_ns: t_ns, reason });
-            }
+            Err(reason) => self.shed_rider(&rider, reason, t_ns),
         }
         Ok(())
     }
@@ -959,16 +1143,16 @@ impl<'a> ServeLoop<'a> {
     }
 }
 
-/// Derive a frontier for the pair, deploy the family — on one shared
-/// board when [`FleetConfig::partition`] is set, one board per member
-/// otherwise — and serve the synthetic stream across it.
-pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+/// Explore + deploy the family the serving entry points share: on one
+/// shared board when [`FleetConfig::partition`] is set, one board per
+/// member otherwise.
+fn build_fleet(cfg: &FleetConfig) -> Result<Fleet> {
     let mut ecfg = dse::ExploreConfig::new(cfg.model.clone(), cfg.hw.clone());
     ecfg.sample_budget = cfg.explore_budget;
     ecfg.seed = cfg.seed;
     ecfg.slo_ms = Some(cfg.slo_ms);
     let explored = dse::explore(&ecfg)?;
-    let fleet = if cfg.partition {
+    if cfg.partition {
         Fleet::select_partitioned(
             &cfg.model,
             &cfg.hw,
@@ -977,11 +1161,27 @@ pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
             cfg.max_batch,
             Some(cfg.slo_ms),
             cfg.links.as_ref(),
-        )?
+        )
     } else {
-        Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)?
-    };
+        Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)
+    }
+}
+
+/// Derive a frontier for the pair, deploy the family — on one shared
+/// board when [`FleetConfig::partition`] is set, one board per member
+/// otherwise — and serve the synthetic stream across it.
+pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    let fleet = build_fleet(cfg)?;
     serve_fleet_on(cfg, &fleet)
+}
+
+/// [`serve_fleet`] with observability attached.  Create the [`Obs`]
+/// *before* calling so its global-counter baseline brackets the
+/// exploration and deployment phases too (that is where the stage-sim
+/// cache and `par_map` actually work).
+pub fn serve_fleet_obs(cfg: &FleetConfig, obs: &mut Obs) -> Result<FleetReport> {
+    let fleet = build_fleet(cfg)?;
+    serve_fleet_on_obs(cfg, &fleet, obs)
 }
 
 /// Drive the virtual-clock serving loop over an already-built fleet
@@ -989,6 +1189,12 @@ pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
 pub fn serve_fleet_on(cfg: &FleetConfig, fleet: &Fleet) -> Result<FleetReport> {
     let arrivals = TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
     serve_fleet_stream(cfg, fleet, &arrivals)
+}
+
+/// [`serve_fleet_on`] with observability attached.
+pub fn serve_fleet_on_obs(cfg: &FleetConfig, fleet: &Fleet, obs: &mut Obs) -> Result<FleetReport> {
+    let arrivals = TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
+    serve_fleet_stream_obs(cfg, fleet, &arrivals, Some(obs))
 }
 
 /// The serving loop over an **explicit** arrival pattern (sorted virtual
@@ -1000,6 +1206,20 @@ pub fn serve_fleet_stream(
     cfg: &FleetConfig,
     fleet: &Fleet,
     arrivals: &[u64],
+) -> Result<FleetReport> {
+    serve_fleet_stream_obs(cfg, fleet, arrivals, None)
+}
+
+/// [`serve_fleet_stream`] with an optional observability sink.  `None`
+/// is the zero-cost path ([`serve_fleet_stream`] itself); with a sink
+/// attached the emitted [`FleetReport`] is still byte-identical — the
+/// trace and registry are pure observers of the identical event
+/// sequence (pinned by `obs_properties.rs`).
+pub fn serve_fleet_stream_obs(
+    cfg: &FleetConfig,
+    fleet: &Fleet,
+    arrivals: &[u64],
+    mut obs: Option<&mut Obs>,
 ) -> Result<FleetReport> {
     debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
     let has_links = fleet.budget.as_ref().is_some_and(|b| b.links.is_some());
@@ -1025,13 +1245,26 @@ pub fn serve_fleet_stream(
         }
     };
     let faults_enabled = cfg.faults.is_some();
-    let mut lp = ServeLoop::new(cfg, fleet, schedule, faults_enabled);
+    if let Some(t) = obs.as_deref_mut().and_then(|o| o.trace.as_mut()) {
+        t.process_name(PID_SERVE, "cat serve (virtual clock)");
+        t.thread_name(PID_SERVE, TID_REQUESTS, "requests");
+        for b in 0..fleet.len() {
+            t.thread_name(PID_SERVE, b as u32 + 1, &format!("backend {b}"));
+        }
+        if faults_enabled {
+            t.thread_name(PID_SERVE, fleet.len() as u32 + 1, "faults");
+        }
+    }
+    let mut lp = ServeLoop::new(cfg, fleet, schedule, faults_enabled, obs);
     for (id, &t_ns) in arrivals.iter().enumerate() {
         lp.arrive(id as u64, t_ns)?;
     }
     // end of stream: flushes, retirements, and in-horizon faults all
     // keep firing at their own virtual deadlines until the work drains
     lp.drain()?;
+    // detach the sink: the metrics fill below reads the finished report
+    // while `lp`'s fields are still being consumed
+    let obs_after = lp.obs.take();
     let mut stats = lp.stats;
     stats.completed = lp.responses.len();
     let shed = std::mem::take(&mut lp.shed);
@@ -1107,7 +1340,7 @@ pub fn serve_fleet_stream(
 
     let mut responses = lp.responses;
     responses.sort_by_key(|r| r.id);
-    Ok(FleetReport {
+    let report = FleetReport {
         model: cfg.model.name.clone(),
         hw: cfg.hw.name.clone(),
         rps: cfg.rps,
@@ -1124,5 +1357,30 @@ pub fn serve_fleet_stream(
         slo_violations,
         board: fleet.budget.clone(),
         faults: faults_report,
-    })
+    };
+    if let Some(o) = obs_after {
+        fill_serve_metrics(o, &report);
+    }
+    Ok(report)
+}
+
+/// Fill the registry from the finished report: the admission split,
+/// fleet aggregates, per-backend gauges, and the global-counter deltas
+/// (stage-sim cache, DES fast-forward coverage, `par_map` occupancy)
+/// bracketed by `Obs::new`.
+fn fill_serve_metrics(o: &mut Obs, r: &FleetReport) {
+    if let Some(m) = o.metrics.as_mut() {
+        r.admission.export_metrics(m);
+        m.set_gauge("serve.shed_rate", r.admission.shed_rate());
+        m.set_gauge("serve.wall_ms", r.wall_ns as f64 / 1e6);
+        m.set_gauge("serve.fleet_gops_per_w", r.fleet_gops_per_w);
+        m.add("serve.slo_violations", r.slo_violations as u64);
+        let wall = r.wall_ns.max(1) as f64;
+        for b in &r.backends {
+            m.set_gauge(&format!("serve.backend{}.utilization", b.id), b.busy_ns as f64 / wall);
+            m.add(&format!("serve.backend{}.batches", b.id), b.stats.batches as u64);
+            m.add(&format!("serve.backend{}.completed", b.id), b.stats.completed as u64);
+        }
+    }
+    o.record_global_deltas();
 }

@@ -77,6 +77,10 @@ pub struct BackendLoad {
 pub struct RouteDecision {
     pub backend: usize,
     pub completion_bound_ns: u64,
+    /// How many backends the scan considered before this one admitted
+    /// (1 = first choice took it).  Routing effort, surfaced as the
+    /// `serve.route_scanned` histogram by the observability layer.
+    pub scanned: usize,
 }
 
 /// Route one arrival (or re-admission).  `loads` must be in cost order
@@ -106,7 +110,11 @@ pub fn route(
         let start_bound = l.busy_until_ns.max(l.flush_deadline_ns);
         let completion_bound = start_bound.saturating_add(l.max_service_ns);
         if completion_bound <= deadline_ns {
-            return Ok(RouteDecision { backend: i, completion_bound_ns: completion_bound });
+            return Ok(RouteDecision {
+                backend: i,
+                completion_bound_ns: completion_bound,
+                scanned: i + 1,
+            });
         }
     }
     Err(if !any_up {
@@ -145,6 +153,8 @@ mod tests {
         let loads = [load(0, 0, false, 50), load(0, 0, true, 10)];
         let d = route(&loads, 0, 1_000, 8).unwrap();
         assert_eq!(d.backend, 1);
+        // the skipped down backend still counts toward scan effort
+        assert_eq!(d.scanned, 2);
     }
 
     #[test]

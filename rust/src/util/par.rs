@@ -12,11 +12,36 @@
 //! * `CAT_THREADS=<n>` caps the pool (set `CAT_THREADS=1` to force serial
 //!   execution, e.g. when profiling a single design point).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
 // OnceLock is only used for the process-wide thread budget; result slots
 // use Mutex so `par_map` needs no `Sync` bound on outputs.
+
+// Occupancy counters for the observability layer (`cat-obs-v1`
+// `par.*` counters): coarse per-call atomics, three relaxed adds per
+// fan-out — negligible next to spawning even one thread.
+static PAR_CALLS: AtomicU64 = AtomicU64::new(0);
+static PAR_ITEMS: AtomicU64 = AtomicU64::new(0);
+static PAR_WORKER_LAUNCHES: AtomicU64 = AtomicU64::new(0);
+
+/// `(calls, items, worker launches)` since process start.  The serial
+/// fallback counts as one worker, so `launches / calls` is the average
+/// occupancy a fan-out actually achieved.
+pub fn par_stats() -> (u64, u64, u64) {
+    (
+        PAR_CALLS.load(Ordering::Relaxed),
+        PAR_ITEMS.load(Ordering::Relaxed),
+        PAR_WORKER_LAUNCHES.load(Ordering::Relaxed),
+    )
+}
+
+/// Test hook: zero the occupancy counters.
+pub fn reset_par_stats() {
+    PAR_CALLS.store(0, Ordering::Relaxed);
+    PAR_ITEMS.store(0, Ordering::Relaxed);
+    PAR_WORKER_LAUNCHES.store(0, Ordering::Relaxed);
+}
 
 /// Worker-thread budget: `CAT_THREADS` if set, else the machine's
 /// available parallelism.
@@ -41,7 +66,11 @@ where
 {
     let n = items.len();
     let workers = thread_budget().min(n);
-    if n <= 1 || workers <= 1 {
+    let serial = n <= 1 || workers <= 1;
+    PAR_CALLS.fetch_add(1, Ordering::Relaxed);
+    PAR_ITEMS.fetch_add(n as u64, Ordering::Relaxed);
+    PAR_WORKER_LAUNCHES.fetch_add(if serial { 1 } else { workers as u64 }, Ordering::Relaxed);
+    if serial {
         return items.into_iter().map(f).collect();
     }
     // Items move into worker threads one at a time through per-slot
@@ -127,6 +156,18 @@ mod tests {
             }
         });
         assert_eq!(r.unwrap_err(), "bad 5");
+    }
+
+    #[test]
+    fn occupancy_counters_advance() {
+        // other tests fan out concurrently, so assert deltas are at
+        // least what this call contributes — never exact totals.
+        let (calls0, items0, workers0) = par_stats();
+        let _ = par_map((0..64).collect::<Vec<u64>>(), |x| x);
+        let (calls1, items1, workers1) = par_stats();
+        assert!(calls1 >= calls0 + 1);
+        assert!(items1 >= items0 + 64);
+        assert!(workers1 >= workers0 + 1);
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Properties of the observability layer (`--trace` / `--metrics`):
+//!
+//! * **zero perturbation** — attaching a trace sink and a metrics
+//!   registry leaves every serve/explore report byte-identical to the
+//!   plain entry points, across plain (v1), partitioned (v2/v3), and
+//!   faulted (v4) runs;
+//! * **reproducibility** — the exported Chrome trace-event document is
+//!   byte-identical across runs for a fixed seed (virtual clock, no
+//!   wall-time anywhere);
+//! * **well-formedness** — the export parses, every event carries
+//!   name/ph/pid/tid, per-track timestamps are monotone in file order,
+//!   and complete-spans have non-negative durations;
+//! * **agreement** — the `cat-obs-v1` counters restate the report's own
+//!   admission accounting, and the latency histogram covers exactly the
+//!   completed requests.
+
+use std::collections::BTreeMap;
+
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::dse::{explore, explore_obs, ExploreConfig, SpaceSpec};
+use cat::obs::Obs;
+use cat::serve::{
+    serve_fleet_on, serve_fleet_on_obs, serve_fleet_stream, serve_fleet_stream_obs, FaultEvent,
+    FaultKind, FaultPolicy, FaultSchedule, Fleet, FleetConfig,
+};
+use cat::util::json::Json;
+
+const MS: u64 = 1_000_000;
+
+/// Same compact exhaustive space as `serve_properties.rs`.
+fn compact_fleet(model: &ModelConfig, hw: &HardwareConfig, max_batch: usize) -> Fleet {
+    let mut cfg = ExploreConfig::new(model.clone(), hw.clone());
+    cfg.sample_budget = None;
+    cfg.space = SpaceSpec::compact_9pt();
+    let explored = explore(&cfg).unwrap();
+    Fleet::select(model, hw, &explored, 3, max_batch).unwrap()
+}
+
+fn trace_string(obs: &Obs) -> String {
+    obs.trace.as_ref().expect("trace side enabled").to_json().to_string()
+}
+
+/// Walk an exported trace document: parse, check the Chrome trace-event
+/// shape, and return `(event_count, names)` for content assertions.
+fn check_trace_well_formed(doc: &str, label: &str) -> (usize, Vec<String>) {
+    let j = Json::parse(doc).unwrap_or_else(|e| panic!("{label}: trace does not parse: {e}"));
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .unwrap_or_else(|| panic!("{label}: no traceEvents array"));
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut names = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(|n| n.as_str())
+            .unwrap_or_else(|| panic!("{label}: event {i} has no name"));
+        names.push(name.to_string());
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .unwrap_or_else(|| panic!("{label}: event {i} has no ph"));
+        let pid = ev.get("pid").and_then(|p| p.as_u64());
+        let tid = ev.get("tid").and_then(|t| t.as_u64());
+        assert!(pid.is_some() && tid.is_some(), "{label}: event {i} lacks pid/tid");
+        if ph == "M" {
+            assert!(ev.get("ts").is_none(), "{label}: metadata event {i} carries a ts");
+            continue;
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .unwrap_or_else(|| panic!("{label}: event {i} ({name}) has no numeric ts"));
+        let track = (pid.unwrap(), tid.unwrap());
+        if let Some(prev) = last_ts.get(&track) {
+            assert!(
+                ts >= *prev,
+                "{label}: track {track:?} goes backwards at event {i} ({name}): {ts} < {prev}"
+            );
+        }
+        last_ts.insert(track, ts);
+        if ph == "X" {
+            let dur = ev
+                .get("dur")
+                .and_then(|d| d.as_f64())
+                .unwrap_or_else(|| panic!("{label}: X event {i} ({name}) has no dur"));
+            assert!(dur >= 0.0, "{label}: negative span duration at event {i}");
+        }
+    }
+    (events.len(), names)
+}
+
+#[test]
+fn serve_reports_are_byte_identical_with_observability_attached() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 4);
+    // (label, seed, rps, slo_ms, n_requests, queue_cap) — the v1
+    // determinism scenario plus an overload one where shedding engages
+    let scenarios: &[(&str, u64, f64, f64, usize, usize)] = &[
+        ("steady", 0xFEED, 5000.0, 60.0, 250, 64),
+        ("overload", 44, 150_000.0, 40.0, 300, 12),
+    ];
+    for &(label, seed, rps, slo_ms, n, cap) in scenarios {
+        let mut cfg = FleetConfig::new(model.clone(), hw.clone());
+        cfg.max_batch = 4;
+        cfg.rps = rps;
+        cfg.slo_ms = slo_ms;
+        cfg.n_requests = n;
+        cfg.queue_cap = cap;
+        cfg.seed = seed;
+        let plain = serve_fleet_on(&cfg, &fleet).unwrap();
+        let mut obs = Obs::new(true, true);
+        let traced = serve_fleet_on_obs(&cfg, &fleet, &mut obs).unwrap();
+        assert_eq!(
+            plain.to_json().to_string(),
+            traced.to_json().to_string(),
+            "{label}: attaching observability changed the report"
+        );
+        // trace reproducibility: a second traced run exports byte-equal
+        let mut obs2 = Obs::new(true, true);
+        serve_fleet_on_obs(&cfg, &fleet, &mut obs2).unwrap();
+        assert_eq!(trace_string(&obs), trace_string(&obs2), "{label}: trace not reproducible");
+        let (count, names) = check_trace_well_formed(&trace_string(&obs), label);
+        assert!(count > 0, "{label}: empty trace");
+        for expected in ["submit", "admit", "complete", "dispatch", "batch"] {
+            assert!(
+                names.iter().any(|n| n == expected),
+                "{label}: no '{expected}' event in the trace"
+            );
+        }
+        if label == "overload" {
+            assert!(names.iter().any(|n| n == "shed"), "overload trace records no sheds");
+        }
+    }
+}
+
+#[test]
+fn metrics_agree_with_the_report() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 4);
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.max_batch = 4;
+    cfg.rps = 5000.0;
+    cfg.slo_ms = 60.0;
+    cfg.n_requests = 250;
+    cfg.seed = 0xFEED;
+    let mut obs = Obs::new(false, true);
+    let r = serve_fleet_on_obs(&cfg, &fleet, &mut obs).unwrap();
+    assert!(obs.trace.is_none(), "metrics-only run must not allocate a trace");
+    let m = obs.metrics.as_ref().unwrap();
+    assert_eq!(m.counter("serve.submitted"), r.admission.submitted as u64);
+    assert_eq!(m.counter("serve.admitted"), r.admission.admitted as u64);
+    assert_eq!(m.counter("serve.completed"), r.admission.completed as u64);
+    assert_eq!(m.counter("serve.shed_slo"), r.admission.shed_slo as u64);
+    assert_eq!(m.counter("serve.shed_capacity"), r.admission.shed_capacity as u64);
+    let lat = m.histogram("serve.latency_ns").expect("latency histogram");
+    assert_eq!(lat.count(), r.admission.completed as u64, "one latency sample per completion");
+    let depth = m.histogram("serve.queue_depth").expect("queue-depth histogram");
+    assert_eq!(depth.count(), r.admission.admitted as u64, "one depth sample per admission");
+    // the document carries the schema tag
+    assert!(m.to_json().to_string().contains("\"schema\":\"cat-obs-v1\""));
+}
+
+#[test]
+fn fault_runs_stay_byte_identical_and_faults_land_in_the_trace() {
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let fleet = compact_fleet(&model, &hw, 3);
+    assert!(fleet.len() >= 2, "need survivors, got {}", fleet.len());
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1000.0; // label only — the stream below is explicit
+    cfg.slo_ms = 80.0;
+    cfg.seed = 5;
+    let mut arrivals: Vec<u64> = (0..10).map(|i| i * 3 * MS / 2).collect();
+    arrivals.extend(std::iter::repeat(19 * MS).take(20));
+    arrivals.extend((0..20).map(|i| (25 + i) * MS));
+    arrivals.extend((0..10).map(|i| (60 + i) * MS));
+    cfg.n_requests = arrivals.len();
+    cfg.faults = Some(FaultPolicy::Schedule(FaultSchedule {
+        events: vec![FaultEvent {
+            at_ns: 19 * MS + MS / 2,
+            kind: FaultKind::Crash { backend: 0, down_ns: 30 * MS },
+        }],
+    }));
+
+    let plain = serve_fleet_stream(&cfg, &fleet, &arrivals).unwrap();
+    let mut obs = Obs::new(true, true);
+    let traced = serve_fleet_stream_obs(&cfg, &fleet, &arrivals, Some(&mut obs)).unwrap();
+    assert_eq!(
+        plain.to_json().to_string(),
+        traced.to_json().to_string(),
+        "observability changed a faulted (v4) report"
+    );
+    let doc = trace_string(&obs);
+    let (_, names) = check_trace_well_formed(&doc, "faulted");
+    for expected in ["crash", "down", "up", "retry"] {
+        assert!(names.iter().any(|n| n == expected), "no '{expected}' event in fault trace");
+    }
+    let m = obs.metrics.as_ref().unwrap();
+    assert_eq!(m.counter("serve.faults.crash"), 1);
+    // reproducible with faults too
+    let mut obs2 = Obs::new(true, false);
+    serve_fleet_stream_obs(&cfg, &fleet, &arrivals, Some(&mut obs2)).unwrap();
+    assert_eq!(doc, trace_string(&obs2), "fault trace not reproducible");
+}
+
+#[test]
+fn partitioned_runs_stay_byte_identical_under_observability() {
+    // v3 (partition + link model) and v2 (partition, --no-links)
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    for (label, links) in [("v3-linked", true), ("v2-no-links", false)] {
+        let mut cfg = FleetConfig::new(model.clone(), hw.clone());
+        cfg.rps = 1500.0;
+        cfg.slo_ms = 100.0;
+        cfg.n_requests = 200;
+        cfg.seed = 52;
+        cfg.explore_budget = Some(64);
+        cfg.partition = true;
+        if !links {
+            cfg.links = None;
+        }
+        let plain = cat::experiments::serve_fleet(&cfg).unwrap();
+        let mut obs = Obs::new(true, true);
+        let traced = cat::experiments::serve_fleet_obs(&cfg, &mut obs).unwrap();
+        assert_eq!(
+            plain.to_json().to_string(),
+            traced.to_json().to_string(),
+            "{label}: observability changed a partitioned report"
+        );
+        check_trace_well_formed(&trace_string(&obs), label);
+    }
+}
+
+#[test]
+fn explore_trace_and_metrics_are_reproducible_and_cover_the_space() {
+    let mut cfg = ExploreConfig::new(ModelConfig::bert_base(), HardwareConfig::vck5000());
+    cfg.sample_budget = None;
+    cfg.space = SpaceSpec::compact_9pt();
+    let plain = explore(&cfg).unwrap();
+    let mut obs = Obs::new(true, true);
+    let traced = explore_obs(&cfg, Some(&mut obs)).unwrap();
+    assert_eq!(
+        plain.to_json().to_string(),
+        traced.to_json().to_string(),
+        "observability changed the explore result"
+    );
+    let doc = trace_string(&obs);
+    let (count, names) = check_trace_well_formed(&doc, "explore");
+    assert!(count > 0, "empty DSE trace");
+    assert!(names.iter().any(|n| n == "customize+prune"), "no prune phase span");
+    assert!(names.iter().any(|n| n == "pareto+query"), "no pareto phase span");
+    let evals = names.iter().filter(|n| n.starts_with("eval#")).count();
+    assert_eq!(evals, traced.points.len(), "one evaluate span per surviving point");
+    let m = obs.metrics.as_ref().unwrap();
+    assert_eq!(m.counter("dse.evaluated"), traced.points.len() as u64);
+    let lat = m.histogram("dse.point_latency_ns").expect("point latency histogram");
+    assert_eq!(lat.count(), traced.points.len() as u64);
+    // byte-reproducible
+    let mut obs2 = Obs::new(true, false);
+    explore_obs(&cfg, Some(&mut obs2)).unwrap();
+    assert_eq!(doc, trace_string(&obs2), "DSE trace not reproducible");
+}

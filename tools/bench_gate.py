@@ -49,12 +49,16 @@ import sys
 #   serve_failover_reqs_per_sec (higher) — routing throughput with a
 #       scripted mid-stream crash + recovery (the fault-era path: orphan
 #       drain, survivor re-admission, recovery rejoin)
+#   serve_trace_overhead        (lower)  — traced/untraced host-time median
+#       ratio on the same routing loop; growth means the observability
+#       layer's cheap-when-on contract is eroding
 GATED_METRICS = (
     ("engine_speedup_mha_batch64", "higher"),
     ("dse_points_per_sec", "higher"),
     ("serve_router_reqs_per_sec", "higher"),
     ("serve_contention_overhead", "lower"),
     ("serve_failover_reqs_per_sec", "higher"),
+    ("serve_trace_overhead", "lower"),
 )
 
 

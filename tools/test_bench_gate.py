@@ -20,7 +20,15 @@ def doc(rows=None, derived=None):
     return d
 
 
-def measured(engine=3.0, dse=50.0, serve=200000.0, contention=2.0, failover=150000.0, smoke=True):
+def measured(
+    engine=3.0,
+    dse=50.0,
+    serve=200000.0,
+    contention=2.0,
+    failover=150000.0,
+    trace_overhead=1.2,
+    smoke=True,
+):
     return doc(
         rows={"engine/mha_scenario_batch64_fast": {"median_ns": 1.0, "iters": 2}},
         derived={
@@ -29,6 +37,7 @@ def measured(engine=3.0, dse=50.0, serve=200000.0, contention=2.0, failover=1500
             "serve_router_reqs_per_sec": serve,
             "serve_contention_overhead": contention,
             "serve_failover_reqs_per_sec": failover,
+            "serve_trace_overhead": trace_overhead,
             "smoke": smoke,
         },
     )
@@ -140,6 +149,28 @@ class BenchGateTests(unittest.TestCase):
         self.assertEqual(code, 1)
         self.assertIn("serve_failover_reqs_per_sec", out)
         self.assertIn("regression", out)
+
+    def test_trace_overhead_growth_fails_lower_is_better(self):
+        # traced/untraced host-time ratio: growth beyond tolerance means
+        # the observability layer got more expensive on the hot path
+        code, out = gate(measured(trace_overhead=2.0), measured(trace_overhead=1.2))
+        self.assertEqual(code, 1)
+        self.assertIn("serve_trace_overhead", out)
+        self.assertIn("regression", out)
+
+    def test_trace_overhead_within_tolerance_passes(self):
+        code, out = gate(measured(trace_overhead=1.6), measured(trace_overhead=1.2))
+        self.assertEqual(code, 0, out)  # 1.33x growth < 1.5x ceiling
+
+    def test_trace_overhead_missing_from_baseline_warns_and_passes(self):
+        # the PR that introduces the traced-serve bench row predates the
+        # committed baseline — the gate must not fail it
+        base = measured()
+        del base["derived"]["serve_trace_overhead"]
+        code, out = gate(measured(), base)
+        self.assertEqual(code, 0, out)
+        self.assertIn("serve_trace_overhead", out)
+        self.assertIn("missing from baseline", out)
 
     def test_mode_mismatch_warns_but_compares(self):
         code, out = gate(measured(smoke=True), measured(smoke=False))

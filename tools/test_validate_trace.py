@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/validate_trace.py (stdlib only — run directly or
+via pytest): python3 tools/test_validate_trace.py"""
+
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from validate_trace import validate_doc, validate_events, validate_file  # noqa: E402
+
+
+def ev(name="e", ph="i", ts=0, pid=1, tid=0, **extra):
+    d = {"name": name, "ph": ph, "ts": ts, "pid": pid, "tid": tid}
+    d.update(extra)
+    return d
+
+
+class ValidEvents(unittest.TestCase):
+    def test_minimal_instant_and_span_pass(self):
+        events = [
+            ev("proc", ph="M", args={"name": "serve"}),
+            ev("submit", ts=0),
+            ev("batch", ph="X", ts=10, dur=5, tid=1),
+            ev("queue", ph="C", ts=10, tid=1, args={"in_flight": 3}),
+        ]
+        del events[0]["ts"]  # metadata events may omit ts entirely
+        self.assertEqual(validate_events(events), [])
+
+    def test_nested_begin_end_pairs_balance(self):
+        events = [
+            ev("outer", ph="B", ts=0),
+            ev("inner", ph="B", ts=1),
+            ev("inner", ph="E", ts=2),
+            ev("outer", ph="E", ts=3),
+        ]
+        self.assertEqual(validate_events(events), [])
+
+    def test_cross_track_interleaving_is_fine(self):
+        # tracks are independent timelines: ts may move backwards when
+        # switching tracks as long as each track stays monotone
+        events = [ev("a", ts=100, tid=0), ev("b", ts=5, tid=1), ev("c", ts=100, tid=0)]
+        self.assertEqual(validate_events(events), [])
+
+    def test_zero_duration_span_and_fractional_ts_pass(self):
+        events = [ev("x", ph="X", ts=1.5, dur=0)]
+        self.assertEqual(validate_events(events), [])
+
+    def test_equal_timestamps_on_one_track_pass(self):
+        events = [ev("a", ts=7), ev("b", ts=7)]
+        self.assertEqual(validate_events(events), [])
+
+
+class InvalidEvents(unittest.TestCase):
+    def assert_one_error(self, events, fragment):
+        errors = validate_events(events)
+        self.assertEqual(len(errors), 1, errors)
+        self.assertIn(fragment, errors[0])
+
+    def test_end_without_begin_fails(self):
+        self.assert_one_error([ev("x", ph="E", ts=0)], "E without a matching B")
+
+    def test_unclosed_begin_fails(self):
+        self.assert_one_error([ev("x", ph="B", ts=0)], "unclosed B span")
+
+    def test_mismatched_end_name_fails(self):
+        events = [ev("outer", ph="B", ts=0), ev("wrong", ph="E", ts=1)]
+        self.assert_one_error(events, "name mismatch")
+
+    def test_backwards_timestamp_on_one_track_fails(self):
+        self.assert_one_error([ev("a", ts=10), ev("b", ts=9)], "goes backwards")
+
+    def test_negative_span_duration_fails(self):
+        self.assert_one_error([ev("x", ph="X", ts=0, dur=-1)], "negative dur")
+
+    def test_span_without_duration_fails(self):
+        self.assert_one_error([ev("x", ph="X", ts=0)], "missing/non-numeric dur")
+
+    def test_counter_with_non_numeric_args_fails(self):
+        events = [ev("q", ph="C", ts=0, args={"depth": "three"})]
+        self.assert_one_error(events, "must all be numeric")
+
+    def test_counter_without_args_fails(self):
+        self.assert_one_error([ev("q", ph="C", ts=0)], "non-empty args")
+
+    def test_missing_ts_fails_for_non_metadata(self):
+        e = ev("x")
+        del e["ts"]
+        self.assert_one_error([e], "missing/non-numeric ts")
+
+    def test_boolean_ts_is_not_numeric(self):
+        self.assert_one_error([ev("x", ts=True)], "missing/non-numeric ts")
+
+    def test_unsupported_phase_fails(self):
+        self.assert_one_error([ev("x", ph="Z", ts=0)], "unsupported phase")
+
+    def test_missing_name_fails(self):
+        e = ev(ph="i", ts=0)
+        del e["name"]
+        self.assert_one_error([e], "missing/empty name")
+
+    def test_non_integer_pid_fails(self):
+        self.assert_one_error([ev("x", ts=0, pid="serve")], "pid must be an integer")
+
+
+class DocumentShapes(unittest.TestCase):
+    def test_object_with_trace_events_and_bare_array_both_validate(self):
+        events = [ev("a", ts=0)]
+        self.assertEqual(validate_doc({"traceEvents": events}), [])
+        self.assertEqual(validate_doc(events), [])
+
+    def test_object_without_trace_events_fails(self):
+        self.assertTrue(validate_doc({"events": []}))
+
+    def test_scalar_top_level_fails(self):
+        self.assertTrue(validate_doc("not a trace"))
+
+
+class FileEntryPoint(unittest.TestCase):
+    def run_on(self, payload, as_json=True):
+        with tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, encoding="utf-8"
+        ) as f:
+            f.write(json.dumps(payload) if as_json else payload)
+            path = f.name
+        try:
+            out = io.StringIO()
+            return validate_file(path, out=out), out.getvalue()
+        finally:
+            os.unlink(path)
+
+    def test_valid_file_exits_zero(self):
+        code, out = self.run_on({"traceEvents": [ev("a", ts=0)]})
+        self.assertEqual(code, 0)
+        self.assertIn("OK", out)
+
+    def test_invalid_file_exits_one(self):
+        code, out = self.run_on({"traceEvents": [ev("a", ts=10), ev("b", ts=1)]})
+        self.assertEqual(code, 1)
+        self.assertIn("FAIL", out)
+
+    def test_unparseable_file_exits_two(self):
+        code, _ = self.run_on("{not json", as_json=False)
+        self.assertEqual(code, 2)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Well-formedness checker for Chrome trace-event JSON (stdlib only).
+
+Validates the documents ``cat serve --trace``/``cat explore --trace``
+emit — and, more generally, any trace in the subset of the Chrome
+trace-event format that Perfetto's JSON importer accepts:
+
+* top level is either ``{"traceEvents": [...]}`` or a bare event array;
+* every event is an object with a ``name`` and a supported phase ``ph``
+  (``B``/``E``/``X``/``i``/``I``/``C``/``M``);
+* every non-metadata event carries integer ``pid``/``tid`` and a
+  numeric ``ts``; metadata (``M``) events may omit ``ts``;
+* per track (``pid``, ``tid``), timestamps are monotone non-decreasing
+  in file order — the property that makes a trace render as a clean
+  timeline rather than interleaved garbage;
+* complete events (``X``) carry a numeric ``dur >= 0``;
+* begin/end pairs (``B``/``E``) balance per track, with matching names;
+* counter events (``C``) carry a non-empty all-numeric ``args`` object.
+
+Usage:
+    python3 tools/validate_trace.py trace.json [more.json ...]
+
+Exit code 0 = every file valid, 1 = at least one violation, 2 = a file
+could not be read or parsed at all.
+"""
+
+import json
+import sys
+
+KNOWN_PHASES = frozenset("BEXiICM")
+
+
+def _is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_events(events):
+    """Return a list of violation strings (empty = well-formed)."""
+    errors = []
+    last_ts = {}
+    open_spans = {}
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing/empty name")
+            name = "?"
+        where = f"event {i} ({name!r})"
+        ph = ev.get("ph")
+        if not isinstance(ph, str) or ph not in KNOWN_PHASES:
+            errors.append(f"{where}: unsupported phase {ph!r}")
+            continue
+        pid, tid = ev.get("pid"), ev.get("tid")
+        if not isinstance(pid, int) or isinstance(pid, bool):
+            errors.append(f"{where}: pid must be an integer, got {pid!r}")
+            continue
+        if not isinstance(tid, int) or isinstance(tid, bool):
+            errors.append(f"{where}: tid must be an integer, got {tid!r}")
+            continue
+        if ph == "M":
+            continue  # metadata names tracks; no ts required
+        ts = ev.get("ts")
+        if not _is_num(ts):
+            errors.append(f"{where}: missing/non-numeric ts {ts!r}")
+            continue
+        track = (pid, tid)
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            errors.append(
+                f"{where}: ts {ts} goes backwards on track pid={pid} tid={tid} "
+                f"(previous {prev})"
+            )
+        last_ts[track] = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not _is_num(dur):
+                errors.append(f"{where}: X event missing/non-numeric dur {dur!r}")
+            elif dur < 0:
+                errors.append(f"{where}: negative dur {dur}")
+        elif ph == "B":
+            open_spans.setdefault(track, []).append(name)
+        elif ph == "E":
+            stack = open_spans.get(track) or []
+            if not stack:
+                errors.append(f"{where}: E without a matching B on pid={pid} tid={tid}")
+            else:
+                opened = stack.pop()
+                if opened != name:
+                    errors.append(
+                        f"{where}: E name mismatch — closes {name!r} but "
+                        f"{opened!r} is open"
+                    )
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"{where}: counter needs a non-empty args object")
+            elif not all(_is_num(v) for v in args.values()):
+                errors.append(f"{where}: counter args must all be numeric")
+    for (pid, tid), stack in open_spans.items():
+        if stack:
+            errors.append(
+                f"unclosed B span(s) {stack!r} on track pid={pid} tid={tid}"
+            )
+    return errors
+
+
+def validate_doc(doc):
+    """Validate a parsed document (object-with-traceEvents or bare array)."""
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+        if not isinstance(events, list):
+            return ["top-level object has no traceEvents array"]
+    elif isinstance(doc, list):
+        events = doc
+    else:
+        return ["top level must be an object or an array"]
+    return validate_events(events)
+
+
+def validate_file(path, out=sys.stdout):
+    """Validate one file; returns the process exit code contribution."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"validate_trace: cannot read {path!r}: {e}", file=sys.stderr)
+        return 2
+    errors = validate_doc(doc)
+    if errors:
+        for e in errors:
+            print(f"validate_trace: {path}: {e}", file=out)
+        print(f"validate_trace: FAIL — {path}: {len(errors)} violation(s)", file=out)
+        return 1
+    n = len(doc.get("traceEvents", doc) if isinstance(doc, dict) else doc)
+    print(f"validate_trace: OK — {path}: {n} event(s)", file=out)
+    return 0
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print(__doc__, file=sys.stderr)
+        return 2
+    return max(validate_file(p) for p in argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
