@@ -244,6 +244,60 @@ fn main() {
         cont_ledger.members.iter().map(|m| m.stretch).fold(0.0f64, f64::max),
     );
 
+    // --- fixed-point contended row: the identical oversubscribed
+    //     partition renegotiated to the clamped fixed point
+    //     (`--links-fixed-point`), so slices serve on the relaxed
+    //     throttles.  The derived `serve_contention_pessimism`
+    //     (single-pass contended p50 / fixed-point contended p50,
+    //     virtual clock, >= 1 by construction) gates how much modeled
+    //     latency the conservative bound gives away ---
+    let fp_fleet = cat::serve::Fleet::select_partitioned_in(
+        &model,
+        &hw,
+        &explored,
+        2,
+        serve_cfg.max_batch,
+        Some(serve_cfg.slo_ms),
+        Some(&tight),
+        cat::serve::NegotiationMode::FixedPoint,
+    )
+    .unwrap();
+    let fp_ledger = fp_fleet
+        .budget
+        .as_ref()
+        .and_then(|b| b.links.as_ref())
+        .expect("link model was enabled");
+    assert!(fp_ledger.throttled(), "fixed point must stay throttled on the bench pools");
+    assert!(
+        fp_ledger
+            .members
+            .iter()
+            .zip(&cont_ledger.members)
+            .all(|(f, s)| f.stretch <= s.stretch + 1e-12),
+        "fixed-point stretch must never exceed the single-pass bound"
+    );
+    let mut fp_cfg = serve_cfg.clone();
+    fp_cfg.links_fixed_point = true;
+    let mut fp_p50 = std::time::Duration::ZERO;
+    let fp_med = run_row("serve/fixedpoint_contended_route", 2, 20, &mut || {
+        let r = cat::serve::serve_fleet_on(&fp_cfg, &fp_fleet).unwrap();
+        fp_p50 = r.fleet_stats.percentile(0.50);
+        black_box(r);
+    })
+    .median_ns();
+    let fp_reqs_per_sec = fp_cfg.n_requests as f64 / (fp_med / 1e9).max(1e-12);
+    let serve_contention_pessimism = if fp_p50.as_nanos() > 0 {
+        cont_p50.as_secs_f64() / fp_p50.as_secs_f64()
+    } else {
+        1.0
+    };
+    println!(
+        "  serve (fixed point): ledger pessimism {:.3}x, modeled p50 {:.3}x vs \
+         single-pass contended ({fp_reqs_per_sec:.0} req/s driver throughput)",
+        fp_ledger.pessimism(),
+        serve_contention_pessimism,
+    );
+
     // --- failover row: the same 2-backend fleet, but the cheapest
     //     member crashes 50 ms into the stream and recovers 100 ms
     //     later (virtual clock — inside the arrival span in both smoke
@@ -356,6 +410,14 @@ fn main() {
         derived.insert(
             "serve_contended_reqs_per_sec".to_string(),
             Json::Num(cont_reqs_per_sec.round()),
+        );
+        derived.insert(
+            "serve_contention_pessimism".to_string(),
+            Json::Num((serve_contention_pessimism * 1000.0).round() / 1000.0),
+        );
+        derived.insert(
+            "serve_fixedpoint_reqs_per_sec".to_string(),
+            Json::Num(fp_reqs_per_sec.round()),
         );
         derived.insert(
             "serve_failover_reqs_per_sec".to_string(),

@@ -28,6 +28,16 @@ impl SharedLinkModel {
         SharedLinkModel { dram_gbps: hw.dram_bw_gbps, pcie_gbps: hw.pcie_bw_gbps }
     }
 
+    /// True when both pools are usable widths: positive and finite.
+    /// `Fleet::select_partitioned` rejects anything else up front —
+    /// a zero-width pool negotiates to an infinite stretch, which the
+    /// ledger reports loudly (null oversubscription/stretch in JSON)
+    /// but the deploy path refuses to serve on.
+    pub fn is_positive_finite(&self) -> bool {
+        let ok = |v: f64| v.is_finite() && v > 0.0;
+        ok(self.dram_gbps) && ok(self.pcie_gbps)
+    }
+
     /// The pools after a degradation event: each scaled by a factor in
     /// `(0, 1]` (fault injection narrows links, it never widens them —
     /// the same direction `mem_throttle` is validated to).

@@ -77,7 +77,7 @@ subcommands:
   serve --rps <r> --slo-ms <x> [--model <m>] [--hw <h>] [--backends K]
         [--requests N] [--batch B] [--queue-cap Q] [--budget K]
         [--seed S] [--partition] [--dram-gbps G] [--pcie-gbps G]
-        [--no-links]
+        [--no-links] [--links-fixed-point]
         [--faults <spec.json> | --mtbf-s <s> --mttr-s <s>]
         [--max-retries R] [--trace <f>]
         [--metrics <f>] [--json]            SLO-aware fleet serving across
@@ -95,6 +95,14 @@ subcommands:
                                             pools, --no-links disables the
                                             contention model (schema
                                             cat-serve-v2);
+                                            --links-fixed-point relaxes
+                                            the throttle to the proved
+                                            fixed point of demand->grant->
+                                            stretch (default stays the
+                                            conservative single pass); the
+                                            links block then reports both
+                                            bounds per member plus the
+                                            board-level pessimism ratio;
                                             --faults injects a scripted
                                             crash/stall/slowdown/
                                             link_degrade schedule,
@@ -453,17 +461,27 @@ fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
     }
     cfg.partition = args.flag("partition");
     let link_flags = args.flag("no-links")
+        || args.flag("links-fixed-point")
         || args.opt("dram-gbps").is_some()
         || args.opt("pcie-gbps").is_some();
     if link_flags && !cfg.partition {
         return Err(anyhow!(
-            "--dram-gbps/--pcie-gbps/--no-links require --partition: the shared link pools \
-             only exist when backends co-reside on one board (a one-board-per-member fleet \
-             owns its links outright)"
+            "--dram-gbps/--pcie-gbps/--no-links/--links-fixed-point require --partition: \
+             the shared link pools only exist when backends co-reside on one board (a \
+             one-board-per-member fleet owns its links outright)"
         ));
     }
     if args.flag("no-links") {
         cfg.links = None;
+    }
+    if args.flag("links-fixed-point") {
+        if cfg.links.is_none() {
+            return Err(anyhow!(
+                "--links-fixed-point conflicts with --no-links (no contention model to \
+                 refine)"
+            ));
+        }
+        cfg.links_fixed_point = true;
     }
     let pool_override = |args: &cli::Args, flag: &str| -> Result<Option<f64>> {
         match args.opt(flag) {

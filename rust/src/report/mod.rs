@@ -376,6 +376,24 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
                     factors.join(", ")
                 ));
             }
+            // dual-bound lines only in fixed-point mode, so the
+            // default report text stays byte-identical
+            if l.mode == crate::serve::NegotiationMode::FixedPoint {
+                let bounds: Vec<String> = l
+                    .members
+                    .iter()
+                    .enumerate()
+                    .map(|(i, m)| {
+                        format!("BE{i} x{:.2}->x{:.2}", m.stretch_single_pass, m.stretch)
+                    })
+                    .collect();
+                out.push_str(&format!(
+                    "  fixed-point bounds (single-pass -> fixed-point): {}; \
+                     pessimism x{:.3}\n",
+                    bounds.join(", "),
+                    l.pessimism(),
+                ));
+            }
         }
     }
     if let Some(f) = &r.faults {

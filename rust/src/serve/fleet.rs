@@ -12,7 +12,7 @@
 
 use std::collections::BTreeMap;
 
-use super::links::{demand_at, negotiate, LinkLedger};
+use super::links::{demand_at, negotiate_in, LinkLedger, NegotiationMode};
 use crate::arch::{AcceleratorPlan, PlResources};
 use crate::config::{HardwareConfig, ModelConfig, SharedLinkModel};
 use crate::dse::{
@@ -322,9 +322,36 @@ impl Fleet {
         slo_ms: Option<f64>,
         links: Option<&SharedLinkModel>,
     ) -> Result<Fleet> {
+        Self::select_partitioned_in(
+            model,
+            board,
+            explored,
+            k,
+            max_batch,
+            slo_ms,
+            links,
+            NegotiationMode::SinglePass,
+        )
+    }
+
+    /// [`Fleet::select_partitioned`] with an explicit [`NegotiationMode`].
+    /// In fixed-point mode each member's slice carries the *relaxed*
+    /// share (`mem_throttle = 1 / stretch_fixed_point`), so the
+    /// re-simulated contended profile — and with it the router's
+    /// admission bound — sheds the single-pass pessimism.
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_partitioned_in(
+        model: &ModelConfig,
+        board: &HardwareConfig,
+        explored: &ExploreResult,
+        k: usize,
+        max_batch: usize,
+        slo_ms: Option<f64>,
+        links: Option<&SharedLinkModel>,
+        mode: NegotiationMode,
+    ) -> Result<Fleet> {
         if let Some(pools) = links {
-            let ok = |v: f64| v.is_finite() && v > 0.0;
-            if !ok(pools.dram_gbps) || !ok(pools.pcie_gbps) {
+            if !pools.is_positive_finite() {
                 return Err(anyhow!(
                     "shared link pools must be positive and finite, got DRAM {} GB/s / \
                      PCIe {} GB/s (disable the link model with links=None instead of \
@@ -364,7 +391,7 @@ impl Fleet {
                     let be = Backend::deploy(model, board, pts[pi], max_batch)?;
                     demands.push(demand_at(model, be.service_ns(be.max_batch()), be.max_batch()));
                 }
-                Some(negotiate(pools, &demands))
+                Some(negotiate_in(pools, &demands, mode))
             }
         };
         let budget = FleetBudget {

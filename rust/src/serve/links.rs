@@ -19,17 +19,91 @@
 //!    **re-simulated** through the same DES the explorer used — the
 //!    router's admission bounds then price contention automatically.
 //!
-//! The model is a single-pass proportional split, deliberately not a
-//! fixed point (throttled members demand less, which would relax the
-//! split; charging the un-relaxed share keeps the bound conservative and
-//! the arithmetic deterministic).  A 1-member partition is bit-identical
-//! to the uncontended deployment by construction: its solo rate *is* its
-//! baseline, so its stretch is exactly 1.
+//! Two negotiation modes share that machinery ([`NegotiationMode`]):
+//!
+//! * **Single-pass** (the default, PR 5 semantics): grants are computed
+//!   from *uncontended* demand.  A member stretched by one pool keeps
+//!   being charged for appetite it can no longer offer on the other
+//!   pool, so the bound is conservative — never an under-throttle, but
+//!   systematically pessimistic whenever the two pools couple.
+//! * **Fixed point** (`--links-fixed-point`): iterate `demand → grant →
+//!   stretch → re-derived demand`.  A throttled member's bytes-per-ns
+//!   appetite shrinks by exactly its stretch, so the *offered* load on
+//!   every pool is monotone non-increasing in the stretch vector; the
+//!   freed bandwidth relaxes the split for the members that stay
+//!   backlogged on that pool.
+//!
+//! # Convergence proof (fixed-point mode)
+//!
+//! Let `d_i^p` be member `i`'s demand on pool `p`, `s_i^p` its
+//! single-pass per-pool stretch, and `S_i = max_p s_i^p` its overall
+//! stretch.  One relaxation sweep re-derives member `i`'s pool-`p`
+//! stretch from the split of *offered* loads: contender `j` offers
+//! `d_j^p · min(1, s_j^p / S_j)` — its appetite shrunk by exactly the
+//! stretch *in excess* of what pool `p` itself imposes (crediting a
+//! pool for its own throttle would spiral into an under-throttle;
+//! crediting only cross-pool excess returns exactly the bandwidth a
+//! stretched member physically cannot offer).  Member `i`'s own
+//! entitlement stays at its full appetite (its bytes still have to
+//! move), and the new overall stretch is clamped:
+//! `S_i ← min(S_i, max(1, max_p s'_i^p))`.
+//!
+//! The sweep map is antitone: lowering any `S_j` can only *raise* the
+//! offered totals, hence raise every re-derived stretch.  Therefore the
+//! clamped sequence is monotone non-increasing and bounded below by 1,
+//! so it converges; concretely, sweep 1 applies the full relaxation
+//! (credits computed at the single-pass vector) and sweep 2's
+//! re-derived stretches can only come back *up* against the clamp, so
+//! the iteration is stationary after exactly **two sweeps**.  The hard
+//! cap [`FIXED_POINT_MAX_SWEEPS`] and the [`FIXED_POINT_EPS`]
+//! convergence assertion guard that invariant rather than the
+//! arithmetic.  By the clamp, `1 ≤ stretch_fixed_point ≤
+//! stretch_single_pass` member-wise: the two modes bracket the true
+//! arbitrated rate (fixed point from the optimistic side, single pass
+//! from the conservative side — `rust/tests/link_calibration.rs`
+//! replays a beat-level arbitration trace to check the bracket).
+//! `granted` stays the single-pass proportional split in both modes —
+//! it is a *feasible allocation* (Σ granted ≤ pool); the fixed point
+//! relaxes the time-stretch bound, not the allocation.
+//!
+//! A 1-member partition is bit-identical to the uncontended deployment
+//! by construction in both modes: its solo rate *is* its baseline, so
+//! its stretch is exactly 1 and there is no contender to relax.
 
 use std::collections::BTreeMap;
 
 use crate::config::{ModelConfig, SharedLinkModel};
 use crate::util::json::Json;
+
+/// How stretches are derived from an oversubscribed split: the
+/// conservative single pass (default) or the relaxed fixed point
+/// (`--links-fixed-point`).  See the module docs for the bracket the
+/// two modes form around the true arbitrated rate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NegotiationMode {
+    SinglePass,
+    FixedPoint,
+}
+
+impl NegotiationMode {
+    /// Stable wire name, used by the renegotiation trace args and the
+    /// fixed-point ledger JSON.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            NegotiationMode::SinglePass => "single_pass",
+            NegotiationMode::FixedPoint => "fixed_point",
+        }
+    }
+}
+
+/// Hard cap on fixed-point relaxation sweeps.  The module-doc proof
+/// shows the clamped iteration is stationary after two sweeps; the cap
+/// exists so a violated invariant fails loudly instead of spinning.
+pub const FIXED_POINT_MAX_SWEEPS: usize = 32;
+
+/// Convergence epsilon for the fixed-point iteration: a sweep that
+/// moves no member's stretch by more than this is stationary.
+pub const FIXED_POINT_EPS: f64 = 1e-9;
 
 /// One member's bandwidth appetite on the two shared pools (GB/s ==
 /// bytes per virtual ns).
@@ -44,11 +118,17 @@ pub struct LinkDemand {
 pub struct MemberLink {
     /// Uncontended appetite.
     pub demand: LinkDemand,
-    /// Proportional share actually granted.
+    /// Proportional share actually granted (always the single-pass
+    /// split — a feasible allocation in both modes).
     pub granted: LinkDemand,
     /// Service-time stretch = solo-link rate / granted rate, ≥ 1.  The
-    /// member's slice carries `mem_throttle = 1/stretch`.
+    /// member's slice carries `mem_throttle = 1/stretch`.  In
+    /// fixed-point mode this is the relaxed bound.
     pub stretch: f64,
+    /// The conservative single-pass bound, kept alongside whatever
+    /// `stretch` carries so the report can surface both ends of the
+    /// bracket.  Equal to `stretch` in single-pass mode.
+    pub stretch_single_pass: f64,
 }
 
 /// The board-level link ledger: pools, per-member grants, and the
@@ -58,6 +138,10 @@ pub struct LinkLedger {
     pub pools: SharedLinkModel,
     /// `members[i]` belongs to fleet position `i` (cost order).
     pub members: Vec<MemberLink>,
+    /// Which negotiation derived the members' `stretch`.  Gates the
+    /// dual-bound fields in [`LinkLedger::to_json`] so default output
+    /// stays byte-identical to `cat-serve-v3`/`v4`.
+    pub mode: NegotiationMode,
 }
 
 impl LinkLedger {
@@ -82,6 +166,26 @@ impl LinkLedger {
         self.members.iter().any(|m| m.stretch > 1.0)
     }
 
+    /// Board-level pessimism of the single-pass bound: the worst
+    /// member-wise ratio `stretch_single_pass / stretch_fixed_point`,
+    /// ≥ 1 by the clamp.  1.0 exactly when the two bounds coincide
+    /// (no cross-pool coupling to relax) or the partition is empty;
+    /// members whose bounds are both infinite (a demanded zero-width
+    /// pool) contribute the neutral 1.0 — the breakage is already loud
+    /// in their stretch.
+    pub fn pessimism(&self) -> f64 {
+        self.members
+            .iter()
+            .map(|m| {
+                if m.stretch_single_pass == m.stretch {
+                    1.0
+                } else {
+                    m.stretch_single_pass / m.stretch
+                }
+            })
+            .fold(1.0, f64::max)
+    }
+
     /// The `board.links` block: per-pool demanded vs granted bandwidth
     /// and the throttle factor per member.
     pub fn to_json(&self) -> Json {
@@ -92,9 +196,18 @@ impl LinkLedger {
             p.insert("pool_gbps".into(), Json::Num(total));
             p.insert("demanded_gbps".into(), Json::Num(dem));
             p.insert("granted_gbps".into(), Json::Num(grant));
+            // a zero-width pool with positive demand is infinitely
+            // oversubscribed — report that (the serializer renders
+            // non-finite as null), never a healthy-looking 0.0
             p.insert(
                 "oversubscription".into(),
-                Json::Num(if total > 0.0 { dem / total } else { 0.0 }),
+                Json::Num(if total > 0.0 {
+                    dem / total
+                } else if dem > 0.0 {
+                    f64::INFINITY
+                } else {
+                    0.0
+                }),
             );
             Json::Obj(p)
         };
@@ -108,6 +221,11 @@ impl LinkLedger {
             pool(self.pools.pcie_gbps, demanded.pcie_gbps, granted.pcie_gbps),
         );
         m.insert("throttled".into(), Json::Bool(self.throttled()));
+        let fixed_point = self.mode == NegotiationMode::FixedPoint;
+        if fixed_point {
+            m.insert("mode".into(), Json::Str(self.mode.wire_name().into()));
+            m.insert("pessimism".into(), Json::Num(self.pessimism()));
+        }
         m.insert(
             "members".into(),
             Json::Arr(
@@ -123,6 +241,13 @@ impl LinkLedger {
                         mm.insert("pcie_granted_gbps".into(), Json::Num(ml.granted.pcie_gbps));
                         mm.insert("stretch".into(), Json::Num(ml.stretch));
                         mm.insert("throttle".into(), Json::Num(1.0 / ml.stretch));
+                        if fixed_point {
+                            mm.insert(
+                                "stretch_single_pass".into(),
+                                Json::Num(ml.stretch_single_pass),
+                            );
+                            mm.insert("stretch_fixed_point".into(), Json::Num(ml.stretch));
+                        }
                         Json::Obj(mm)
                     })
                     .collect(),
@@ -190,7 +315,9 @@ fn pool_share(demand: f64, total_demand: f64, pool: f64) -> (f64, f64) {
 
 /// Negotiate every member's grant against the shared pools.  The
 /// member's overall stretch is the worst across pools — its slice is
-/// throttled to the tightest link it transits.
+/// throttled to the tightest link it transits.  Single-pass mode; the
+/// fixed-point refinement is [`negotiate_fixed_point`], and
+/// [`negotiate_in`] dispatches on [`NegotiationMode`].
 pub fn negotiate(pools: &SharedLinkModel, demands: &[LinkDemand]) -> LinkLedger {
     let tot_dram: f64 = demands.iter().map(|d| d.dram_gbps).sum();
     let tot_pcie: f64 = demands.iter().map(|d| d.pcie_gbps).sum();
@@ -199,32 +326,120 @@ pub fn negotiate(pools: &SharedLinkModel, demands: &[LinkDemand]) -> LinkLedger 
         .map(|d| {
             let (g_dram, s_dram) = pool_share(d.dram_gbps, tot_dram, pools.dram_gbps);
             let (g_pcie, s_pcie) = pool_share(d.pcie_gbps, tot_pcie, pools.pcie_gbps);
+            let stretch = s_dram.max(s_pcie);
             MemberLink {
                 demand: *d,
                 granted: LinkDemand { dram_gbps: g_dram, pcie_gbps: g_pcie },
-                stretch: s_dram.max(s_pcie),
+                stretch,
+                stretch_single_pass: stretch,
             }
         })
         .collect();
-    LinkLedger { pools: *pools, members }
+    LinkLedger { pools: *pools, members, mode: NegotiationMode::SinglePass }
 }
 
-/// [`negotiate`] over the `up` subset of a partition: down members stop
-/// demanding bandwidth, so the survivors split the pools among
+/// [`negotiate`] or [`negotiate_fixed_point`] by mode.
+pub fn negotiate_in(
+    pools: &SharedLinkModel,
+    demands: &[LinkDemand],
+    mode: NegotiationMode,
+) -> LinkLedger {
+    match mode {
+        NegotiationMode::SinglePass => negotiate(pools, demands),
+        NegotiationMode::FixedPoint => negotiate_fixed_point(pools, demands),
+    }
+}
+
+/// The fixed-point refinement of [`negotiate`]: iterate `demand →
+/// grant → stretch → re-derived demand` with the clamped relaxation
+/// sweep proved convergent in the module docs.  Grants stay the
+/// single-pass split (a feasible allocation); only the stretch bound
+/// relaxes, and `1 ≤ stretch ≤ stretch_single_pass` member-wise.
+pub fn negotiate_fixed_point(pools: &SharedLinkModel, demands: &[LinkDemand]) -> LinkLedger {
+    let mut ledger = negotiate(pools, demands);
+    let n = demands.len();
+    let tot_dram: f64 = demands.iter().map(|d| d.dram_gbps).sum();
+    let tot_pcie: f64 = demands.iter().map(|d| d.pcie_gbps).sum();
+    // single-pass per-pool stretches: the credits are frozen at this
+    // vector (see the proof — crediting a pool for its own throttle
+    // would spiral into an under-throttle)
+    let per_pool: Vec<(f64, f64)> = demands
+        .iter()
+        .map(|d| {
+            (
+                pool_share(d.dram_gbps, tot_dram, pools.dram_gbps).1,
+                pool_share(d.pcie_gbps, tot_pcie, pools.pcie_gbps).1,
+            )
+        })
+        .collect();
+    let mut overall: Vec<f64> = ledger.members.iter().map(|m| m.stretch).collect();
+    // contender j's offered load on a pool: its appetite shrunk by
+    // exactly the stretch in excess of what the pool itself imposes
+    let offered = |d: f64, s_pool: f64, s_all: f64| {
+        if s_pool.is_infinite() && s_all.is_infinite() {
+            d
+        } else {
+            d * (s_pool / s_all).min(1.0)
+        }
+    };
+    let mut sweeps = 0usize;
+    loop {
+        sweeps += 1;
+        assert!(
+            sweeps <= FIXED_POINT_MAX_SWEEPS,
+            "fixed-point negotiation failed to converge in {FIXED_POINT_MAX_SWEEPS} sweeps"
+        );
+        let mut next = overall.clone();
+        let mut changed = false;
+        for i in 0..n {
+            let (mut rel_dram, mut rel_pcie) = (demands[i].dram_gbps, demands[i].pcie_gbps);
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                rel_dram += offered(demands[j].dram_gbps, per_pool[j].0, overall[j]);
+                rel_pcie += offered(demands[j].pcie_gbps, per_pool[j].1, overall[j]);
+            }
+            let s_dram = pool_share(demands[i].dram_gbps, rel_dram, pools.dram_gbps).1;
+            let s_pcie = pool_share(demands[i].pcie_gbps, rel_pcie, pools.pcie_gbps).1;
+            let cand = s_dram.max(s_pcie).max(1.0).min(overall[i]);
+            if overall[i] - cand > FIXED_POINT_EPS {
+                changed = true;
+            }
+            next[i] = cand;
+        }
+        overall = next;
+        if !changed {
+            break;
+        }
+    }
+    for (m, s) in ledger.members.iter_mut().zip(overall) {
+        m.stretch = s;
+    }
+    ledger.mode = NegotiationMode::FixedPoint;
+    ledger
+}
+
+/// [`negotiate_in`] over the `up` subset of a partition: down members
+/// stop demanding bandwidth, so the survivors split the pools among
 /// themselves — the failover path's graceful-degradation step.  Returns
 /// one entry per original position (`None` for down members), so fleet
 /// indices stay stable across the fault window.  With every member up
-/// this is exactly [`negotiate`]; with one survivor it degenerates to
-/// the PR 4 single-member case (stretch 1 whatever its appetite).
+/// this is exactly [`negotiate_in`]; with one survivor it degenerates
+/// to the PR 4 single-member case (stretch 1 whatever its appetite).
+/// Every down/up renegotiation must pass the same mode the fleet was
+/// selected under, so the fault path relaxes (or conserves) exactly
+/// like the initial deployment did.
 pub fn negotiate_masked(
     pools: &SharedLinkModel,
     demands: &[LinkDemand],
     up: &[bool],
+    mode: NegotiationMode,
 ) -> Vec<Option<MemberLink>> {
     assert_eq!(demands.len(), up.len());
     let live: Vec<LinkDemand> =
         demands.iter().zip(up).filter(|(_, u)| **u).map(|(d, _)| *d).collect();
-    let ledger = negotiate(pools, &live);
+    let ledger = negotiate_in(pools, &live, mode);
     let mut granted = ledger.members.into_iter();
     up.iter().map(|u| if *u { granted.next() } else { None }).collect()
 }
@@ -331,13 +546,13 @@ mod tests {
         // uncontended — stretch drops to exactly 1
         let demands = [d(100.0, 0.0), d(50.0, 0.0)];
         let p = pools(100.0, 1e9);
-        let both = negotiate_masked(&p, &demands, &[true, true]);
+        let both = negotiate_masked(&p, &demands, &[true, true], NegotiationMode::SinglePass);
         assert!(both.iter().all(Option::is_some));
         assert!((both[1].unwrap().stretch - 1.5).abs() < 1e-9);
         // all-up masked == plain negotiate
         let plain = negotiate(&p, &demands);
         assert_eq!(both[0].unwrap(), plain.members[0]);
-        let after = negotiate_masked(&p, &demands, &[false, true]);
+        let after = negotiate_masked(&p, &demands, &[false, true], NegotiationMode::SinglePass);
         assert!(after[0].is_none(), "down member gets no grant");
         let survivor = after[1].unwrap();
         assert_eq!(survivor.stretch, 1.0);
@@ -350,10 +565,149 @@ mod tests {
     fn masked_negotiation_single_survivor_matches_single_member_degeneracy() {
         // survivor demand above the pool: solo rate is its baseline, so
         // masked negotiation must preserve the PR 4 lone-member rule
-        let after = negotiate_masked(&pools(100.0, 16.0), &[d(1.0, 1.0), d(250.0, 40.0)], &[
-            false, true,
-        ]);
+        let after = negotiate_masked(
+            &pools(100.0, 16.0),
+            &[d(1.0, 1.0), d(250.0, 40.0)],
+            &[false, true],
+            NegotiationMode::SinglePass,
+        );
         assert_eq!(after[1].unwrap().stretch, 1.0);
+    }
+
+    #[test]
+    fn fixed_point_never_exceeds_single_pass_and_never_dips_below_one() {
+        let scenarios: [(SharedLinkModel, Vec<LinkDemand>); 4] = [
+            (pools(100.0, 4.0), vec![d(40.0, 6.0), d(80.0, 1.0)]),
+            (pools(100.0, 8.0), vec![d(80.0, 6.0), d(80.0, 10.0)]),
+            (pools(100.0, 1e9), vec![d(100.0, 0.0), d(50.0, 0.0)]),
+            (pools(50.0, 2.0), vec![d(30.0, 1.5), d(30.0, 0.2), d(15.0, 0.9)]),
+        ];
+        for (p, ds) in &scenarios {
+            let sp = negotiate(p, ds);
+            let fp = negotiate_fixed_point(p, ds);
+            assert_eq!(fp.mode, NegotiationMode::FixedPoint);
+            for (a, b) in fp.members.iter().zip(&sp.members) {
+                assert!(a.stretch >= 1.0, "fp stretch {} < 1", a.stretch);
+                assert!(a.stretch <= b.stretch + 1e-12, "fp {} > sp {}", a.stretch, b.stretch);
+                assert_eq!(a.stretch_single_pass, b.stretch, "sp bound must be carried");
+                assert_eq!(a.granted, b.granted, "grants stay the single-pass split");
+            }
+            assert!(fp.pessimism() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn fixed_point_strictly_relaxes_a_cross_pool_coupled_partition() {
+        // A is PCIe-bound (stretch 1.75 > its DRAM share's 1.2), so its
+        // DRAM appetite shrinks by the excess and B's DRAM split
+        // relaxes strictly; symmetrically B's PCIe excess relaxes A
+        let p = pools(100.0, 4.0);
+        let ds = [d(40.0, 6.0), d(80.0, 1.0)];
+        let sp = negotiate(&p, &ds);
+        let fp = negotiate_fixed_point(&p, &ds);
+        assert!(sp.throttled() && fp.throttled());
+        for (a, b) in fp.members.iter().zip(&sp.members) {
+            assert!(
+                a.stretch < b.stretch - 1e-6,
+                "expected strict relaxation, fp {} vs sp {}",
+                a.stretch,
+                b.stretch
+            );
+        }
+        assert!(fp.pessimism() > 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn fixed_point_matches_single_pass_without_cross_pool_coupling() {
+        // pure single-pool contention: every member's binding pool is
+        // its own, no excess stretch to credit, the bounds coincide
+        let p = pools(100.0, 1e9);
+        let ds = [d(80.0, 0.0), d(80.0, 0.0)];
+        let sp = negotiate(&p, &ds);
+        let fp = negotiate_fixed_point(&p, &ds);
+        for (a, b) in fp.members.iter().zip(&sp.members) {
+            assert!((a.stretch - b.stretch).abs() < 1e-12);
+        }
+        assert!((fp.pessimism() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_point_single_member_stays_stretch_one() {
+        let fp = negotiate_fixed_point(&pools(100.0, 16.0), &[d(250.0, 40.0)]);
+        assert_eq!(fp.members[0].stretch, 1.0);
+        assert_eq!(fp.members[0].stretch_single_pass, 1.0);
+        assert!((fp.pessimism() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_point_zero_width_pool_stays_loud() {
+        let fp = negotiate_fixed_point(&pools(0.0, 16.0), &[d(10.0, 1.0), d(10.0, 1.0)]);
+        for m in &fp.members {
+            assert!(m.stretch.is_infinite());
+            assert!(m.stretch_single_pass.is_infinite());
+        }
+        assert!((fp.pessimism() - 1.0).abs() < 1e-12, "inf/inf bounds are neutral");
+    }
+
+    #[test]
+    fn masked_fixed_point_uses_the_same_relaxation() {
+        let p = pools(100.0, 4.0);
+        let ds = [d(40.0, 6.0), d(80.0, 1.0)];
+        let all_up = negotiate_masked(&p, &ds, &[true, true], NegotiationMode::FixedPoint);
+        let plain = negotiate_fixed_point(&p, &ds);
+        assert_eq!(all_up[0].unwrap(), plain.members[0]);
+        assert_eq!(all_up[1].unwrap(), plain.members[1]);
+        // a lone survivor owns the links in either mode
+        let after = negotiate_masked(&p, &ds, &[false, true], NegotiationMode::FixedPoint);
+        assert!(after[0].is_none());
+        assert_eq!(after[1].unwrap().stretch, 1.0);
+    }
+
+    #[test]
+    fn zero_width_pool_oversubscription_reports_the_true_signal() {
+        // the bug: pool 0 with positive demand used to serialize
+        // oversubscription 0.0 — healthy-looking JSON around members
+        // carrying infinite stretch
+        let l = negotiate(&pools(0.0, 16.0), &[d(10.0, 1.0), d(10.0, 1.0)]);
+        let j = l.to_json();
+        let over = j.get("dram").unwrap().get("oversubscription").unwrap();
+        assert_eq!(over.as_f64(), Some(f64::INFINITY));
+        let s = j.to_string();
+        assert!(
+            s.contains("\"oversubscription\":null"),
+            "non-finite oversubscription must serialize as null: {s}"
+        );
+        assert!(!s.contains("inf"), "bare inf is invalid JSON: {s}");
+        // idle zero-width pool (no demand) is genuinely 0.0
+        let idle = negotiate(&pools(0.0, 16.0), &[d(0.0, 1.0)]);
+        let j = idle.to_json();
+        assert_eq!(
+            j.get("dram").unwrap().get("oversubscription").unwrap().as_f64(),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn fixed_point_ledger_json_carries_both_bounds_and_pessimism() {
+        let fp = negotiate_fixed_point(&pools(100.0, 4.0), &[d(40.0, 6.0), d(80.0, 1.0)]);
+        let j = fp.to_json();
+        assert_eq!(j.get("mode").unwrap().as_str(), Some("fixed_point"));
+        let pess = j.get("pessimism").unwrap().as_f64().unwrap();
+        assert!(pess > 1.0);
+        let members = j.get("members").unwrap().as_arr().unwrap();
+        for m in members {
+            let sp = m.get("stretch_single_pass").unwrap().as_f64().unwrap();
+            let fpv = m.get("stretch_fixed_point").unwrap().as_f64().unwrap();
+            assert!(fpv <= sp);
+            assert_eq!(m.get("stretch").unwrap().as_f64(), Some(fpv));
+        }
+        // the default ledger stays free of every dual-bound field, so
+        // cat-serve-v3/v4 output is byte-identical with the flag off
+        let sp = negotiate(&pools(100.0, 4.0), &[d(40.0, 6.0), d(80.0, 1.0)]);
+        let s = sp.to_json().to_string();
+        assert!(!s.contains("stretch_single_pass"));
+        assert!(!s.contains("pessimism"));
+        assert!(!s.contains("\"mode\""));
     }
 
     #[test]

@@ -70,7 +70,7 @@ pub use faults::{
     BackendFaultStats, FaultEvent, FaultKind, FaultPolicy, FaultSchedule, FaultsReport,
 };
 pub use fleet::{Backend, Fleet, FleetBudget};
-pub use links::{LinkDemand, LinkLedger, MemberLink};
+pub use links::{LinkDemand, LinkLedger, MemberLink, NegotiationMode};
 pub use router::{route, BackendLoad, RouteDecision};
 
 use std::collections::{BTreeMap, VecDeque};
@@ -123,6 +123,14 @@ pub struct FleetConfig {
     /// schema `cat-serve-v2`).  Ignored without `partition` — a
     /// one-board-per-member fleet owns its links outright.
     pub links: Option<SharedLinkModel>,
+    /// Negotiate link stretches to the fixed point
+    /// (`--links-fixed-point`, [`links::NegotiationMode::FixedPoint`])
+    /// instead of the conservative single pass.  The selected fleet's
+    /// slices carry the relaxed `mem_throttle`, every fault-path
+    /// renegotiation uses the same mode, and the links block grows the
+    /// dual-bound fields; off (the default) keeps `cat-serve-v3`/`v4`
+    /// output byte-identical.  Ignored without `partition`+`links`.
+    pub links_fixed_point: bool,
     /// Fault injection ([`faults`]): an explicit schedule or seeded
     /// random faults.  `Some` switches the report to `cat-serve-v4`
     /// with a `faults` block (even when the schedule is empty); `None`
@@ -150,6 +158,7 @@ impl FleetConfig {
             explore_budget: Some(128),
             partition: false,
             links,
+            links_fixed_point: false,
             faults: None,
             max_retries: 3,
         }
@@ -168,6 +177,17 @@ impl FleetConfig {
 
     pub fn slo_ns(&self) -> u64 {
         (self.slo_ms * 1e6).round() as u64
+    }
+
+    /// The link negotiation mode this config serves under — threaded
+    /// through fleet selection and every fault-path renegotiation so
+    /// both always agree.
+    pub fn link_mode(&self) -> links::NegotiationMode {
+        if self.links_fixed_point {
+            links::NegotiationMode::FixedPoint
+        } else {
+            links::NegotiationMode::SinglePass
+        }
     }
 }
 
@@ -812,7 +832,7 @@ impl<'a> ServeLoop<'a> {
         let pools = ledger0.pools.scaled(self.dram_scale, self.pcie_scale);
         let demands: Vec<LinkDemand> = ledger0.members.iter().map(|m| m.demand).collect();
         let up: Vec<bool> = self.states.iter().map(|st| st.down_until_ns.is_none()).collect();
-        let grants = links::negotiate_masked(&pools, &demands, &up);
+        let grants = links::negotiate_masked(&pools, &demands, &up, cfg.link_mode());
         let mut stretches = Vec::with_capacity(grants.len());
         for (b, grant) in grants.iter().enumerate() {
             let Some(ml) = grant else {
@@ -843,7 +863,10 @@ impl<'a> ServeLoop<'a> {
         if self.tracing() {
             let members_up = stretches.iter().filter(|s| s.is_some()).count();
             let tid = self.tid_faults();
-            let args = vec![("members_up".to_string(), Json::Num(members_up as f64))];
+            let args = vec![
+                ("members_up".to_string(), Json::Num(members_up as f64)),
+                ("mode".to_string(), Json::Str(cfg.link_mode().wire_name().into())),
+            ];
             self.trace_instant("renegotiate", tid, now_ns, args);
         }
         self.renegotiations.push((now_ns, stretches));
@@ -1153,7 +1176,7 @@ fn build_fleet(cfg: &FleetConfig) -> Result<Fleet> {
     ecfg.slo_ms = Some(cfg.slo_ms);
     let explored = dse::explore(&ecfg)?;
     if cfg.partition {
-        Fleet::select_partitioned(
+        Fleet::select_partitioned_in(
             &cfg.model,
             &cfg.hw,
             &explored,
@@ -1161,6 +1184,7 @@ fn build_fleet(cfg: &FleetConfig) -> Result<Fleet> {
             cfg.max_batch,
             Some(cfg.slo_ms),
             cfg.links.as_ref(),
+            cfg.link_mode(),
         )
     } else {
         Fleet::select(&cfg.model, &cfg.hw, &explored, cfg.max_backends, cfg.max_batch)

@@ -304,7 +304,12 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // bare `inf`/`NaN` is invalid JSON (and this
+                    // parser rejects it); non-finite values degrade to
+                    // null so every emitted document stays parseable
+                    write!(f, "null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
                 } else {
                     write!(f, "{n}")
@@ -396,6 +401,25 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let v2 = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn non_finite_nums_serialize_as_null_and_round_trip() {
+        // bare `inf` is invalid JSON and this parser rejects it; the
+        // serializer must never emit it
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            assert_eq!(Json::Num(v).to_string(), "null");
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("stretch".to_string(), Json::Num(f64::INFINITY));
+        m.insert("throttle".to_string(), Json::Num(0.0));
+        let s = Json::Obj(m).to_string();
+        assert_eq!(s, r#"{"stretch":null,"throttle":0}"#);
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("stretch"), Some(&Json::Null));
+        // finite values are untouched — the byte-identity contract
+        assert_eq!(Json::Num(1.5).to_string(), "1.5");
+        assert_eq!(Json::Num(3.0).to_string(), "3");
     }
 
     #[test]

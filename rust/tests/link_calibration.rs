@@ -1,0 +1,237 @@
+//! Calibration of the two contention bounds against a beat-level
+//! arbitration reference.
+//!
+//! The serve-layer link model is deliberately fluid: single-pass
+//! proportional grants (conservative) and the clamped fixed point
+//! (optimistic).  This suite replays a small **request/response-beat
+//! arbitration trace** — shaped like the AXI read/write-beat and DRAM
+//! channel models of cycle-accurate emulation engines — through a
+//! weighted round-robin arbiter and checks that the measured per-member
+//! stretch lands **between the two bounds**:
+//!
+//! `stretch_fixed_point  ≤  reference  ≤  stretch_single_pass`
+//!
+//! (up to the trace's beat-quantization tolerance).  The arbiter is
+//! intentionally independent arithmetic: members issue per-work-unit
+//! DRAM and PCIe beats, each channel grants one beat at a time
+//! round-robin among *eligible* members (beat bytes are proportional
+//! to demand, so equal beats per round ≈ the proportional split), and
+//! a bounded window couples the channels — a member stalled on one
+//! link stops issuing beats on the other, which is exactly the freed
+//! bandwidth the fixed point re-grants and the single pass ignores.
+//!
+//! `tools/link_calibration.py` is the same replay in independent
+//! Python, used to refresh these constants when the link model
+//! changes (see ROADMAP).
+
+use cat::config::SharedLinkModel;
+use cat::serve::links::{negotiate, negotiate_fixed_point, LinkDemand};
+
+/// Work units each member must complete before the snapshot window.
+const UNITS: usize = 400;
+/// Beats per work unit per channel: beat bytes = demand / BEATS, so a
+/// round-robin round moves bytes proportional to demand.
+const BEATS: usize = 16;
+/// How many units a member may run ahead of its fully-completed
+/// frontier — the request/response window that couples the channels.
+const WINDOW: usize = 4;
+/// Beat-quantization tolerance on the bracket (relative).
+const TOL: f64 = 0.03;
+
+/// One grant in the replayed trace: (channel, member, completion ns).
+type Grant = (usize, usize, f64);
+
+/// Replay the beat trace for `demands` against `pools`; returns each
+/// member's achieved work rate (units per ns) over the fully-contended
+/// interval (up to the first member's completion) plus the grant trace.
+fn replay(pools: &SharedLinkModel, demands: &[LinkDemand]) -> (Vec<f64>, Vec<Grant>) {
+    let n = demands.len();
+    let pool = [pools.dram_gbps, pools.pcie_gbps];
+    // bytes per beat, per channel per member (0 = no traffic there)
+    let beat: Vec<[f64; 2]> = demands
+        .iter()
+        .map(|d| [d.dram_gbps / BEATS as f64, d.pcie_gbps / BEATS as f64])
+        .collect();
+    let mut served = vec![[0usize; 2]; n]; // beats completed
+    let mut free_at = [0.0f64; 2];
+    let mut cursor = [0usize; 2]; // round-robin position per channel
+    let mut trace = Vec::new();
+    let mut now = 0.0f64;
+    // a member's completed units = its slowest channel's frontier;
+    // channels with zero demand are always complete
+    let units_done = |served: &Vec<[usize; 2]>, m: usize| -> f64 {
+        (0..2)
+            .filter(|&c| beat[m][c] > 0.0)
+            .map(|c| served[m][c] as f64 / BEATS as f64)
+            .fold(UNITS as f64, f64::min)
+    };
+    // unit `u` is *released* at `u` ns (demands are bytes per unit per
+    // ns, so release rate 1/ns makes the demand a byte rate); a beat is
+    // eligible once its unit is released AND within the completion
+    // window — the latter is what couples the two channels
+    let eligible = |served: &Vec<[usize; 2]>, m: usize, c: usize, now: f64| -> bool {
+        if beat[m][c] <= 0.0 || served[m][c] >= UNITS * BEATS {
+            return false;
+        }
+        if (served[m][c] / BEATS) as f64 > now {
+            return false; // unit not yet released
+        }
+        let done = (0..2)
+            .filter(|&k| beat[m][k] > 0.0)
+            .map(|k| served[m][k] / BEATS)
+            .min()
+            .unwrap_or(UNITS);
+        served[m][c] < (done + WINDOW) * BEATS
+    };
+    let mut steps = 0usize;
+    loop {
+        steps += 1;
+        assert!(steps < 10_000_000, "arbitration replay failed to terminate");
+        if (0..n).any(|m| units_done(&served, m) >= UNITS as f64) {
+            break;
+        }
+        let mut progressed = false;
+        for c in 0..2 {
+            if free_at[c] > now {
+                continue;
+            }
+            // round-robin: next eligible member after the cursor
+            let pick =
+                (0..n).map(|k| (cursor[c] + k) % n).find(|&m| eligible(&served, m, c, now));
+            if let Some(m) = pick {
+                let dur = beat[m][c] / pool[c];
+                free_at[c] = now + dur;
+                served[m][c] += 1;
+                cursor[c] = (m + 1) % n;
+                trace.push((c, m, free_at[c]));
+                progressed = true;
+            }
+        }
+        if !progressed {
+            // channels busy or blocked: advance to the next event —
+            // a beat completion or a unit release (eligibility only
+            // changes at those instants)
+            let mut next =
+                free_at.iter().copied().filter(|t| *t > now).fold(f64::INFINITY, f64::min);
+            for (m, s) in served.iter().enumerate() {
+                for c in 0..2 {
+                    if beat[m][c] > 0.0 && s[c] < UNITS * BEATS {
+                        let release = (s[c] / BEATS) as f64;
+                        if release > now {
+                            next = next.min(release);
+                        }
+                    }
+                }
+            }
+            assert!(next.is_finite(), "deadlocked replay: no event to advance to");
+            now = next;
+        }
+    }
+    let horizon = now.max(free_at[0]).max(free_at[1]);
+    let rates = (0..n).map(|m| units_done(&served, m) / horizon).collect();
+    (rates, trace)
+}
+
+/// A member's solo work rate (units per ns): alone it owns every pool,
+/// so each channel moves `min(demand, pool)` bytes per ns.
+fn solo_rate(pools: &SharedLinkModel, d: &LinkDemand) -> f64 {
+    let per = |dem: f64, pool: f64| if dem <= 0.0 { f64::INFINITY } else { dem.min(pool) / dem };
+    per(d.dram_gbps, pools.dram_gbps).min(per(d.pcie_gbps, pools.pcie_gbps))
+}
+
+fn check_bracket(
+    pools: &SharedLinkModel,
+    demands: &[LinkDemand],
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let sp = negotiate(pools, demands);
+    let fp = negotiate_fixed_point(pools, demands);
+    let (rates, trace) = replay(pools, demands);
+    assert!(!trace.is_empty());
+    let mut sps = Vec::new();
+    let mut fps = Vec::new();
+    let mut refs = Vec::new();
+    for (m, d) in demands.iter().enumerate() {
+        let reference = solo_rate(pools, d) / rates[m];
+        let (s, f) = (sp.members[m].stretch, fp.members[m].stretch);
+        assert!(
+            reference >= 1.0 - TOL,
+            "member {m}: reference stretch {reference} below 1 — broken replay"
+        );
+        assert!(
+            f <= reference * (1.0 + TOL),
+            "member {m}: fixed-point bound {f} above the reference {reference} — the \
+             optimistic bound stopped being a lower bracket"
+        );
+        assert!(
+            reference <= s * (1.0 + TOL),
+            "member {m}: reference {reference} above the single-pass bound {s} — the \
+             conservative bound stopped being an upper bracket"
+        );
+        sps.push(s);
+        fps.push(f);
+        refs.push(reference);
+    }
+    (sps, fps, refs)
+}
+
+#[test]
+fn bounds_bracket_the_cross_pool_coupled_reference() {
+    // the ledger-level strict-relaxation scenario: A is PCIe-bound
+    // beyond its DRAM share, B DRAM-heavy — the arbitration reference
+    // must land between the relaxed and the conservative bound
+    let pools = SharedLinkModel { dram_gbps: 100.0, pcie_gbps: 4.0 };
+    let demands = [
+        LinkDemand { dram_gbps: 40.0, pcie_gbps: 6.0 },
+        LinkDemand { dram_gbps: 80.0, pcie_gbps: 1.0 },
+    ];
+    let (sps, fps, _) = check_bracket(&pools, &demands);
+    // the bracket is non-degenerate here: the bounds genuinely differ
+    for (s, f) in sps.iter().zip(&fps) {
+        assert!(f < s, "fixture drifted: bounds collapsed, nothing to calibrate");
+    }
+}
+
+#[test]
+fn bounds_bracket_a_single_pool_reference_where_they_coincide() {
+    // pure DRAM contention, no cross-pool coupling: both bounds equal
+    // Σdemand/pool and the arbitration replay must land on them
+    let pools = SharedLinkModel { dram_gbps: 100.0, pcie_gbps: 1e6 };
+    let demands = [
+        LinkDemand { dram_gbps: 80.0, pcie_gbps: 0.5 },
+        LinkDemand { dram_gbps: 40.0, pcie_gbps: 0.5 },
+    ];
+    let (sps, fps, refs) = check_bracket(&pools, &demands);
+    for ((s, f), r) in sps.iter().zip(&fps).zip(&refs) {
+        assert!((s - f).abs() < 1e-9, "no coupling, the bounds must coincide");
+        assert!((r - s).abs() <= s * TOL, "reference {r} off the coincident bound {s}");
+    }
+}
+
+#[test]
+fn uncontended_replay_matches_both_bounds_at_stretch_one() {
+    let pools = SharedLinkModel { dram_gbps: 200.0, pcie_gbps: 32.0 };
+    let demands = [
+        LinkDemand { dram_gbps: 40.0, pcie_gbps: 4.0 },
+        LinkDemand { dram_gbps: 50.0, pcie_gbps: 6.0 },
+    ];
+    let (sps, fps, refs) = check_bracket(&pools, &demands);
+    for ((s, f), r) in sps.iter().zip(&fps).zip(&refs) {
+        assert_eq!(*s, 1.0);
+        assert_eq!(*f, 1.0);
+        assert!((r - 1.0).abs() <= TOL, "idle links must not stretch the replay: {r}");
+    }
+}
+
+#[test]
+fn replayed_trace_is_deterministic() {
+    let pools = SharedLinkModel { dram_gbps: 100.0, pcie_gbps: 4.0 };
+    let demands = [
+        LinkDemand { dram_gbps: 40.0, pcie_gbps: 6.0 },
+        LinkDemand { dram_gbps: 80.0, pcie_gbps: 1.0 },
+    ];
+    let (r1, t1) = replay(&pools, &demands);
+    let (r2, t2) = replay(&pools, &demands);
+    assert_eq!(r1, r2);
+    assert_eq!(t1.len(), t2.len());
+    assert!(t1.iter().zip(&t2).all(|(a, b)| a.0 == b.0 && a.1 == b.1 && a.2 == b.2));
+}

@@ -15,7 +15,8 @@
 
 use cat::config::{HardwareConfig, ModelConfig, SharedLinkModel};
 use cat::dse::{explore, ExploreConfig, ExploreResult, SpaceSpec};
-use cat::serve::{serve_fleet_on, Fleet, FleetConfig};
+use cat::serve::links::{negotiate, negotiate_fixed_point, LinkDemand};
+use cat::serve::{serve_fleet_on, Fleet, FleetConfig, NegotiationMode};
 use cat::util::json::Json;
 
 fn compact_explored(model: &ModelConfig, hw: &HardwareConfig) -> ExploreResult {
@@ -201,4 +202,233 @@ fn contended_serving_keeps_every_invariant_and_prices_contention() {
     assert!(!r.responses.is_empty(), "a 150 ms SLO admits contended traffic (non-vacuous)");
     let again = cat::experiments::serve_fleet(&cfg).unwrap();
     assert_eq!(r.to_json().to_string(), again.to_json().to_string());
+}
+
+#[test]
+fn fixed_point_stretch_never_exceeds_single_pass_on_a_real_partition() {
+    // The pessimism fix, member-wise on a real contended fleet: the
+    // fixed-point stretch is never below 1 and never above the
+    // single-pass bound, grants stay the single-pass split, and the
+    // relaxed slices serve every batch no slower than the conservative
+    // ones.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    let tight = tight_pools();
+    let sp = two_member_fleet(&model, &hw, &ex, Some(&tight));
+    let fp = Fleet::select_partitioned_in(
+        &model,
+        &hw,
+        &ex,
+        2,
+        4,
+        Some(200.0),
+        Some(&tight),
+        NegotiationMode::FixedPoint,
+    )
+    .unwrap();
+    assert_eq!(sp.len(), fp.len(), "the mode must not change the selection");
+    let lsp = sp.budget.as_ref().unwrap().links.as_ref().unwrap();
+    let lfp = fp.budget.as_ref().unwrap().links.as_ref().unwrap();
+    assert!(lsp.throttled() && lfp.throttled());
+    for (a, b) in lfp.members.iter().zip(&lsp.members) {
+        assert!(a.stretch >= 1.0);
+        assert!(a.stretch <= b.stretch + 1e-12, "fp {} > sp {}", a.stretch, b.stretch);
+        assert_eq!(a.stretch_single_pass, b.stretch, "sp bound must be carried verbatim");
+        assert_eq!(a.granted, b.granted, "grants stay the feasible single-pass split");
+    }
+    assert!(lfp.pessimism() >= 1.0);
+    for (f, c) in fp.backends.iter().zip(&sp.backends) {
+        assert_eq!(f.point.cand.index, c.point.cand.index);
+        for k in 1..=f.max_batch().min(c.max_batch()) {
+            assert!(
+                f.service_ns(k) <= c.service_ns(k),
+                "batch {k}: fixed-point slice slower than single-pass"
+            );
+            assert_eq!(f.ops(k), c.ops(k));
+        }
+    }
+}
+
+#[test]
+fn fixed_point_strictly_improves_a_constructed_oversubscribed_partition() {
+    // Constructed 2-member cross-pool coupling: A is PCIe-bound beyond
+    // its DRAM share, B is DRAM-heavy — each member's excess stretch
+    // frees appetite the other's binding pool re-grants, so BOTH
+    // bounds relax strictly.
+    let pools = SharedLinkModel { dram_gbps: 100.0, pcie_gbps: 4.0 };
+    let demands = [
+        LinkDemand { dram_gbps: 40.0, pcie_gbps: 6.0 },
+        LinkDemand { dram_gbps: 80.0, pcie_gbps: 1.0 },
+    ];
+    let sp = negotiate(&pools, &demands);
+    let fp = negotiate_fixed_point(&pools, &demands);
+    assert!(sp.throttled());
+    for (a, b) in fp.members.iter().zip(&sp.members) {
+        assert!(b.stretch > 1.0, "fixture drifted: member not throttled");
+        assert!(
+            a.stretch < b.stretch - 1e-6,
+            "expected strict relaxation: fp {} vs sp {}",
+            a.stretch,
+            b.stretch
+        );
+        assert!(a.stretch >= 1.0);
+    }
+    assert!(fp.pessimism() > 1.0 + 1e-6);
+}
+
+#[test]
+fn one_member_partition_bit_identical_across_negotiation_modes() {
+    // No contender means nothing to relax: the fixed point IS the
+    // single pass for a lone member, end to end through the serve JSON
+    // (modulo the links block's own mode annotation).
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    let sp =
+        Fleet::select_partitioned(&model, &hw, &ex, 1, 6, Some(80.0), Some(&hw.links())).unwrap();
+    let fp = Fleet::select_partitioned_in(
+        &model,
+        &hw,
+        &ex,
+        1,
+        6,
+        Some(80.0),
+        Some(&hw.links()),
+        NegotiationMode::FixedPoint,
+    )
+    .unwrap();
+    assert_eq!(sp.len(), 1);
+    assert_eq!(fp.len(), 1);
+    let (a, b) = (&sp.backends[0], &fp.backends[0]);
+    assert_eq!(a.point.cand.index, b.point.cand.index);
+    for k in 1..=6 {
+        assert_eq!(a.service_ns(k), b.service_ns(k), "batch-{k} service time");
+        assert_eq!(a.ops(k), b.ops(k));
+    }
+    let lfp = fp.budget.as_ref().unwrap().links.as_ref().unwrap();
+    assert_eq!(lfp.members[0].stretch, 1.0);
+    assert_eq!(lfp.members[0].stretch_single_pass, 1.0);
+
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1500.0;
+    cfg.slo_ms = 80.0;
+    cfg.n_requests = 200;
+    cfg.max_batch = 6;
+    cfg.seed = 0xD07;
+    let ra = serve_fleet_on(&cfg, &sp).unwrap();
+    cfg.links_fixed_point = true;
+    let rb = serve_fleet_on(&cfg, &fp).unwrap();
+    let strip = |j: Json| match j {
+        Json::Obj(mut m) => {
+            if let Some(Json::Obj(bm)) = m.get_mut("board") {
+                bm.remove("links");
+            }
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    assert_eq!(
+        strip(ra.to_json()).to_string(),
+        strip(rb.to_json()).to_string(),
+        "negotiation mode must be a serving no-op for a lone member"
+    );
+}
+
+#[test]
+fn contended_serving_under_fixed_point_keeps_every_invariant() {
+    // Full serving through the same oversubscribed partition with
+    // --links-fixed-point: conservation, SLO compliance, and
+    // determinism all hold, the report carries both bounds, and the
+    // whole document stays valid JSON.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1200.0;
+    cfg.slo_ms = 150.0;
+    cfg.n_requests = 300;
+    cfg.explore_budget = Some(64);
+    cfg.seed = 61;
+    cfg.partition = true;
+    cfg.links = Some(tight_pools());
+    cfg.links_fixed_point = true;
+    let r = cat::experiments::serve_fleet(&cfg).unwrap();
+    let ledger = r.board.as_ref().unwrap().links.as_ref().unwrap();
+    assert!(ledger.throttled(), "fixture drifted: partition not contended");
+    assert_eq!(ledger.mode, NegotiationMode::FixedPoint);
+    for m in &ledger.members {
+        assert!(m.stretch >= 1.0 && m.stretch <= m.stretch_single_pass + 1e-12);
+    }
+
+    let a = &r.admission;
+    assert_eq!(a.submitted, cfg.n_requests);
+    assert!(a.accounted(), "stats leak requests: {a:?}");
+    let slo_ns = cfg.slo_ns();
+    for resp in &r.responses {
+        assert!(resp.latency_ns() >= resp.batch_service_ns, "req {}", resp.id);
+        assert!(resp.latency_ns() <= slo_ns, "req {} broke SLO under contention", resp.id);
+    }
+    assert_eq!(r.slo_violations, 0);
+    assert!(!r.responses.is_empty());
+    let s = r.to_json().to_string();
+    assert!(s.contains("\"schema\":\"cat-serve-v3\""));
+    assert!(s.contains("\"stretch_single_pass\""));
+    assert!(s.contains("\"stretch_fixed_point\""));
+    assert!(s.contains("\"pessimism\""));
+    assert!(s.contains("\"mode\":\"fixed_point\""));
+    Json::parse(&s).expect("fixed-point serve report must stay valid JSON");
+    let again = cat::experiments::serve_fleet(&cfg).unwrap();
+    assert_eq!(s, again.to_json().to_string());
+}
+
+#[test]
+fn non_finite_ledger_values_serialize_as_null_through_the_serve_path() {
+    // A demanded zero-width pool negotiates to infinite stretch; the
+    // selection path refuses such pools, but the ledger API can still
+    // carry one (e.g. external callers building their own budget).
+    // The full serve report must degrade those to null — bare `inf`
+    // would poison the whole cat-serve-v3 document.
+    let model = ModelConfig::bert_base();
+    let hw = HardwareConfig::vck5000();
+    let ex = compact_explored(&model, &hw);
+    let mut fleet = two_member_fleet(&model, &hw, &ex, Some(&tight_pools()));
+    let demands: Vec<LinkDemand> = fleet
+        .budget
+        .as_ref()
+        .unwrap()
+        .links
+        .as_ref()
+        .unwrap()
+        .members
+        .iter()
+        .map(|m| m.demand)
+        .collect();
+    let zero = SharedLinkModel { dram_gbps: 0.0, pcie_gbps: 1.0 };
+    fleet.budget.as_mut().unwrap().links = Some(negotiate(&zero, &demands));
+
+    let mut cfg = FleetConfig::new(model, hw);
+    cfg.rps = 1200.0;
+    cfg.slo_ms = 150.0;
+    cfg.n_requests = 50;
+    cfg.seed = 61;
+    cfg.partition = true;
+    let r = serve_fleet_on(&cfg, &fleet).unwrap();
+    let s = r.to_json().to_string();
+    assert!(s.contains("\"schema\":\"cat-serve-v3\""));
+    assert!(s.contains("\"stretch\":null"), "infinite stretch must serialize as null: {s}");
+    assert!(s.contains("\"oversubscription\":null"), "zero-pool oversubscription: {s}");
+    // a bare non-finite literal would surface as `:inf`/`:NaN` (the
+    // board's `aie_infeasible` key makes a plain "inf" search useless)
+    assert!(!s.contains(":inf") && !s.contains(":NaN"), "bare non-finite is invalid JSON");
+    let parsed = Json::parse(&s).expect("report with non-finite ledger values must parse");
+    let members = parsed
+        .get("board")
+        .unwrap()
+        .get("links")
+        .unwrap()
+        .get("members")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert!(members.iter().any(|m| m.get("stretch") == Some(&Json::Null)));
 }

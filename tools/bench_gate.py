@@ -52,6 +52,11 @@ import sys
 #   serve_trace_overhead        (lower)  — traced/untraced host-time median
 #       ratio on the same routing loop; growth means the observability
 #       layer's cheap-when-on contract is eroding
+#   serve_contention_pessimism  (lower)  — single-pass contended p50 /
+#       fixed-point contended p50 on the same oversubscribed partition
+#       (virtual clock, >= 1 by construction); growth means the
+#       conservative single-pass bound is drifting further from the
+#       calibrated fixed point and over-throttling by more
 GATED_METRICS = (
     ("engine_speedup_mha_batch64", "higher"),
     ("dse_points_per_sec", "higher"),
@@ -59,6 +64,7 @@ GATED_METRICS = (
     ("serve_contention_overhead", "lower"),
     ("serve_failover_reqs_per_sec", "higher"),
     ("serve_trace_overhead", "lower"),
+    ("serve_contention_pessimism", "lower"),
 )
 
 

@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Calibration refresh tool for the dual link-contention bounds (stdlib only).
+
+Independent re-implementation of ``rust/tests/link_calibration.rs``: the
+serve layer reports two stretch bounds per partitioned member — the
+conservative single-pass proportional bound and the optimistic clamped
+fixed point (``--links-fixed-point``).  This tool replays the same
+request/response-beat arbitration trace (weighted round-robin per
+channel, beat bytes proportional to demand, a bounded completion window
+coupling DRAM and PCIe, units released at the demand rate) and checks
+
+    stretch_fixed_point  <=  reference  <=  stretch_single_pass
+
+per member, within the beat-quantization tolerance.  Run it after any
+change to ``rust/src/serve/links.rs`` (or to the scenarios below) to
+confirm the bracket still holds, and use ``--json`` to dump the measured
+reference stretches when refreshing the constants in the Rust test.
+
+The arithmetic here is deliberately written from the model definitions,
+not ported line-by-line from Rust — two independent implementations
+agreeing is the point of a calibration harness.
+
+Usage:
+    python3 tools/link_calibration.py [--json] [--tolerance 0.03]
+
+Exit code 0 = every scenario brackets, 1 = bracket violated, 2 = bad
+invocation.
+"""
+
+import argparse
+import json
+import sys
+
+UNITS = 400  # work units per member before the snapshot
+BEATS = 16  # beats per unit per channel (beat bytes = demand / BEATS)
+WINDOW = 4  # units a member may run ahead of its completed frontier
+MAX_SWEEPS = 32  # fixed-point iteration cap (mirrors FIXED_POINT_MAX_SWEEPS)
+EPS = 1e-9  # fixed-point convergence epsilon (mirrors FIXED_POINT_EPS)
+
+# (name, (dram_pool, pcie_pool), [(dram_demand, pcie_demand), ...])
+SCENARIOS = [
+    ("cross-pool-coupled", (100.0, 4.0), [(40.0, 6.0), (80.0, 1.0)]),
+    ("single-pool-only", (100.0, 1e6), [(80.0, 0.5), (40.0, 0.5)]),
+    ("uncontended", (200.0, 32.0), [(40.0, 4.0), (50.0, 6.0)]),
+]
+
+
+def pool_share(demand, total, pool):
+    """Single-pass proportional grant and stretch for one member's slice
+    of one pool (mirrors ``links::pool_share``)."""
+    if demand <= 0.0:
+        return 0.0, 1.0
+    if pool <= 0.0:
+        return 0.0, float("inf")
+    granted = pool * demand / total if total > pool else demand
+    solo = min(demand, pool)
+    return granted, max(solo / granted, 1.0)
+
+
+def single_pass(pools, demands):
+    """Per-member (overall, per-pool) single-pass stretches."""
+    totals = [sum(d[c] for d in demands) for c in range(2)]
+    out = []
+    for d in demands:
+        per = [pool_share(d[c], totals[c], pools[c])[1] for c in range(2)]
+        out.append((max(per), per))
+    return out
+
+
+def fixed_point(pools, demands):
+    """Clamped fixed-point overall stretches (mirrors
+    ``links::negotiate_fixed_point``): contender j's appetite on pool p
+    shrinks by min(1, s_j^p / S_j) — only the stretch *in excess* of
+    what pool p itself imposes is credited back — and each member's
+    overall stretch is clamped to never rise, which makes the sweep
+    monotone non-increasing and convergent."""
+    sp = single_pass(pools, demands)
+    per_pool = [per for (_, per) in sp]
+    overall = [s for (s, _) in sp]
+
+    def offered(d, s_pool, s_all):
+        if s_pool == float("inf") and s_all == float("inf"):
+            return d
+        return d * min(1.0, s_pool / s_all)
+
+    for _ in range(MAX_SWEEPS):
+        changed = False
+        nxt = list(overall)
+        for i, d in enumerate(demands):
+            cand = 1.0
+            for c in range(2):
+                rel = d[c] + sum(
+                    offered(dj[c], per_pool[j][c], overall[j])
+                    for j, dj in enumerate(demands)
+                    if j != i
+                )
+                cand = max(cand, pool_share(d[c], rel, pools[c])[1])
+            cand = min(cand, overall[i])
+            if overall[i] - cand > EPS:
+                changed = True
+            nxt[i] = cand
+        overall = nxt
+        if not changed:
+            return overall
+    raise AssertionError("fixed point failed to converge within MAX_SWEEPS")
+
+
+def solo_rate(pools, d):
+    """Units/ns a member achieves alone: each channel moves
+    min(demand, pool) bytes per ns."""
+    rates = [min(d[c], pools[c]) / d[c] for c in range(2) if d[c] > 0.0]
+    return min(rates) if rates else float("inf")
+
+
+def replay(pools, demands):
+    """Beat-level arbitration replay; returns per-member achieved rates
+    (units/ns) over the fully-contended interval."""
+    n = len(demands)
+    beat = [[d[c] / BEATS for c in range(2)] for d in demands]
+    served = [[0, 0] for _ in range(n)]
+    free_at = [0.0, 0.0]
+    cursor = [0, 0]
+    now = 0.0
+
+    def units_done(m):
+        fronts = [served[m][c] / BEATS for c in range(2) if beat[m][c] > 0.0]
+        return min([float(UNITS)] + fronts)
+
+    def eligible(m, c):
+        if beat[m][c] <= 0.0 or served[m][c] >= UNITS * BEATS:
+            return False
+        if served[m][c] // BEATS > now:
+            return False  # unit not yet released
+        # a member's completed-unit frontier gates both channels (window)
+        done = min(
+            [UNITS] + [served[m][k] // BEATS for k in range(2) if beat[m][k] > 0.0]
+        )
+        return served[m][c] < (done + WINDOW) * BEATS
+
+    for _ in range(10_000_000):
+        if any(units_done(m) >= UNITS for m in range(n)):
+            break
+        progressed = False
+        for c in range(2):
+            if free_at[c] > now:
+                continue
+            pick = next(
+                (
+                    (cursor[c] + k) % n
+                    for k in range(n)
+                    if eligible((cursor[c] + k) % n, c)
+                ),
+                None,
+            )
+            if pick is not None:
+                free_at[c] = now + beat[pick][c] / pools[c]
+                served[pick][c] += 1
+                cursor[c] = (pick + 1) % n
+                progressed = True
+        if not progressed:
+            events = [t for t in free_at if t > now]
+            for m in range(n):
+                for c in range(2):
+                    if beat[m][c] > 0.0 and served[m][c] < UNITS * BEATS:
+                        release = float(served[m][c] // BEATS)
+                        if release > now:
+                            events.append(release)
+            if not events:
+                raise AssertionError("deadlocked replay: no event to advance to")
+            now = min(events)
+    else:
+        raise AssertionError("arbitration replay failed to terminate")
+
+    horizon = max([now] + free_at)
+    return [units_done(m) / horizon for m in range(n)]
+
+
+def calibrate(tolerance):
+    """Returns (ok, results) over every scenario."""
+    ok = True
+    results = []
+    for name, pools, demands in SCENARIOS:
+        sp = [s for (s, _) in single_pass(pools, demands)]
+        fp = fixed_point(pools, demands)
+        rates = replay(pools, demands)
+        members = []
+        for m, d in enumerate(demands):
+            ref = solo_rate(pools, d) / rates[m]
+            lo_ok = fp[m] <= ref * (1.0 + tolerance)
+            hi_ok = ref <= sp[m] * (1.0 + tolerance)
+            ok = ok and lo_ok and hi_ok and ref >= 1.0 - tolerance
+            members.append(
+                {
+                    "member": m,
+                    "stretch_single_pass": sp[m],
+                    "stretch_fixed_point": fp[m],
+                    "reference": ref,
+                    "bracketed": lo_ok and hi_ok,
+                }
+            )
+        results.append({"scenario": name, "members": members})
+    return ok, results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="replay the beat-level arbitration reference and check "
+        "the single-pass/fixed-point stretch bounds bracket it"
+    )
+    ap.add_argument("--json", action="store_true", help="emit machine-readable results")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.03,
+        help="relative beat-quantization tolerance on the bracket (default 0.03)",
+    )
+    args = ap.parse_args(argv)
+    if args.tolerance < 0.0:
+        print("link_calibration: --tolerance must be non-negative", file=sys.stderr)
+        return 2
+
+    ok, results = calibrate(args.tolerance)
+    if args.json:
+        print(json.dumps({"ok": ok, "scenarios": results}, indent=2))
+    else:
+        for sc in results:
+            print(f"scenario {sc['scenario']}:")
+            for mm in sc["members"]:
+                mark = "ok" if mm["bracketed"] else "VIOLATED"
+                print(
+                    "  member {member}: fixed-point {stretch_fixed_point:.4f} "
+                    "<= reference {reference:.4f} <= single-pass "
+                    "{stretch_single_pass:.4f}  [{mark}]".format(mark=mark, **mm)
+                )
+        print(
+            "link_calibration: bracket holds on every scenario"
+            if ok
+            else "link_calibration: BRACKET VIOLATED — the bounds no longer "
+            "enclose the arbitration reference"
+        )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ def measured(
     contention=2.0,
     failover=150000.0,
     trace_overhead=1.2,
+    pessimism=1.05,
     smoke=True,
 ):
     return doc(
@@ -38,6 +39,7 @@ def measured(
             "serve_contention_overhead": contention,
             "serve_failover_reqs_per_sec": failover,
             "serve_trace_overhead": trace_overhead,
+            "serve_contention_pessimism": pessimism,
             "smoke": smoke,
         },
     )
@@ -170,6 +172,29 @@ class BenchGateTests(unittest.TestCase):
         code, out = gate(measured(), base)
         self.assertEqual(code, 0, out)
         self.assertIn("serve_trace_overhead", out)
+        self.assertIn("missing from baseline", out)
+
+    def test_contention_pessimism_growth_fails_lower_is_better(self):
+        # single-pass/fixed-point contended p50 ratio: growth beyond
+        # tolerance means the conservative bound is drifting further from
+        # the calibrated fixed point (over-throttling by more)
+        code, out = gate(measured(pessimism=1.8), measured(pessimism=1.05))
+        self.assertEqual(code, 1)
+        self.assertIn("serve_contention_pessimism", out)
+        self.assertIn("regression", out)
+
+    def test_contention_pessimism_within_tolerance_passes(self):
+        code, out = gate(measured(pessimism=1.4), measured(pessimism=1.05))
+        self.assertEqual(code, 0, out)  # 1.33x growth < 1.5x ceiling
+
+    def test_contention_pessimism_missing_from_baseline_warns_and_passes(self):
+        # the PR that introduces the fixed-point bench row predates the
+        # committed baseline — the gate must not fail it
+        base = measured()
+        del base["derived"]["serve_contention_pessimism"]
+        code, out = gate(measured(), base)
+        self.assertEqual(code, 0, out)
+        self.assertIn("serve_contention_pessimism", out)
         self.assertIn("missing from baseline", out)
 
     def test_mode_mismatch_warns_but_compares(self):
