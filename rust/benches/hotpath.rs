@@ -323,6 +323,40 @@ fn main() {
          requeued ({failover_reqs_per_sec:.0} req/s driver throughput)"
     );
 
+    // --- cluster row: the same virtual-clock admission plane, but the
+    //     family spreads across a 2-board VCK5000 + Limited-AIE rack
+    //     behind shared NIC/switch pools (`--cluster`).  Deployment
+    //     (per-board explore, placement, net negotiation) happens once
+    //     outside the timed loop, so the row isolates the cluster-era
+    //     routing path itself ---
+    let cl_spec = cat::cluster::ClusterSpec {
+        boards: vec![hw.clone(), HardwareConfig::vck5000_limited(64)],
+        net: cat::config::SharedLinkModel { dram_gbps: 25.0, pcie_gbps: 12.5 },
+    };
+    let mut cl_cfg = serve_cfg.clone();
+    cl_cfg.max_backends = 2;
+    // headroom for the Limited-AIE board's worst-case service bound, so
+    // the mixed rack always fields a member per board
+    cl_cfg.slo_ms = 100.0;
+    cl_cfg.explore_budget = Some(24);
+    cl_cfg.cluster = Some(cl_spec.clone());
+    let cl_fleet = cat::cluster::build_fleet(&cl_cfg, &cl_spec).unwrap();
+    let cl_boards = cl_fleet.cluster.as_ref().expect("cluster fleet carries its ledger");
+    let mut cl_completed = 0usize;
+    let cl_med = run_row("serve/cluster_2board_route", 2, 20, &mut || {
+        let r = cat::serve::serve_fleet_on(&cl_cfg, &cl_fleet).unwrap();
+        cl_completed = r.admission.completed;
+        black_box(r);
+    })
+    .median_ns();
+    let cluster_reqs_per_sec = cl_cfg.n_requests as f64 / (cl_med / 1e9).max(1e-12);
+    println!(
+        "  serve (cluster): {} member(s) across {} board(s), {cl_completed} completed \
+         per pass ({cluster_reqs_per_sec:.0} req/s driver throughput)",
+        cl_fleet.len(),
+        cl_boards.boards.len(),
+    );
+
     // --- traced-serve row: the identical routing loop with the full
     //     observability layer attached (trace sink + metrics registry).
     //     The derived `serve_trace_overhead` (traced/untraced host-time
@@ -422,6 +456,14 @@ fn main() {
         derived.insert(
             "serve_failover_reqs_per_sec".to_string(),
             Json::Num(failover_reqs_per_sec.round()),
+        );
+        derived.insert(
+            "serve_cluster_reqs_per_sec".to_string(),
+            Json::Num(cluster_reqs_per_sec.round()),
+        );
+        derived.insert(
+            "serve_cluster_boards".to_string(),
+            Json::Num(cl_boards.boards.len() as f64),
         );
         derived.insert(
             "serve_trace_overhead".to_string(),

@@ -1,0 +1,561 @@
+//! Multi-board cluster serving: one admission plane over N boards of
+//! mixed SKUs (`cat serve --cluster <boards.json>`).
+//!
+//! The explore-derived frontier *family* maps across the cluster the
+//! same way a partitioned fleet maps across one board, one level up:
+//!
+//! * **selection** — every board runs its own exploration and
+//!   [`Fleet::select_partitioned_in`] under its own AIE/PL budgets and
+//!   DRAM/PCIe pools (the same feasibility checks `dse::prune` applies
+//!   per point), so a VCK5000 and a Limited-AIE board each deploy the
+//!   members their silicon can actually hold;
+//! * **network** — the inter-board host NIC and switch fabric are
+//!   priced by the PR 5 [`SharedLinkModel`] machinery verbatim: each
+//!   board's joint host-I/O appetite becomes one [`LinkDemand`] against
+//!   the cluster pools (`pcie_gbps` slot = NIC, `dram_gbps` slot =
+//!   switch), proportional grants stretch the oversubscribed boards,
+//!   and `--links-fixed-point` relaxes the split to the clamped fixed
+//!   point exactly as it does on-board;
+//! * **health** — a whole-board crash expands to one simultaneous
+//!   backend crash per member on that board (see
+//!   [`crate::serve::faults::expand_boards`]), so the PR 6 drain /
+//!   re-admit-against-original-deadlines / masked-renegotiation /
+//!   five-term-conservation machinery handles board outages with no new
+//!   code paths.
+//!
+//! The serving loop itself never learns about boards: it routes over
+//! the flattened member list (power-ascending, the router's
+//! cheapest-first contract) and only consults the [`ClusterBudget`]
+//! ledger when a fault forces link renegotiation or the report prints
+//! per-board utilization/availability/energy (schema `cat-serve-v5`).
+
+use std::collections::BTreeMap;
+
+use crate::config::{HardwareConfig, SharedLinkModel};
+use crate::dse;
+use crate::serve::links::{negotiate_in, LinkDemand, LinkLedger, NegotiationMode};
+use crate::serve::{Backend, Fleet, FleetConfig, FleetReport};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// A parsed `--cluster` spec: which boards the rack holds and how wide
+/// the shared network pools are.
+///
+/// JSON shape: `{"boards": ["vck5000", "vck5000-limited-64", {...}],
+/// "nic_gbps": 12.5, "switch_gbps": 25.0}` — board entries are preset
+/// names / `.json` paths (resolved like `--hw`) or inline hardware
+/// objects; the pool keys default to a 100 GbE NIC (12.5 GB/s) and a
+/// 200 GbE switch port (25 GB/s).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub boards: Vec<HardwareConfig>,
+    /// Inter-board pools, reusing [`SharedLinkModel`] with the switch
+    /// fabric in the `dram_gbps` slot and the host NIC in `pcie_gbps`.
+    pub net: SharedLinkModel,
+}
+
+impl ClusterSpec {
+    pub fn from_json(j: &Json) -> Result<ClusterSpec> {
+        let arr = j
+            .get("boards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("cluster spec must carry a 'boards' array"))?;
+        if arr.is_empty() {
+            return Err(anyhow!("cluster spec 'boards' must name at least one board"));
+        }
+        let mut boards = Vec::with_capacity(arr.len());
+        for (i, b) in arr.iter().enumerate() {
+            let hw = match b {
+                Json::Str(name) => HardwareConfig::resolve(name),
+                Json::Obj(_) => HardwareConfig::from_json(b),
+                _ => Err(anyhow!("board entries must be preset names or inline hardware objects")),
+            }
+            .map_err(|e| anyhow!("cluster board #{i}: {e}"))?;
+            boards.push(hw);
+        }
+        let pool = |key: &str, default: f64| -> Result<f64> {
+            match j.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .ok_or_else(|| anyhow!("cluster '{key}' must be a positive number")),
+            }
+        };
+        let nic = pool("nic_gbps", 12.5)?;
+        let switch = pool("switch_gbps", 25.0)?;
+        Ok(ClusterSpec { boards, net: SharedLinkModel { dram_gbps: switch, pcie_gbps: nic } })
+    }
+
+    /// Joined SKU names, e.g. `vck5000+vck5000-limited-64` — stands in
+    /// for the single-board `hw` tag in cluster reports.
+    pub fn name(&self) -> String {
+        self.boards.iter().map(|b| b.name.as_str()).collect::<Vec<_>>().join("+")
+    }
+}
+
+/// Where one fleet position lives in the cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct MemberSlot {
+    /// Board index (into [`ClusterBudget::boards`]).
+    pub board: usize,
+    /// Slot within that board's own partition (index into the board
+    /// ledger's shares and intra-board link members).
+    pub slot: usize,
+    /// Deployed memory throttle: `1 / (intra-board stretch × the
+    /// board's net stretch)`.
+    pub throttle: f64,
+}
+
+/// One board's slice of the cluster: its hardware, its own partition
+/// ledger (AIE/PL budgets, shares, intra-board links), and which global
+/// fleet positions deploy on it (ascending = the board's slot order).
+#[derive(Debug, Clone)]
+pub struct BoardLedger {
+    pub hw: HardwareConfig,
+    pub budget: crate::serve::FleetBudget,
+    pub members: Vec<usize>,
+}
+
+/// The cluster-level resource ledger a `--cluster` fleet carries:
+/// per-board partitions, the negotiated NIC/switch ledger (one member
+/// per **board**), and the flattened member placement.
+#[derive(Debug, Clone)]
+pub struct ClusterBudget {
+    /// Joined SKU names (the report's `hw` tag in cluster mode).
+    pub name: String,
+    pub boards: Vec<BoardLedger>,
+    /// Inter-board network ledger; `members[j]` is board `j`.
+    pub net: LinkLedger,
+    /// `members[g]` places global fleet position `g`.
+    pub members: Vec<MemberSlot>,
+}
+
+/// Per-board runtime rollup derived from a finished report — the
+/// numbers the cluster ledger prints beside its static budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct BoardUsage {
+    pub admitted: usize,
+    pub completed: usize,
+    pub busy_ns: u64,
+    /// Mean member utilization: `Σ busy / (wall × members)`.
+    pub utilization: f64,
+    /// Mean member availability: `1 − Σ down / (wall × members)` (1.0
+    /// on fault-free runs).
+    pub availability: f64,
+    /// Board energy over the wall: static once + dynamic per member.
+    pub energy_j: f64,
+}
+
+impl ClusterBudget {
+    /// `member_boards()[g]` = the board of fleet position `g` (the
+    /// shape [`crate::serve::faults::expand_boards`] consumes).
+    pub fn member_boards(&self) -> Vec<usize> {
+        self.members.iter().map(|m| m.board).collect()
+    }
+
+    /// Roll the finished report up per board.
+    pub fn board_usage(&self, r: &FleetReport) -> Vec<BoardUsage> {
+        let wall = r.wall_ns;
+        self.boards
+            .iter()
+            .map(|bl| {
+                let mut u = BoardUsage {
+                    admitted: 0,
+                    completed: 0,
+                    busy_ns: 0,
+                    utilization: 0.0,
+                    availability: 1.0,
+                    energy_j: 0.0,
+                };
+                let mut down_ns = 0u64;
+                let mut dynamic_ns_w = 0.0;
+                for &g in &bl.members {
+                    let b = &r.backends[g];
+                    u.admitted += b.admitted;
+                    u.completed += b.stats.completed;
+                    u.busy_ns += b.busy_ns;
+                    dynamic_ns_w +=
+                        (b.point.power_w - bl.hw.power.static_w).max(0.0) * b.busy_ns as f64;
+                    if let Some(f) = &r.faults {
+                        down_ns += f.backends[g].down_ns;
+                    }
+                }
+                let denom = wall as f64 * bl.members.len().max(1) as f64;
+                if wall > 0 {
+                    u.utilization = u.busy_ns as f64 / denom;
+                    u.availability = 1.0 - down_ns as f64 / denom;
+                }
+                u.energy_j = (bl.hw.power.static_w * wall as f64 + dynamic_ns_w) / 1e9;
+                u
+            })
+            .collect()
+    }
+
+    /// The report's `cluster` block (schema `cat-serve-v5`).
+    pub fn to_json(&self, r: &FleetReport) -> Json {
+        let usage = self.board_usage(r);
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("n_boards".to_string(), Json::Num(self.boards.len() as f64));
+        let boards = self
+            .boards
+            .iter()
+            .zip(&usage)
+            .enumerate()
+            .map(|(j, (bl, u))| {
+                let mut bm = BTreeMap::new();
+                bm.insert("id".to_string(), Json::Num(j as f64));
+                bm.insert("hw".to_string(), Json::Str(bl.hw.name.clone()));
+                bm.insert(
+                    "members".to_string(),
+                    Json::Arr(bl.members.iter().map(|&g| Json::Num(g as f64)).collect()),
+                );
+                bm.insert("net_stretch".to_string(), Json::Num(self.net.members[j].stretch));
+                bm.insert("admitted".to_string(), Json::Num(u.admitted as f64));
+                bm.insert("completed".to_string(), Json::Num(u.completed as f64));
+                bm.insert("busy_ms".to_string(), Json::Num(u.busy_ns as f64 / 1e6));
+                bm.insert("utilization".to_string(), Json::Num(u.utilization));
+                bm.insert("availability".to_string(), Json::Num(u.availability));
+                bm.insert("energy_j".to_string(), Json::Num(u.energy_j));
+                bm.insert("board".to_string(), bl.budget.to_json());
+                Json::Obj(bm)
+            })
+            .collect();
+        m.insert("boards".to_string(), Json::Arr(boards));
+        m.insert("net".to_string(), self.net_json());
+        let members = self
+            .members
+            .iter()
+            .enumerate()
+            .map(|(g, ms)| {
+                let mut mm = BTreeMap::new();
+                mm.insert("backend".to_string(), Json::Num(g as f64));
+                mm.insert("board".to_string(), Json::Num(ms.board as f64));
+                mm.insert("slot".to_string(), Json::Num(ms.slot as f64));
+                mm.insert("throttle".to_string(), Json::Num(ms.throttle));
+                Json::Obj(mm)
+            })
+            .collect();
+        m.insert("members".to_string(), Json::Arr(members));
+        m.insert(
+            "energy_j".to_string(),
+            Json::Num(usage.iter().map(|u| u.energy_j).sum::<f64>()),
+        );
+        Json::Obj(m)
+    }
+
+    /// [`LinkLedger::to_json`] speaks DRAM/PCIe; the cluster net reuses
+    /// that machinery with the switch fabric in the DRAM slot and the
+    /// host NIC in the PCIe slot, so this re-keys the block to say what
+    /// it means (and one member per board, not per backend).
+    fn net_json(&self) -> Json {
+        let demanded = self.net.demanded();
+        let granted = self.net.granted();
+        let pool = |total: f64, dem: f64, grant: f64| {
+            let mut p = BTreeMap::new();
+            p.insert("pool_gbps".to_string(), Json::Num(total));
+            p.insert("demanded_gbps".to_string(), Json::Num(dem));
+            p.insert("granted_gbps".to_string(), Json::Num(grant));
+            p.insert(
+                "oversubscription".to_string(),
+                Json::Num(if total > 0.0 { dem / total } else { 0.0 }),
+            );
+            Json::Obj(p)
+        };
+        let mut m = BTreeMap::new();
+        m.insert(
+            "switch".to_string(),
+            pool(self.net.pools.dram_gbps, demanded.dram_gbps, granted.dram_gbps),
+        );
+        m.insert(
+            "nic".to_string(),
+            pool(self.net.pools.pcie_gbps, demanded.pcie_gbps, granted.pcie_gbps),
+        );
+        m.insert("throttled".to_string(), Json::Bool(self.net.throttled()));
+        let fixed_point = self.net.mode == NegotiationMode::FixedPoint;
+        if fixed_point {
+            m.insert("mode".to_string(), Json::Str(self.net.mode.wire_name().to_string()));
+            m.insert("pessimism".to_string(), Json::Num(self.net.pessimism()));
+        }
+        let boards = self
+            .net
+            .members
+            .iter()
+            .enumerate()
+            .map(|(j, ml)| {
+                let mut bm = BTreeMap::new();
+                bm.insert("board".to_string(), Json::Num(j as f64));
+                // NIC and switch demands are the same host-I/O figure,
+                // so one demand/grant pair per board suffices
+                bm.insert("demand_gbps".to_string(), Json::Num(ml.demand.pcie_gbps));
+                bm.insert("granted_gbps".to_string(), Json::Num(ml.granted.pcie_gbps));
+                bm.insert("stretch".to_string(), Json::Num(ml.stretch));
+                bm.insert("throttle".to_string(), Json::Num(1.0 / ml.stretch));
+                if fixed_point {
+                    bm.insert(
+                        "stretch_single_pass".to_string(),
+                        Json::Num(ml.stretch_single_pass),
+                    );
+                    bm.insert("stretch_fixed_point".to_string(), Json::Num(ml.stretch));
+                }
+                Json::Obj(bm)
+            })
+            .collect();
+        m.insert("boards".to_string(), Json::Arr(boards));
+        Json::Obj(m)
+    }
+}
+
+/// One selected member before global flattening.
+struct Placed {
+    power_w: f64,
+    board: usize,
+    slot: usize,
+    be: Backend,
+    throttle: f64,
+}
+
+/// Map the serving config across the cluster: per-board exploration +
+/// partition, then the inter-board NIC/switch negotiation, then the
+/// flattened power-ranked fleet the admission plane routes over.
+pub fn build_fleet(cfg: &FleetConfig, spec: &ClusterSpec) -> Result<Fleet> {
+    let n_boards = spec.boards.len();
+    if n_boards == 0 {
+        return Err(anyhow!("cluster spec has no boards"));
+    }
+    if !spec.net.is_positive_finite() {
+        return Err(anyhow!(
+            "cluster NIC/switch pools must be positive and finite, got switch {} GB/s / NIC {} \
+             GB/s",
+            spec.net.dram_gbps,
+            spec.net.pcie_gbps
+        ));
+    }
+    if cfg.max_backends < n_boards {
+        return Err(anyhow!(
+            "--cluster with {n_boards} board(s) needs --backends >= {n_boards} (at least one \
+             member per board), got {}",
+            cfg.max_backends
+        ));
+    }
+    // Near-even slot split; earlier boards absorb the remainder.
+    let base = cfg.max_backends / n_boards;
+    let extra = cfg.max_backends % n_boards;
+    // Per-board selection: each SKU explores its own frontier and
+    // partitions it under its own budgets and link pools — mixed racks
+    // deploy genuinely different designs per board.
+    let mut per_board = Vec::with_capacity(n_boards);
+    for (j, board) in spec.boards.iter().enumerate() {
+        let slots = base + usize::from(j < extra);
+        let mut ecfg = dse::ExploreConfig::new(cfg.model.clone(), board.clone());
+        ecfg.sample_budget = cfg.explore_budget;
+        ecfg.seed = cfg.seed;
+        ecfg.slo_ms = Some(cfg.slo_ms);
+        let explored =
+            dse::explore(&ecfg).map_err(|e| anyhow!("cluster board #{j} ({}): {e}", board.name))?;
+        let f = Fleet::select_partitioned_in(
+            &cfg.model,
+            board,
+            &explored,
+            slots,
+            cfg.max_batch,
+            Some(cfg.slo_ms),
+            Some(&board.links()),
+            cfg.link_mode(),
+        )
+        .map_err(|e| anyhow!("cluster board #{j} ({}): {e}", board.name))?;
+        if f.backends.is_empty() {
+            return Err(anyhow!(
+                "cluster board #{j} ({}) contributed no feasible members",
+                board.name
+            ));
+        }
+        let budget = f.budget.clone().expect("partitioned fleets carry their budget");
+        per_board.push((budget, f.backends));
+    }
+    // Inter-board negotiation: a board's demand on the host NIC and the
+    // switch fabric is its members' joint host-I/O appetite (activations
+    // in and out transit both), priced by the same proportional-grant
+    // machinery the intra-board pools use.
+    let board_demands: Vec<LinkDemand> = per_board
+        .iter()
+        .map(|(budget, _)| {
+            let ledger = budget.links.as_ref().expect("cluster boards carry link ledgers");
+            let host: f64 = ledger.members.iter().map(|m| m.demand.pcie_gbps).sum();
+            LinkDemand { dram_gbps: host, pcie_gbps: host }
+        })
+        .collect();
+    let net = negotiate_in(&spec.net, &board_demands, cfg.link_mode());
+    // Combined throttle = intra-board stretch × the board's net stretch.
+    // A board whose net stretch is exactly 1 keeps its already-deployed
+    // members untouched (this is what makes a 1-board cluster
+    // byte-identical to the equivalent --partition run); a stretched
+    // board redeploys each member on the narrower effective slice.
+    let mut flat = Vec::with_capacity(cfg.max_backends);
+    for (j, (budget, backends)) in per_board.iter_mut().enumerate() {
+        let s_net = net.members[j].stretch;
+        let intra: Vec<f64> = budget
+            .links
+            .as_ref()
+            .expect("cluster boards carry link ledgers")
+            .members
+            .iter()
+            .map(|m| m.stretch)
+            .collect();
+        for (slot, be) in backends.drain(..).enumerate() {
+            let throttle = 1.0 / (intra[slot] * s_net);
+            let be = if s_net > 1.0 {
+                let mut nb = Backend::deploy_in_share(
+                    &cfg.model,
+                    &spec.boards[j],
+                    &be.point,
+                    cfg.max_batch,
+                    &budget.shares[slot],
+                    throttle,
+                )
+                .map_err(|e| {
+                    anyhow!(
+                        "deploying cluster member (board #{j} slot {slot}) at throttle \
+                         {throttle:.4}: {e}"
+                    )
+                })?;
+                nb.id = be.id;
+                nb
+            } else {
+                be
+            };
+            flat.push(Placed { power_w: be.power_w(), board: j, slot, be, throttle });
+        }
+    }
+    // Global fleet order: power ascending (the router's cheapest-first
+    // contract), ties broken by (board, slot) for determinism.
+    flat.sort_by(|a, b| {
+        a.power_w.total_cmp(&b.power_w).then(a.board.cmp(&b.board)).then(a.slot.cmp(&b.slot))
+    });
+    let mut backends = Vec::with_capacity(flat.len());
+    let mut members = Vec::with_capacity(flat.len());
+    let mut board_members: Vec<Vec<usize>> = vec![Vec::new(); n_boards];
+    for (gid, p) in flat.into_iter().enumerate() {
+        let mut be = p.be;
+        be.id = gid;
+        board_members[p.board].push(gid);
+        members.push(MemberSlot { board: p.board, slot: p.slot, throttle: p.throttle });
+        backends.push(be);
+    }
+    let boards = per_board
+        .into_iter()
+        .zip(spec.boards.iter())
+        .zip(board_members)
+        .map(|(((budget, _), hw), members)| BoardLedger { hw: hw.clone(), budget, members })
+        .collect();
+    let cluster = ClusterBudget { name: spec.name(), boards, net, members };
+    Ok(Fleet { backends, budget: None, cluster: Some(cluster) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn parse(src: &str) -> Json {
+        Json::parse(src).unwrap()
+    }
+
+    fn two_board_spec() -> ClusterSpec {
+        let j = parse(r#"{"boards": ["vck5000", "vck5000-limited-64"]}"#);
+        ClusterSpec::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn spec_parses_presets_defaults_and_rejects_bad_pools() {
+        let s = two_board_spec();
+        assert_eq!(s.boards.len(), 2);
+        assert_eq!(s.boards[1].total_aie, 64);
+        assert_eq!(s.net.pcie_gbps, 12.5, "NIC defaults to 100 GbE");
+        assert_eq!(s.net.dram_gbps, 25.0, "switch defaults to 200 GbE");
+        assert_eq!(s.name(), "vck5000+vck5000-limited-64");
+
+        let s = ClusterSpec::from_json(&parse(
+            r#"{"boards": ["vck5000"], "nic_gbps": 4.0, "switch_gbps": 8.0}"#,
+        ))
+        .unwrap();
+        assert_eq!(s.net.pcie_gbps, 4.0);
+        assert_eq!(s.net.dram_gbps, 8.0);
+
+        for bad in [
+            r#"{}"#,
+            r#"{"boards": []}"#,
+            r#"{"boards": ["no-such-board"]}"#,
+            r#"{"boards": [7]}"#,
+            r#"{"boards": ["vck5000"], "nic_gbps": 0}"#,
+            r#"{"boards": ["vck5000"], "switch_gbps": -1}"#,
+        ] {
+            assert!(ClusterSpec::from_json(&parse(bad)).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn build_splits_slots_and_flattens_power_ascending() {
+        let model = ModelConfig::bert_base();
+        let spec = two_board_spec();
+        let mut cfg = FleetConfig::new(model, spec.boards[0].clone());
+        cfg.max_backends = 3;
+        cfg.explore_budget = Some(64);
+        cfg.slo_ms = 80.0;
+        cfg.seed = 7;
+        cfg.cluster = Some(spec);
+        let fleet = build_fleet(&cfg, cfg.cluster.as_ref().unwrap()).unwrap();
+        let cb = fleet.cluster.as_ref().expect("cluster fleets carry the ledger");
+        assert_eq!(cb.boards.len(), 2);
+        // 3 members over 2 boards: the first board is asked for the
+        // remainder (each board may degrade to fewer if its own silicon
+        // can't hold the request, but never to zero)
+        assert_eq!(cb.boards[0].budget.stats.requested, 2);
+        assert_eq!(cb.boards[1].budget.stats.requested, 1);
+        assert!(!cb.boards[0].members.is_empty());
+        assert!(!cb.boards[1].members.is_empty());
+        assert_eq!(
+            cb.boards.iter().map(|b| b.members.len()).sum::<usize>(),
+            fleet.len(),
+            "every member lives on exactly one board"
+        );
+        assert_eq!(cb.members.len(), fleet.len());
+        assert_eq!(cb.net.members.len(), 2, "one net member per board");
+        // ids are positions, power ascending, and placement is a bijection
+        let mut seen = vec![false; fleet.len()];
+        for (g, be) in fleet.backends.iter().enumerate() {
+            assert_eq!(be.id, g);
+            assert!(cb.boards[cb.members[g].board].members.contains(&g));
+            seen[g] = true;
+            if g > 0 {
+                assert!(
+                    fleet.backends[g - 1].power_w() <= be.power_w(),
+                    "fleet must stay power-ascending for cheapest-first routing"
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // every member's deployed throttle folds intra × net stretch
+        for (g, ms) in cb.members.iter().enumerate() {
+            let intra = cb.boards[ms.board].budget.links.as_ref().unwrap().members[ms.slot]
+                .stretch;
+            let s_net = cb.net.members[ms.board].stretch;
+            assert!(
+                (ms.throttle * intra * s_net - 1.0).abs() < 1e-9,
+                "member {g}: throttle {} vs intra {intra} × net {s_net}",
+                ms.throttle
+            );
+        }
+    }
+
+    #[test]
+    fn one_board_needs_one_backend_and_tiny_fleets_error() {
+        let model = ModelConfig::bert_base();
+        let spec = two_board_spec();
+        let mut cfg = FleetConfig::new(model, spec.boards[0].clone());
+        cfg.max_backends = 1;
+        let err = build_fleet(&cfg, &spec).unwrap_err().to_string();
+        assert!(err.contains("needs --backends >= 2"), "got: {err}");
+    }
+}

@@ -156,9 +156,14 @@ pub fn explore(
 /// failed backends drop out of admission, their work is re-admitted on
 /// the survivors, partitioned fleets re-negotiate the shared links over
 /// the survivors, and the report switches to schema `cat-serve-v4` with
-/// a `faults` block.  Fully deterministic for a fixed `cfg.seed` — the
-/// report's JSON is byte-identical across runs and thread counts, with
-/// or without faults.
+/// a `faults` block.  When `cfg.cluster` is set, the family spreads
+/// across EVERY board of the multi-board spec behind the same admission
+/// plane (schema `cat-serve-v5` with a `cluster` ledger,
+/// [`cluster`](crate::cluster)).  Fully deterministic for a fixed
+/// `cfg.seed` — the report's JSON is byte-identical across runs and
+/// thread counts, with or without faults.  Delegates to
+/// [`serve::run`](crate::serve::run), the consolidated serve entry
+/// point.
 pub fn serve_fleet(cfg: &crate::serve::FleetConfig) -> Result<crate::serve::FleetReport> {
     crate::serve::serve_fleet(cfg)
 }

@@ -18,6 +18,9 @@
 //! * [`coordinator`] — HOST-side request batching over an EDPU pool;
 //! * [`serve`] — SLO-aware fleet serving across an explore-derived
 //!   accelerator family (virtual-clock routing + admission control);
+//! * [`cluster`] — multi-board cluster serving: the family spread over a
+//!   rack of mixed SKUs behind one admission plane, with the inter-board
+//!   NIC/switch pools negotiated like on-board links;
 //! * [`obs`] — zero-cost-when-off observability: virtual-clock traces
 //!   (Chrome trace-event JSON for Perfetto) + `cat-obs-v1` metrics;
 //! * [`report`] — renderers for every paper table/figure.
@@ -27,6 +30,7 @@
 
 pub mod arch;
 pub mod baselines;
+pub mod cluster;
 pub mod codegen;
 pub mod config;
 pub mod experiments;

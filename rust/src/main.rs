@@ -24,7 +24,7 @@ use cat::util::cli;
 const VALUED: &[&str] = &[
     "model", "hw", "batch", "requests", "layers", "workers", "variant", "artifacts", "seed",
     "max-cores", "slo-ms", "budget", "rps", "backends", "queue-cap", "dram-gbps", "pcie-gbps",
-    "faults", "mtbf-s", "mttr-s", "max-retries", "trace", "metrics",
+    "faults", "mtbf-s", "mttr-s", "max-retries", "cluster", "trace", "metrics",
 ];
 
 fn main() {
@@ -79,7 +79,7 @@ subcommands:
         [--seed S] [--partition] [--dram-gbps G] [--pcie-gbps G]
         [--no-links] [--links-fixed-point]
         [--faults <spec.json> | --mtbf-s <s> --mttr-s <s>]
-        [--max-retries R] [--trace <f>]
+        [--max-retries R] [--cluster <boards.json>] [--trace <f>]
         [--metrics <f>] [--json]            SLO-aware fleet serving across
                                             an explore-derived accelerator
                                             family (virtual clock);
@@ -116,6 +116,25 @@ subcommands:
                                             switches to schema
                                             cat-serve-v4 with a faults
                                             block;
+                                            --cluster spreads the family
+                                            across EVERY board of a
+                                            multi-board spec (preset
+                                            names or inline hardware
+                                            objects, plus nic_gbps /
+                                            switch_gbps pools) behind one
+                                            admission plane: each board
+                                            is partitioned internally,
+                                            inter-board NIC/switch
+                                            bandwidth is negotiated like
+                                            the on-board links, fault
+                                            specs gain a board_crash
+                                            kind, and the report
+                                            switches to schema
+                                            cat-serve-v5 with a cluster
+                                            ledger (conflicts with --hw,
+                                            --partition, and the link
+                                            pool flags; --backends must
+                                            be >= the board count);
                                             --trace writes the request
                                             lifecycle on the virtual clock
                                             as Chrome trace-event JSON
@@ -434,133 +453,38 @@ fn cmd_serve(args: &cli::Args) -> Result<()> {
     Ok(())
 }
 
+/// Lift the raw CLI surface into the typed [`cat::serve::ServeArgs`]
+/// bundle.  No parsing or cross-flag rules here —
+/// [`cat::serve::FleetConfig::from_args`] owns all of that, so the CLI
+/// and tests validate identically.
+fn serve_args_of(args: &cli::Args) -> cat::serve::ServeArgs {
+    let s = |k: &str| args.opt(k).map(str::to_string);
+    cat::serve::ServeArgs {
+        model: s("model"),
+        hw: s("hw"),
+        rps: s("rps"),
+        slo_ms: s("slo-ms"),
+        requests: s("requests"),
+        backends: s("backends"),
+        batch: s("batch"),
+        queue_cap: s("queue-cap"),
+        seed: s("seed"),
+        budget: s("budget"),
+        partition: args.flag("partition"),
+        no_links: args.flag("no-links"),
+        links_fixed_point: args.flag("links-fixed-point"),
+        dram_gbps: s("dram-gbps"),
+        pcie_gbps: s("pcie-gbps"),
+        cluster: s("cluster"),
+        faults: s("faults"),
+        mtbf_s: s("mtbf-s"),
+        mttr_s: s("mttr-s"),
+        max_retries: s("max-retries"),
+    }
+}
+
 fn cmd_serve_fleet(args: &cli::Args) -> Result<()> {
-    let model = model_of(args)?;
-    let hw = hw_of(args)?;
-    let mut cfg = cat::serve::FleetConfig::new(model, hw);
-    cfg.rps = args.opt_f64("rps", cfg.rps);
-    if cfg.rps <= 0.0 || cfg.rps.is_nan() {
-        return Err(anyhow!("--rps must be positive, got {}", cfg.rps));
-    }
-    cfg.slo_ms = args.opt_f64("slo-ms", cfg.slo_ms);
-    if cfg.slo_ms <= 0.0 || cfg.slo_ms.is_nan() {
-        return Err(anyhow!("--slo-ms must be positive, got {}", cfg.slo_ms));
-    }
-    cfg.n_requests = args.opt_usize("requests", cfg.n_requests);
-    cfg.max_backends = args.opt_usize("backends", cfg.max_backends);
-    if cfg.max_backends == 0 {
-        return Err(anyhow!("--backends must be positive"));
-    }
-    cfg.max_batch = args.opt_usize("batch", cfg.max_batch);
-    if cfg.max_batch == 0 {
-        return Err(anyhow!("--batch must be positive"));
-    }
-    cfg.queue_cap = args.opt_usize("queue-cap", cfg.queue_cap);
-    if cfg.queue_cap == 0 {
-        return Err(anyhow!("--queue-cap must be positive (0 would shed everything)"));
-    }
-    cfg.partition = args.flag("partition");
-    let link_flags = args.flag("no-links")
-        || args.flag("links-fixed-point")
-        || args.opt("dram-gbps").is_some()
-        || args.opt("pcie-gbps").is_some();
-    if link_flags && !cfg.partition {
-        return Err(anyhow!(
-            "--dram-gbps/--pcie-gbps/--no-links/--links-fixed-point require --partition: \
-             the shared link pools only exist when backends co-reside on one board (a \
-             one-board-per-member fleet owns its links outright)"
-        ));
-    }
-    if args.flag("no-links") {
-        cfg.links = None;
-    }
-    if args.flag("links-fixed-point") {
-        if cfg.links.is_none() {
-            return Err(anyhow!(
-                "--links-fixed-point conflicts with --no-links (no contention model to \
-                 refine)"
-            ));
-        }
-        cfg.links_fixed_point = true;
-    }
-    let pool_override = |args: &cli::Args, flag: &str| -> Result<Option<f64>> {
-        match args.opt(flag) {
-            None => Ok(None),
-            Some(s) => s
-                .parse::<f64>()
-                .ok()
-                .filter(|v| v.is_finite() && *v > 0.0)
-                .map(Some)
-                .ok_or_else(|| anyhow!("--{flag} expects a positive number, got '{s}'")),
-        }
-    };
-    let dram = pool_override(args, "dram-gbps")?;
-    let pcie = pool_override(args, "pcie-gbps")?;
-    if dram.is_some() || pcie.is_some() {
-        let links = cfg.links.as_mut().ok_or_else(|| {
-            anyhow!("--dram-gbps/--pcie-gbps conflict with --no-links (no pools to override)")
-        })?;
-        if let Some(v) = dram {
-            links.dram_gbps = v;
-        }
-        if let Some(v) = pcie {
-            links.pcie_gbps = v;
-        }
-    }
-    if let Some(s) = args.opt("seed") {
-        cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
-    }
-    if let Some(s) = args.opt("budget") {
-        cfg.explore_budget = if s == "all" {
-            None
-        } else {
-            match s.parse() {
-                Ok(k) if k > 0 => Some(k),
-                _ => {
-                    return Err(anyhow!(
-                        "--budget expects a positive integer or 'all', got '{s}'"
-                    ))
-                }
-            }
-        };
-    }
-    let mtbf = args.opt("mtbf-s");
-    let mttr = args.opt("mttr-s");
-    if let Some(path) = args.opt("faults") {
-        if mtbf.is_some() || mttr.is_some() {
-            return Err(anyhow!(
-                "--faults (scripted schedule) and --mtbf-s/--mttr-s (random faults) are \
-                 mutually exclusive"
-            ));
-        }
-        let src = std::fs::read_to_string(path)
-            .map_err(|e| anyhow!("reading fault spec '{path}': {e}"))?;
-        let j = cat::util::json::Json::parse(&src)
-            .map_err(|e| anyhow!("parsing fault spec '{path}': {e}"))?;
-        cfg.faults = Some(cat::serve::FaultPolicy::Schedule(
-            cat::serve::FaultSchedule::from_json(&j)?,
-        ));
-    } else {
-        match (mtbf, mttr) {
-            (None, None) => {}
-            (Some(b), Some(r)) => {
-                let parse_s = |flag: &str, s: &str| -> Result<f64> {
-                    s.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0).ok_or_else(
-                        || anyhow!("--{flag} expects a positive number of seconds, got '{s}'"),
-                    )
-                };
-                cfg.faults = Some(cat::serve::FaultPolicy::Random {
-                    mtbf_s: parse_s("mtbf-s", b)?,
-                    mttr_s: parse_s("mttr-s", r)?,
-                });
-            }
-            _ => return Err(anyhow!("--mtbf-s and --mttr-s must be given together")),
-        }
-    }
-    if let Some(s) = args.opt("max-retries") {
-        cfg.max_retries =
-            s.parse().map_err(|_| anyhow!("--max-retries expects an integer, got '{s}'"))?;
-    }
+    let cfg = cat::serve::FleetConfig::from_args(&serve_args_of(args))?;
     let trace_on = args.opt("trace").is_some();
     let metrics_on = args.opt("metrics").is_some();
     if trace_on || metrics_on {

@@ -396,6 +396,44 @@ pub fn serve_fleet(r: &crate::serve::FleetReport) -> String {
             }
         }
     }
+    if let Some(c) = &r.cluster {
+        let usage = c.board_usage(r);
+        let total_j: f64 = usage.iter().map(|u| u.energy_j).sum();
+        out.push_str(&format!(
+            "  cluster {}: {} board(s), {} member(s), {:.1} J over the run\n",
+            c.name,
+            c.boards.len(),
+            c.members.len(),
+            total_j,
+        ));
+        for (j, (bl, u)) in c.boards.iter().zip(&usage).enumerate() {
+            out.push_str(&format!(
+                "  board {j} ({}): members {:?}, {} admitted, {} completed, util {:.1}%, \
+                 availability {:.2}%, {:.1} J, net stretch x{:.2}\n",
+                bl.hw.name,
+                bl.members,
+                u.admitted,
+                u.completed,
+                u.utilization * 100.0,
+                u.availability * 100.0,
+                u.energy_j,
+                c.net.members[j].stretch,
+            ));
+        }
+        let dem = c.net.demanded();
+        let sub = |d: f64, pool: f64| if pool > 0.0 { d / pool * 100.0 } else { 0.0 };
+        out.push_str(&format!(
+            "  net: switch {:.1}/{:.1} GB/s demanded ({:.0}% of pool), NIC {:.2}/{:.1} GB/s \
+             ({:.0}%){}\n",
+            dem.dram_gbps,
+            c.net.pools.dram_gbps,
+            sub(dem.dram_gbps, c.net.pools.dram_gbps),
+            dem.pcie_gbps,
+            c.net.pools.pcie_gbps,
+            sub(dem.pcie_gbps, c.net.pools.pcie_gbps),
+            if c.net.throttled() { " — oversubscribed, boards throttled" } else { "" },
+        ));
+    }
     if let Some(f) = &r.faults {
         let injected = f.timeline.iter().filter(|(_, applied)| *applied).count();
         out.push_str(&format!(

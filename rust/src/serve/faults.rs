@@ -17,7 +17,11 @@
 //!   the SLO);
 //! * **link_degrade** — the shared DRAM/PCIe pools scale down from `at`
 //!   on (partitioned fleets with the link model only): the loop
-//!   re-negotiates every member's grant against the shrunken pools.
+//!   re-negotiates every member's grant against the shrunken pools;
+//! * **board_crash** — every backend on one cluster board dies at once
+//!   (`--cluster` only): expanded into per-member crashes before the
+//!   loop ([`expand_boards`]), so drain/re-admit/renegotiate handle a
+//!   whole-board outage exactly like N simultaneous backend crashes.
 //!
 //! Schedules come from a `--faults <spec.json>` file or are generated
 //! from `--mtbf-s`/`--mttr-s` by [`FaultSchedule::random`] — seeded and
@@ -49,6 +53,11 @@ pub enum FaultKind {
     /// The shared link pools scale to `dram_scale`/`pcie_scale` of their
     /// current width from this point on (partition + link model only).
     LinkDegrade { dram_scale: f64, pcie_scale: f64 },
+    /// Every backend on cluster board `board` crashes at once
+    /// (`--cluster` only).  Never reaches the serving loop: it is
+    /// expanded into per-member [`FaultKind::Crash`] events first
+    /// ([`expand_boards`]).
+    BoardCrash { board: usize, down_ns: u64 },
 }
 
 impl FaultKind {
@@ -58,6 +67,7 @@ impl FaultKind {
             FaultKind::Stall { .. } => "stall",
             FaultKind::Slowdown { .. } => "slowdown",
             FaultKind::LinkDegrade { .. } => "link_degrade",
+            FaultKind::BoardCrash { .. } => "board_crash",
         }
     }
 
@@ -67,7 +77,7 @@ impl FaultKind {
             FaultKind::Crash { backend, .. }
             | FaultKind::Stall { backend, .. }
             | FaultKind::Slowdown { backend, .. } => Some(*backend),
-            FaultKind::LinkDegrade { .. } => None,
+            FaultKind::LinkDegrade { .. } | FaultKind::BoardCrash { .. } => None,
         }
     }
 
@@ -91,6 +101,11 @@ impl FaultKind {
             FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
                 args.push(("dram_scale".to_string(), Json::Num(dram_scale)));
                 args.push(("pcie_scale".to_string(), Json::Num(pcie_scale)));
+            }
+            FaultKind::BoardCrash { board, down_ns } => {
+                args.push(("board".to_string(), Json::Num(board as f64)));
+                let ms = down_ns.min(DOWN_CAP_NS) as f64 / 1e6;
+                args.push(("down_ms".to_string(), Json::Num(ms)));
             }
         }
         args
@@ -125,6 +140,10 @@ impl FaultEvent {
             FaultKind::LinkDegrade { dram_scale, pcie_scale } => {
                 m.insert("dram_scale".into(), Json::Num(dram_scale));
                 m.insert("pcie_scale".into(), Json::Num(pcie_scale));
+            }
+            FaultKind::BoardCrash { board, down_ns } => {
+                m.insert("board".into(), Json::Num(board as f64));
+                m.insert("down_ms".into(), Json::Num(down_ns.min(DOWN_CAP_NS) as f64 / 1e6));
             }
         }
         m.insert("applied".into(), Json::Bool(applied));
@@ -230,9 +249,17 @@ impl FaultSchedule {
                     dram_scale: scale("dram_scale")?,
                     pcie_scale: scale("pcie_scale")?,
                 },
+                Some("board_crash") => {
+                    let board = e
+                        .get("board")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| ctx("'board' must be a non-negative integer".into()))?;
+                    FaultKind::BoardCrash { board, down_ns: down_ns(false)? }
+                }
                 other => {
                     return Err(ctx(format!(
-                        "'kind' must be crash|stall|slowdown|link_degrade, got {other:?}"
+                        "'kind' must be crash|stall|slowdown|link_degrade|board_crash, got \
+                         {other:?}"
                     )))
                 }
             };
@@ -292,26 +319,80 @@ impl FaultSchedule {
         self.events.sort_by_key(|e| e.at_ns);
     }
 
-    /// Validate against the actual fleet: backend indices in range, and
-    /// link degradation only when the fleet carries a link ledger.
-    pub fn validate(&self, n_backends: usize, has_links: bool) -> Result<()> {
+    /// Validate against the actual fleet: backend indices in range, link
+    /// degradation only when the fleet carries a link ledger, and board
+    /// crashes only when there IS a board dimension (`n_boards` =
+    /// cluster size, `None` outside `--cluster`).
+    pub fn validate(
+        &self,
+        n_backends: usize,
+        has_links: bool,
+        n_boards: Option<usize>,
+    ) -> Result<()> {
         for (i, e) in self.events.iter().enumerate() {
-            if let Some(b) = e.kind.backend() {
-                if b >= n_backends {
-                    return Err(anyhow!(
-                        "fault event #{i} targets backend {b}, but the fleet has only \
-                         {n_backends} backend(s)"
-                    ));
+            match e.kind {
+                FaultKind::Crash { backend, .. }
+                | FaultKind::Stall { backend, .. }
+                | FaultKind::Slowdown { backend, .. } => {
+                    if backend >= n_backends {
+                        return Err(anyhow!(
+                            "fault event #{i} targets backend {backend}, but the fleet has \
+                             only {n_backends} backend(s)"
+                        ));
+                    }
                 }
-            } else if !has_links {
-                return Err(anyhow!(
-                    "fault event #{i} is a link_degrade, which needs --partition with the \
-                     shared link model enabled (the pools don't exist otherwise)"
-                ));
+                FaultKind::LinkDegrade { .. } => {
+                    if !has_links {
+                        return Err(anyhow!(
+                            "fault event #{i} is a link_degrade, which needs --partition with \
+                             the shared link model enabled (the pools don't exist otherwise)"
+                        ));
+                    }
+                }
+                FaultKind::BoardCrash { board, .. } => match n_boards {
+                    None => {
+                        return Err(anyhow!(
+                            "fault event #{i} is a board_crash, which needs --cluster (there \
+                             is no board dimension otherwise)"
+                        ))
+                    }
+                    Some(n) if board >= n => {
+                        return Err(anyhow!(
+                            "fault event #{i} targets board {board}, but the cluster has only \
+                             {n} board(s)"
+                        ))
+                    }
+                    Some(_) => {}
+                },
             }
         }
         Ok(())
     }
+}
+
+/// Expand every board crash into one member crash per backend living on
+/// that board (`member_board[m]` = the board of fleet position `m`), at
+/// the same instant, in fleet order — so routing, draining, recovery,
+/// and the report see only ordinary per-backend events.  Everything else
+/// passes through; the result is re-sorted (stable, so equal-time spec
+/// order survives).
+pub fn expand_boards(events: &[FaultEvent], member_board: &[usize]) -> Vec<FaultEvent> {
+    let mut out = Vec::with_capacity(events.len());
+    for e in events {
+        match e.kind {
+            FaultKind::BoardCrash { board, down_ns } => {
+                for (m, &bj) in member_board.iter().enumerate() {
+                    if bj == board {
+                        let kind = FaultKind::Crash { backend: m, down_ns };
+                        out.push(FaultEvent { at_ns: e.at_ns, kind });
+                    }
+                }
+            }
+            _ => out.push(*e),
+        }
+    }
+    out.sort_by_key(|e| e.at_ns);
+    out
 }
 
 /// Per-backend fault accounting for the report.
@@ -480,13 +561,58 @@ mod tests {
     #[test]
     fn validate_checks_fleet_shape() {
         let s = parse(r#"[{"at_ms": 1, "kind": "crash", "backend": 2}]"#).unwrap();
-        assert!(s.validate(3, false).is_ok());
-        assert!(s.validate(2, false).is_err(), "backend 2 of a 2-backend fleet");
+        assert!(s.validate(3, false, None).is_ok());
+        assert!(s.validate(2, false, None).is_err(), "backend 2 of a 2-backend fleet");
         let l =
             parse(r#"[{"at_ms": 1, "kind": "link_degrade", "dram_scale": 0.5, "pcie_scale": 1}]"#)
                 .unwrap();
-        assert!(l.validate(2, true).is_ok());
-        assert!(l.validate(2, false).is_err(), "link_degrade without the link model");
+        assert!(l.validate(2, true, None).is_ok());
+        assert!(l.validate(2, false, None).is_err(), "link_degrade without the link model");
+    }
+
+    #[test]
+    fn board_crash_parses_validates_and_expands() {
+        let s = parse(r#"[{"at_ms": 40, "kind": "board_crash", "board": 0, "down_ms": 200}]"#)
+            .unwrap();
+        assert_eq!(s.events[0].kind, FaultKind::BoardCrash { board: 0, down_ns: 200_000_000 });
+        assert_eq!(s.events[0].kind.backend(), None, "a board crash is not one backend's");
+        // like a crash, omitting down_ms means the board never recovers
+        let forever = parse(r#"[{"at_ms": 1, "kind": "board_crash", "board": 1}]"#).unwrap();
+        assert_eq!(
+            forever.events[0].kind,
+            FaultKind::BoardCrash { board: 1, down_ns: DOWN_CAP_NS }
+        );
+        assert!(parse(r#"[{"at_ms": 1, "kind": "board_crash"}]"#).is_err(), "missing board");
+        // needs --cluster, and the board must exist
+        assert!(s.validate(8, false, None).is_err());
+        assert!(s.validate(8, false, Some(1)).is_ok());
+        assert!(forever.validate(8, false, Some(1)).is_err(), "board 1 of a 1-board cluster");
+        // expansion: members 0 and 2 live on board 0, member 1 on board 1
+        let out = expand_boards(&s.events, &[0, 1, 0]);
+        let crash = |backend: usize| FaultKind::Crash { backend, down_ns: 200_000_000 };
+        assert_eq!(
+            out,
+            vec![
+                FaultEvent { at_ns: 40_000_000, kind: crash(0) },
+                FaultEvent { at_ns: 40_000_000, kind: crash(2) },
+            ]
+        );
+        // non-board events pass through untouched, and order stays sorted
+        let mixed = parse(
+            r#"[{"at_ms": 50, "kind": "stall", "backend": 1, "down_ms": 5},
+                {"at_ms": 40, "kind": "board_crash", "board": 1, "down_ms": 200}]"#,
+        )
+        .unwrap();
+        let out = expand_boards(&mixed.events, &[0, 1, 0]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].kind, FaultKind::Crash { backend: 1, down_ns: 200_000_000 });
+        assert_eq!(out[1].kind, FaultKind::Stall { backend: 1, down_ns: 5_000_000 });
+        // the report json carries the board, not a backend
+        let j = s.events[0].to_json(true);
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("board_crash"));
+        assert_eq!(j.get("board").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("down_ms").unwrap().as_f64(), Some(200.0));
+        assert!(j.get("backend").is_none());
     }
 
     #[test]
@@ -510,11 +636,11 @@ mod tests {
                     assert!(down_ns >= 1);
                     assert!((1.25..2.0).contains(&factor));
                 }
-                FaultKind::LinkDegrade { .. } => unreachable!(),
+                FaultKind::LinkDegrade { .. } | FaultKind::BoardCrash { .. } => unreachable!(),
             }
         }
         // validates against any fleet of >= 3 backends, link model or not
-        assert!(a.validate(3, false).is_ok());
+        assert!(a.validate(3, false, None).is_ok());
     }
 
     #[test]

@@ -228,6 +228,12 @@ pub struct Fleet {
     /// schema can never disagree with how the backends were actually
     /// deployed.
     pub budget: Option<FleetBudget>,
+    /// Cluster ledger when this fleet was spread across a multi-board
+    /// spec by [`crate::cluster::build_fleet`]; `None` = a single-board
+    /// (or one-board-per-member) fleet.  Like [`Fleet::budget`], it
+    /// travels with the fleet so serving, energy accounting, and the
+    /// report schema always agree with the deployment.
+    pub cluster: Option<crate::cluster::ClusterBudget>,
 }
 
 /// The shared frontier ranking both selection modes start from: power
@@ -279,7 +285,7 @@ impl Fleet {
             b.id = id;
             backends.push(b);
         }
-        Ok(Fleet { backends, budget: None })
+        Ok(Fleet { backends, budget: None, cluster: None })
     }
 
     /// Select the best frontier subset that **co-resides on one board**
@@ -417,7 +423,7 @@ impl Fleet {
             b.id = id;
             backends.push(b);
         }
-        Ok(Fleet { backends, budget: Some(budget) })
+        Ok(Fleet { backends, budget: Some(budget), cluster: None })
     }
 
     pub fn len(&self) -> usize {

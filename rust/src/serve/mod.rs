@@ -139,6 +139,15 @@ pub struct FleetConfig {
     /// How many times an orphaned rider may be re-admitted after a
     /// fault before it is shed with [`ShedReason::RetryExhausted`].
     pub max_retries: usize,
+    /// Multi-board cluster serving (`--cluster <boards.json>`): deploy
+    /// the family across every board in the spec — each internally
+    /// partitioned — behind one admission plane, with the inter-board
+    /// NIC/switch pools negotiated like the on-board links
+    /// ([`crate::cluster`]).  `Some` switches the report to schema
+    /// `cat-serve-v5` with a `cluster` ledger; `None` keeps every
+    /// single-board path byte-identical.  Supersedes `partition`,
+    /// `links`, and `hw` (board SKUs come from the spec).
+    pub cluster: Option<crate::cluster::ClusterSpec>,
 }
 
 impl FleetConfig {
@@ -161,6 +170,25 @@ impl FleetConfig {
             links_fixed_point: false,
             faults: None,
             max_retries: 3,
+            cluster: None,
+        }
+    }
+
+    /// The report schema this config produces — THE flag→schema
+    /// decision, in precedence order (pinned by a table test below):
+    /// `--cluster` ⇒ v5 (faults/links ride inside it), else faults ⇒
+    /// v4, else partition+links ⇒ v3, else partition ⇒ v2, else v1.
+    pub fn schema(&self) -> &'static str {
+        if self.cluster.is_some() {
+            "cat-serve-v5"
+        } else if self.faults.is_some() {
+            "cat-serve-v4"
+        } else if self.partition && self.links.is_some() {
+            "cat-serve-v3"
+        } else if self.partition {
+            "cat-serve-v2"
+        } else {
+            "cat-serve-v1"
         }
     }
 
@@ -189,6 +217,221 @@ impl FleetConfig {
             links::NegotiationMode::SinglePass
         }
     }
+
+    /// THE `cat serve --rps` flag surface → config conversion: every
+    /// flag-dependency rule (`--dram-gbps`/`--pcie-gbps`/`--no-links`
+    /// require `--partition`, `--links-fixed-point` needs a link model,
+    /// `--faults` vs `--mtbf-s`/`--mttr-s` exclusivity, the `--cluster`
+    /// conflicts) lives here, not strewn through `main.rs` — so the CLI
+    /// and tests validate identically.  Raw strings in, typed config or
+    /// the first offending flag's error out.
+    pub fn from_args(args: &ServeArgs) -> Result<FleetConfig> {
+        let parse_f64 = |flag: &str, s: &str| -> Result<f64> {
+            s.parse::<f64>().map_err(|_| anyhow!("--{flag} expects a number, got '{s}'"))
+        };
+        let parse_usize = |flag: &str, s: &str| -> Result<usize> {
+            s.parse::<usize>().map_err(|_| anyhow!("--{flag} expects an integer, got '{s}'"))
+        };
+        let model = ModelConfig::resolve(args.model.as_deref().unwrap_or("bert-base"))?;
+        // --cluster conflicts are checked before the spec file is even
+        // read: a contradictory command line should not depend on disk
+        let cluster = match args.cluster.as_deref() {
+            None => None,
+            Some(path) => {
+                if args.hw.is_some() {
+                    return Err(anyhow!(
+                        "--hw conflicts with --cluster (the board SKUs come from the cluster \
+                         spec)"
+                    ));
+                }
+                if args.partition {
+                    return Err(anyhow!(
+                        "--cluster conflicts with --partition: every cluster board is \
+                         partitioned internally, and the cluster spec already names the boards"
+                    ));
+                }
+                if args.no_links || args.dram_gbps.is_some() || args.pcie_gbps.is_some() {
+                    return Err(anyhow!(
+                        "--dram-gbps/--pcie-gbps/--no-links conflict with --cluster: each \
+                         board brings its own DRAM/PCIe pools, and the cluster spec sets the \
+                         NIC/switch pools"
+                    ));
+                }
+                let src = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("reading cluster spec '{path}': {e}"))?;
+                let j = Json::parse(&src)
+                    .map_err(|e| anyhow!("parsing cluster spec '{path}': {e}"))?;
+                Some(crate::cluster::ClusterSpec::from_json(&j)?)
+            }
+        };
+        let hw = match &cluster {
+            // board 0 stands in for the config-level `hw` (labels,
+            // batch-wait defaults); deployment reads the spec per board
+            Some(spec) => spec.boards[0].clone(),
+            None => HardwareConfig::resolve(args.hw.as_deref().unwrap_or("vck5000"))?,
+        };
+        let mut cfg = FleetConfig::new(model, hw);
+        if let Some(s) = &args.rps {
+            cfg.rps = parse_f64("rps", s)?;
+        }
+        if cfg.rps <= 0.0 || cfg.rps.is_nan() {
+            return Err(anyhow!("--rps must be positive, got {}", cfg.rps));
+        }
+        if let Some(s) = &args.slo_ms {
+            cfg.slo_ms = parse_f64("slo-ms", s)?;
+        }
+        if cfg.slo_ms <= 0.0 || cfg.slo_ms.is_nan() {
+            return Err(anyhow!("--slo-ms must be positive, got {}", cfg.slo_ms));
+        }
+        if let Some(s) = &args.requests {
+            cfg.n_requests = parse_usize("requests", s)?;
+        }
+        if let Some(s) = &args.backends {
+            cfg.max_backends = parse_usize("backends", s)?;
+        }
+        if cfg.max_backends == 0 {
+            return Err(anyhow!("--backends must be positive"));
+        }
+        if let Some(s) = &args.batch {
+            cfg.max_batch = parse_usize("batch", s)?;
+        }
+        if cfg.max_batch == 0 {
+            return Err(anyhow!("--batch must be positive"));
+        }
+        if let Some(s) = &args.queue_cap {
+            cfg.queue_cap = parse_usize("queue-cap", s)?;
+        }
+        if cfg.queue_cap == 0 {
+            return Err(anyhow!("--queue-cap must be positive (0 would shed everything)"));
+        }
+        cfg.partition = args.partition;
+        let link_flags = args.no_links
+            || args.links_fixed_point
+            || args.dram_gbps.is_some()
+            || args.pcie_gbps.is_some();
+        if link_flags && !cfg.partition && cluster.is_none() {
+            return Err(anyhow!(
+                "--dram-gbps/--pcie-gbps/--no-links/--links-fixed-point require --partition: \
+                 the shared link pools only exist when backends co-reside on one board (a \
+                 one-board-per-member fleet owns its links outright)"
+            ));
+        }
+        if args.no_links {
+            cfg.links = None;
+        }
+        if args.links_fixed_point {
+            if cfg.links.is_none() {
+                return Err(anyhow!(
+                    "--links-fixed-point conflicts with --no-links (no contention model to \
+                     refine)"
+                ));
+            }
+            cfg.links_fixed_point = true;
+        }
+        let pool_override = |flag: &str, s: &Option<String>| -> Result<Option<f64>> {
+            match s.as_deref() {
+                None => Ok(None),
+                Some(s) => s
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|v| v.is_finite() && *v > 0.0)
+                    .map(Some)
+                    .ok_or_else(|| anyhow!("--{flag} expects a positive number, got '{s}'")),
+            }
+        };
+        let dram = pool_override("dram-gbps", &args.dram_gbps)?;
+        let pcie = pool_override("pcie-gbps", &args.pcie_gbps)?;
+        if dram.is_some() || pcie.is_some() {
+            let links = cfg.links.as_mut().ok_or_else(|| {
+                anyhow!("--dram-gbps/--pcie-gbps conflict with --no-links (no pools to override)")
+            })?;
+            if let Some(v) = dram {
+                links.dram_gbps = v;
+            }
+            if let Some(v) = pcie {
+                links.pcie_gbps = v;
+            }
+        }
+        if let Some(s) = &args.seed {
+            cfg.seed = s.parse().map_err(|_| anyhow!("--seed expects an integer, got '{s}'"))?;
+        }
+        if let Some(s) = &args.budget {
+            cfg.explore_budget = if s == "all" {
+                None
+            } else {
+                match s.parse() {
+                    Ok(k) if k > 0 => Some(k),
+                    _ => {
+                        return Err(anyhow!(
+                            "--budget expects a positive integer or 'all', got '{s}'"
+                        ))
+                    }
+                }
+            };
+        }
+        if let Some(path) = args.faults.as_deref() {
+            if args.mtbf_s.is_some() || args.mttr_s.is_some() {
+                return Err(anyhow!(
+                    "--faults (scripted schedule) and --mtbf-s/--mttr-s (random faults) are \
+                     mutually exclusive"
+                ));
+            }
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| anyhow!("reading fault spec '{path}': {e}"))?;
+            let j = Json::parse(&src).map_err(|e| anyhow!("parsing fault spec '{path}': {e}"))?;
+            cfg.faults = Some(FaultPolicy::Schedule(FaultSchedule::from_json(&j)?));
+        } else {
+            match (&args.mtbf_s, &args.mttr_s) {
+                (None, None) => {}
+                (Some(b), Some(r)) => {
+                    let parse_s = |flag: &str, s: &str| -> Result<f64> {
+                        s.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0).ok_or_else(
+                            || anyhow!("--{flag} expects a positive number of seconds, got '{s}'"),
+                        )
+                    };
+                    cfg.faults = Some(FaultPolicy::Random {
+                        mtbf_s: parse_s("mtbf-s", b)?,
+                        mttr_s: parse_s("mttr-s", r)?,
+                    });
+                }
+                _ => return Err(anyhow!("--mtbf-s and --mttr-s must be given together")),
+            }
+        }
+        if let Some(s) = &args.max_retries {
+            cfg.max_retries =
+                s.parse().map_err(|_| anyhow!("--max-retries expects an integer, got '{s}'"))?;
+        }
+        cfg.cluster = cluster;
+        Ok(cfg)
+    }
+}
+
+/// The raw `cat serve --rps` flag surface, exactly as parsed — every
+/// field a string so [`FleetConfig::from_args`] owns ALL parsing and
+/// cross-flag validation (and tests can drive it without a process).
+/// `None`/`false` means the flag was absent.
+#[derive(Debug, Clone, Default)]
+pub struct ServeArgs {
+    pub model: Option<String>,
+    pub hw: Option<String>,
+    pub rps: Option<String>,
+    pub slo_ms: Option<String>,
+    pub requests: Option<String>,
+    pub backends: Option<String>,
+    pub batch: Option<String>,
+    pub queue_cap: Option<String>,
+    pub seed: Option<String>,
+    pub budget: Option<String>,
+    pub partition: bool,
+    pub no_links: bool,
+    pub links_fixed_point: bool,
+    pub dram_gbps: Option<String>,
+    pub pcie_gbps: Option<String>,
+    pub cluster: Option<String>,
+    pub faults: Option<String>,
+    pub mtbf_s: Option<String>,
+    pub mttr_s: Option<String>,
+    pub max_retries: Option<String>,
 }
 
 /// One completed request (virtual-clock record).
@@ -247,7 +490,11 @@ impl BackendSummary {
 /// ledger; `cat-serve-v3` when the board ledger additionally carries
 /// the shared memory-path `links` block; `cat-serve-v4` whenever fault
 /// injection was enabled — the `faults` block rides on top of whichever
-/// board/links blocks the deployment produced).
+/// board/links blocks the deployment produced; `cat-serve-v5` for
+/// cluster deployments, whose `cluster` ledger subsumes the board
+/// block and under which the `faults` block rides unchanged).  The
+/// state-derived tag here always matches [`FleetConfig::schema`] for
+/// fleets built from the same config.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
     pub model: String,
@@ -278,13 +525,18 @@ pub struct FleetReport {
     /// Fault-injection accounting when [`FleetConfig::faults`] was set
     /// (`None` on the byte-identical fault-free path).
     pub faults: Option<FaultsReport>,
+    /// Cluster ledger when the fleet was deployed with `--cluster`
+    /// (`None` on every single-board path).
+    pub cluster: Option<crate::cluster::ClusterBudget>,
 }
 
 impl FleetReport {
     pub fn to_json(&self) -> Json {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
         let mut m = BTreeMap::new();
-        let schema = if self.faults.is_some() {
+        let schema = if self.cluster.is_some() {
+            "cat-serve-v5"
+        } else if self.faults.is_some() {
             "cat-serve-v4"
         } else {
             match &self.board {
@@ -296,6 +548,9 @@ impl FleetReport {
         m.insert("schema".into(), Json::Str(schema.into()));
         if let Some(b) = &self.board {
             m.insert("board".into(), b.to_json());
+        }
+        if let Some(c) = &self.cluster {
+            m.insert("cluster".into(), c.to_json(self));
         }
         m.insert("model".into(), Json::Str(self.model.clone()));
         m.insert("hw".into(), Json::Str(self.hw.clone()));
@@ -512,9 +767,13 @@ impl<'a> ServeLoop<'a> {
                 downs: 0,
             })
             .collect();
-        let cur_throttle = match fleet.budget.as_ref().and_then(|b| b.links.as_ref()) {
-            Some(l) => l.members.iter().map(|m| 1.0 / m.stretch).collect(),
-            None => vec![1.0; fleet.backends.len()],
+        let cur_throttle = if let Some(cb) = fleet.cluster.as_ref() {
+            cb.members.iter().map(|m| m.throttle).collect()
+        } else {
+            match fleet.budget.as_ref().and_then(|b| b.links.as_ref()) {
+                Some(l) => l.members.iter().map(|m| 1.0 / m.stretch).collect(),
+                None => vec![1.0; fleet.backends.len()],
+            }
         };
         let applied = vec![false; schedule.len()];
         ServeLoop {
@@ -811,6 +1070,9 @@ impl<'a> ServeLoop<'a> {
                 self.pcie_scale *= pcie_scale;
                 self.renegotiate(now_ns)?;
             }
+            FaultKind::BoardCrash { .. } => {
+                unreachable!("board crashes are expanded to member crashes before the loop")
+            }
         }
         Ok(())
     }
@@ -824,6 +1086,9 @@ impl<'a> ServeLoop<'a> {
     fn renegotiate(&mut self, now_ns: u64) -> Result<()> {
         if !self.faults_enabled {
             return Ok(());
+        }
+        if self.fleet.cluster.is_some() {
+            return self.renegotiate_cluster(now_ns);
         }
         let cfg = self.cfg;
         let fleet = self.fleet;
@@ -851,6 +1116,87 @@ impl<'a> ServeLoop<'a> {
                 &base.point,
                 base.max_batch(),
                 &budget.shares[b],
+                throttle,
+            )
+            .map_err(|e| {
+                anyhow!("re-deploying backend {b} at throttle {throttle:.4} after a fault: {e}")
+            })?;
+            nb.id = base.id;
+            self.overrides[b] = Some(nb);
+            self.cur_throttle[b] = throttle;
+        }
+        if self.tracing() {
+            let members_up = stretches.iter().filter(|s| s.is_some()).count();
+            let tid = self.tid_faults();
+            let args = vec![
+                ("members_up".to_string(), Json::Num(members_up as f64)),
+                ("mode".to_string(), Json::Str(cfg.link_mode().wire_name().into())),
+            ];
+            self.trace_instant("renegotiate", tid, now_ns, args);
+        }
+        self.renegotiations.push((now_ns, stretches));
+        Ok(())
+    }
+
+    /// Cluster variant of [`ServeLoop::renegotiate`]: each board re-runs
+    /// its *own* masked intra-board negotiation over its live members,
+    /// then the boards renegotiate the cluster NIC/switch pools (which
+    /// is where a `link_degrade` fault bites in cluster mode) with each
+    /// board demanding only its live members' host I/O.  A member's new
+    /// throttle folds both levels; only changed members redeploy.
+    fn renegotiate_cluster(&mut self, now_ns: u64) -> Result<()> {
+        let cfg = self.cfg;
+        let fleet = self.fleet;
+        let cb = fleet.cluster.as_ref().expect("cluster renegotiation without a cluster");
+        let up: Vec<bool> = self.states.iter().map(|st| st.down_until_ns.is_none()).collect();
+        let mut intra: Vec<Option<f64>> = vec![None; fleet.len()];
+        let mut board_demands = Vec::with_capacity(cb.boards.len());
+        for bl in &cb.boards {
+            let ledger0 = bl.budget.links.as_ref().expect("cluster boards carry link ledgers");
+            let demands: Vec<LinkDemand> = ledger0.members.iter().map(|m| m.demand).collect();
+            let mut b_up = vec![false; demands.len()];
+            for &g in &bl.members {
+                b_up[cb.members[g].slot] = up[g];
+            }
+            let grants = links::negotiate_masked(&ledger0.pools, &demands, &b_up, cfg.link_mode());
+            for &g in &bl.members {
+                intra[g] = grants[cb.members[g].slot].map(|ml| ml.stretch);
+            }
+            // the board's residual net demand: its live members' host I/O
+            // (a fully-down board demands nothing and stops stretching
+            // the survivors' NIC/switch grants)
+            let host: f64 = ledger0
+                .members
+                .iter()
+                .zip(&b_up)
+                .filter(|(_, live)| **live)
+                .map(|(m, _)| m.demand.pcie_gbps)
+                .sum();
+            board_demands.push(LinkDemand { dram_gbps: host, pcie_gbps: host });
+        }
+        let net_pools = cb.net.pools.scaled(self.dram_scale, self.pcie_scale);
+        let net = links::negotiate_in(&net_pools, &board_demands, cfg.link_mode());
+        let mut stretches = Vec::with_capacity(fleet.len());
+        for b in 0..fleet.len() {
+            let Some(s_intra) = intra[b] else {
+                stretches.push(None);
+                continue;
+            };
+            let ms = cb.members[b];
+            let stretch = s_intra * net.members[ms.board].stretch;
+            stretches.push(Some(stretch));
+            let throttle = 1.0 / stretch;
+            if (throttle - self.cur_throttle[b]).abs() <= 1e-12 {
+                continue;
+            }
+            let bl = &cb.boards[ms.board];
+            let base = &fleet.backends[b];
+            let mut nb = Backend::deploy_in_share(
+                &cfg.model,
+                &bl.hw,
+                &base.point,
+                base.max_batch(),
+                &bl.budget.shares[ms.slot],
                 throttle,
             )
             .map_err(|e| {
@@ -1166,10 +1512,14 @@ impl<'a> ServeLoop<'a> {
     }
 }
 
-/// Explore + deploy the family the serving entry points share: on one
-/// shared board when [`FleetConfig::partition`] is set, one board per
-/// member otherwise.
+/// Explore + deploy the family the serving entry points share: across
+/// every board of the cluster spec when [`FleetConfig::cluster`] is
+/// set, on one shared board when [`FleetConfig::partition`] is set, one
+/// board per member otherwise.
 fn build_fleet(cfg: &FleetConfig) -> Result<Fleet> {
+    if let Some(spec) = &cfg.cluster {
+        return crate::cluster::build_fleet(cfg, spec);
+    }
     let mut ecfg = dse::ExploreConfig::new(cfg.model.clone(), cfg.hw.clone());
     ecfg.sample_budget = cfg.explore_budget;
     ecfg.seed = cfg.seed;
@@ -1191,12 +1541,83 @@ fn build_fleet(cfg: &FleetConfig) -> Result<Fleet> {
     }
 }
 
-/// Derive a frontier for the pair, deploy the family — on one shared
-/// board when [`FleetConfig::partition`] is set, one board per member
-/// otherwise — and serve the synthetic stream across it.
+/// What [`run`] serves with and over — the consolidated serve session:
+/// an optional pre-built fleet (`None` = explore + deploy from the
+/// config), an optional explicit arrival stream (`None` = the seeded
+/// Poisson stream), and an optional observability sink (`None` = the
+/// provably zero-cost path).  Mirrors `dse::explore_obs`'s optional-sink
+/// shape; the six historical `serve_fleet*` entry points are thin
+/// wrappers over one `(cfg, Session)` call.
+#[derive(Default)]
+pub struct Session<'a> {
+    fleet: Option<&'a Fleet>,
+    arrivals: Option<&'a [u64]>,
+    obs: Option<&'a mut Obs>,
+}
+
+impl<'a> Session<'a> {
+    pub fn new() -> Session<'a> {
+        Session::default()
+    }
+
+    /// Serve over an already-built fleet instead of exploring one from
+    /// the config (tests and benches pin hand-built families this way).
+    pub fn on(mut self, fleet: &'a Fleet) -> Session<'a> {
+        self.fleet = Some(fleet);
+        self
+    }
+
+    /// Serve an **explicit** arrival pattern (sorted virtual ns)
+    /// instead of the seeded Poisson stream — bursty or adversarial
+    /// streams ride the identical routing/admission/batching path.
+    /// Request ids are the arrival positions; `cfg.n_requests`/`cfg.rps`
+    /// only label the report.
+    pub fn stream(mut self, arrivals: &'a [u64]) -> Session<'a> {
+        self.arrivals = Some(arrivals);
+        self
+    }
+
+    /// Attach an observability sink.  The emitted [`FleetReport`] stays
+    /// byte-identical — the trace and registry are pure observers of
+    /// the identical event sequence (pinned by `obs_properties.rs`).
+    pub fn observe(mut self, obs: &'a mut Obs) -> Session<'a> {
+        self.obs = Some(obs);
+        self
+    }
+}
+
+/// THE serving entry point: resolve the session's fleet and arrivals
+/// (building whatever was left unset from the config) and drive the
+/// virtual-clock loop.  `run(cfg, Session::new())` is the full
+/// explore → deploy → serve pipeline; every `serve_fleet*` name
+/// delegates here byte-identically.
+pub fn run(cfg: &FleetConfig, session: Session<'_>) -> Result<FleetReport> {
+    let Session { fleet, arrivals, obs } = session;
+    let built;
+    let fleet = match fleet {
+        Some(f) => f,
+        None => {
+            built = build_fleet(cfg)?;
+            &built
+        }
+    };
+    let generated;
+    let arrivals = match arrivals {
+        Some(a) => a,
+        None => {
+            generated = TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
+            &generated
+        }
+    };
+    run_stream(cfg, fleet, arrivals, obs)
+}
+
+/// Derive a frontier for the pair, deploy the family — across the
+/// cluster with [`FleetConfig::cluster`], on one shared board with
+/// [`FleetConfig::partition`], one board per member otherwise — and
+/// serve the synthetic stream across it.
 pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
-    let fleet = build_fleet(cfg)?;
-    serve_fleet_on(cfg, &fleet)
+    run(cfg, Session::new())
 }
 
 /// [`serve_fleet`] with observability attached.  Create the [`Obs`]
@@ -1204,54 +1625,65 @@ pub fn serve_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
 /// exploration and deployment phases too (that is where the stage-sim
 /// cache and `par_map` actually work).
 pub fn serve_fleet_obs(cfg: &FleetConfig, obs: &mut Obs) -> Result<FleetReport> {
-    let fleet = build_fleet(cfg)?;
-    serve_fleet_on_obs(cfg, &fleet, obs)
+    run(cfg, Session::new().observe(obs))
 }
 
-/// Drive the virtual-clock serving loop over an already-built fleet
-/// (exposed so tests and benches can pin a hand-built family).
+/// Drive the virtual-clock serving loop over an already-built fleet.
 pub fn serve_fleet_on(cfg: &FleetConfig, fleet: &Fleet) -> Result<FleetReport> {
-    let arrivals = TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
-    serve_fleet_stream(cfg, fleet, &arrivals)
+    run(cfg, Session::new().on(fleet))
 }
 
 /// [`serve_fleet_on`] with observability attached.
 pub fn serve_fleet_on_obs(cfg: &FleetConfig, fleet: &Fleet, obs: &mut Obs) -> Result<FleetReport> {
-    let arrivals = TrafficGen::poisson(cfg.seed, cfg.rps, cfg.n_requests);
-    serve_fleet_stream_obs(cfg, fleet, &arrivals, Some(obs))
+    run(cfg, Session::new().on(fleet).observe(obs))
 }
 
-/// The serving loop over an **explicit** arrival pattern (sorted virtual
-/// timestamps, ns) — lets tests drive bursty or adversarial streams
-/// through the identical routing/admission/batching path.  Request ids
-/// are the arrival positions; `cfg.n_requests`/`cfg.rps` only label the
-/// report here, the stream is `arrivals`.
+/// The serving loop over an already-built fleet and an explicit arrival
+/// pattern (see [`Session::stream`]).
 pub fn serve_fleet_stream(
     cfg: &FleetConfig,
     fleet: &Fleet,
     arrivals: &[u64],
 ) -> Result<FleetReport> {
-    serve_fleet_stream_obs(cfg, fleet, arrivals, None)
+    run(cfg, Session::new().on(fleet).stream(arrivals))
 }
 
-/// [`serve_fleet_stream`] with an optional observability sink.  `None`
-/// is the zero-cost path ([`serve_fleet_stream`] itself); with a sink
-/// attached the emitted [`FleetReport`] is still byte-identical — the
-/// trace and registry are pure observers of the identical event
-/// sequence (pinned by `obs_properties.rs`).
+/// [`serve_fleet_stream`] with an optional observability sink.
 pub fn serve_fleet_stream_obs(
+    cfg: &FleetConfig,
+    fleet: &Fleet,
+    arrivals: &[u64],
+    obs: Option<&mut Obs>,
+) -> Result<FleetReport> {
+    let mut session = Session::new().on(fleet).stream(arrivals);
+    if let Some(o) = obs {
+        session = session.observe(o);
+    }
+    run(cfg, session)
+}
+
+/// The loop itself — every public entry point funnels here through
+/// [`run`].
+fn run_stream(
     cfg: &FleetConfig,
     fleet: &Fleet,
     arrivals: &[u64],
     mut obs: Option<&mut Obs>,
 ) -> Result<FleetReport> {
     debug_assert!(arrivals.windows(2).all(|w| w[0] <= w[1]), "arrivals must be sorted");
-    let has_links = fleet.budget.as_ref().is_some_and(|b| b.links.is_some());
+    let has_links =
+        fleet.budget.as_ref().is_some_and(|b| b.links.is_some()) || fleet.cluster.is_some();
+    let n_boards = fleet.cluster.as_ref().map(|c| c.boards.len());
     let schedule: Vec<FaultEvent> = match &cfg.faults {
         None => Vec::new(),
         Some(FaultPolicy::Schedule(s)) => {
-            s.validate(fleet.len(), has_links)?;
-            s.events.clone()
+            s.validate(fleet.len(), has_links, n_boards)?;
+            match &fleet.cluster {
+                // a board crash is N member crashes — expand before the
+                // loop so routing/draining/recovery see ordinary events
+                Some(cb) => faults::expand_boards(&s.events, &cb.member_boards()),
+                None => s.events.clone(),
+            }
         }
         Some(FaultPolicy::Random { mtbf_s, mttr_s }) => {
             if !(mtbf_s.is_finite() && *mtbf_s > 0.0 && mttr_s.is_finite() && *mttr_s > 0.0) {
@@ -1316,14 +1748,24 @@ pub fn serve_fleet_stream_obs(
     let shared_board = fleet.budget.is_some();
     let static_w = cfg.hw.power.static_w;
     let mut total_ops = 0u64;
-    let mut energy_ns_w = if shared_board { static_w * wall_ns as f64 } else { 0.0 };
+    let mut energy_ns_w = if let Some(cb) = &fleet.cluster {
+        // a cluster is N always-on boards: each burns its own static
+        // floor over the wall, members add dynamic power on top
+        cb.boards.iter().map(|bl| bl.hw.power.static_w).sum::<f64>() * wall_ns as f64
+    } else if shared_board {
+        static_w * wall_ns as f64
+    } else {
+        0.0
+    };
     let backends: Vec<BackendSummary> = lp
         .states
         .iter_mut()
         .zip(&fleet.backends)
         .map(|(st, be)| {
             total_ops += st.ops;
-            let member_w = if shared_board {
+            let member_w = if let Some(cb) = &fleet.cluster {
+                (be.power_w() - cb.boards[cb.members[be.id].board].hw.power.static_w).max(0.0)
+            } else if shared_board {
                 (be.power_w() - static_w).max(0.0)
             } else {
                 be.power_w()
@@ -1366,7 +1808,10 @@ pub fn serve_fleet_stream_obs(
     responses.sort_by_key(|r| r.id);
     let report = FleetReport {
         model: cfg.model.name.clone(),
-        hw: cfg.hw.name.clone(),
+        hw: match &fleet.cluster {
+            Some(c) => c.name.clone(),
+            None => cfg.hw.name.clone(),
+        },
         rps: cfg.rps,
         slo_ms: cfg.slo_ms,
         seed: cfg.seed,
@@ -1381,6 +1826,7 @@ pub fn serve_fleet_stream_obs(
         slo_violations,
         board: fleet.budget.clone(),
         faults: faults_report,
+        cluster: fleet.cluster.clone(),
     };
     if let Some(o) = obs_after {
         fill_serve_metrics(o, &report);
@@ -1407,4 +1853,186 @@ fn fill_serve_metrics(o: &mut Obs, r: &FleetReport) {
         }
     }
     o.record_global_deltas();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> FleetConfig {
+        FleetConfig::new(ModelConfig::bert_base(), HardwareConfig::vck5000())
+    }
+
+    fn cluster_spec() -> crate::cluster::ClusterSpec {
+        crate::cluster::ClusterSpec {
+            boards: vec![HardwareConfig::vck5000(), HardwareConfig::vck5000_limited(64)],
+            net: SharedLinkModel { dram_gbps: 25.0, pcie_gbps: 12.5 },
+        }
+    }
+
+    /// THE flag→schema map, pinned exhaustively: 2^4 combinations of
+    /// (cluster, faults, partition, links) → schema.  Any precedence
+    /// change must rewrite this table consciously.
+    #[test]
+    fn schema_table_pins_full_combination_map() {
+        let table = [
+            // (cluster, faults, partition, links) -> schema
+            ((false, false, false, false), "cat-serve-v1"),
+            ((false, false, false, true), "cat-serve-v1"),
+            ((false, false, true, false), "cat-serve-v2"),
+            ((false, false, true, true), "cat-serve-v3"),
+            ((false, true, false, false), "cat-serve-v4"),
+            ((false, true, false, true), "cat-serve-v4"),
+            ((false, true, true, false), "cat-serve-v4"),
+            ((false, true, true, true), "cat-serve-v4"),
+            ((true, false, false, false), "cat-serve-v5"),
+            ((true, false, false, true), "cat-serve-v5"),
+            ((true, false, true, false), "cat-serve-v5"),
+            ((true, false, true, true), "cat-serve-v5"),
+            ((true, true, false, false), "cat-serve-v5"),
+            ((true, true, false, true), "cat-serve-v5"),
+            ((true, true, true, false), "cat-serve-v5"),
+            ((true, true, true, true), "cat-serve-v5"),
+        ];
+        for ((cluster, faults, partition, links), want) in table {
+            let mut cfg = base_cfg();
+            cfg.cluster = cluster.then(cluster_spec);
+            cfg.faults = faults.then(|| FaultPolicy::Schedule(FaultSchedule::default()));
+            cfg.partition = partition;
+            cfg.links = if links { Some(cfg.hw.links()) } else { None };
+            assert_eq!(
+                cfg.schema(),
+                want,
+                "schema for cluster={cluster} faults={faults} partition={partition} \
+                 links={links}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_args_defaults_match_new() {
+        let cfg = FleetConfig::from_args(&ServeArgs::default()).unwrap();
+        assert_eq!(cfg.model.name, "bert-base");
+        assert_eq!(cfg.hw.name, "vck5000");
+        assert_eq!(cfg.rps, 1000.0);
+        assert_eq!(cfg.schema(), "cat-serve-v1");
+        assert!(cfg.links.is_some() && cfg.cluster.is_none() && cfg.faults.is_none());
+    }
+
+    #[test]
+    fn from_args_rejects_bad_numbers_and_zeros() {
+        let err = |a: ServeArgs| FleetConfig::from_args(&a).unwrap_err().to_string();
+        let rps = ServeArgs { rps: Some("abc".into()), ..Default::default() };
+        assert!(err(rps).contains("--rps expects a number"));
+        let neg = ServeArgs { rps: Some("-5".into()), ..Default::default() };
+        assert!(err(neg).contains("--rps must be positive"));
+        let slo = ServeArgs { slo_ms: Some("0".into()), ..Default::default() };
+        assert!(err(slo).contains("--slo-ms must be positive"));
+        let be = ServeArgs { backends: Some("0".into()), ..Default::default() };
+        assert!(err(be).contains("--backends must be positive"));
+        let q = ServeArgs { queue_cap: Some("0".into()), ..Default::default() };
+        assert!(err(q).contains("--queue-cap must be positive"));
+        let budget = ServeArgs { budget: Some("zero".into()), ..Default::default() };
+        assert!(err(budget).contains("--budget expects a positive integer or 'all'"));
+    }
+
+    #[test]
+    fn from_args_link_flags_require_partition() {
+        let err = |a: ServeArgs| FleetConfig::from_args(&a).unwrap_err().to_string();
+        for a in [
+            ServeArgs { no_links: true, ..Default::default() },
+            ServeArgs { links_fixed_point: true, ..Default::default() },
+            ServeArgs { dram_gbps: Some("10".into()), ..Default::default() },
+            ServeArgs { pcie_gbps: Some("10".into()), ..Default::default() },
+        ] {
+            assert!(err(a).contains("require --partition"));
+        }
+        let both = ServeArgs {
+            partition: true,
+            no_links: true,
+            links_fixed_point: true,
+            ..Default::default()
+        };
+        assert!(err(both).contains("no contention model to refine"));
+        let pools = ServeArgs {
+            partition: true,
+            no_links: true,
+            dram_gbps: Some("10".into()),
+            ..Default::default()
+        };
+        assert!(err(pools).contains("no pools to override"));
+        let bad = ServeArgs {
+            partition: true,
+            dram_gbps: Some("-1".into()),
+            ..Default::default()
+        };
+        assert!(err(bad).contains("--dram-gbps expects a positive number"));
+    }
+
+    #[test]
+    fn from_args_fault_flag_rules() {
+        let err = |a: ServeArgs| FleetConfig::from_args(&a).unwrap_err().to_string();
+        // exclusivity fires before the spec file is read: no file needed
+        let both = ServeArgs {
+            faults: Some("nonexistent.json".into()),
+            mtbf_s: Some("10".into()),
+            ..Default::default()
+        };
+        assert!(err(both).contains("mutually exclusive"));
+        let half = ServeArgs { mtbf_s: Some("10".into()), ..Default::default() };
+        assert!(err(half).contains("must be given together"));
+        let bad = ServeArgs {
+            mtbf_s: Some("10".into()),
+            mttr_s: Some("-1".into()),
+            ..Default::default()
+        };
+        assert!(err(bad).contains("--mttr-s expects a positive number of seconds"));
+        let ok = ServeArgs {
+            mtbf_s: Some("10".into()),
+            mttr_s: Some("0.5".into()),
+            ..Default::default()
+        };
+        let cfg = FleetConfig::from_args(&ok).unwrap();
+        assert_eq!(cfg.schema(), "cat-serve-v4");
+    }
+
+    #[test]
+    fn from_args_cluster_conflicts_fire_before_spec_load() {
+        // the path is bogus on purpose: conflicts must not read disk
+        let err = |a: ServeArgs| FleetConfig::from_args(&a).unwrap_err().to_string();
+        let base = ServeArgs { cluster: Some("/no/such/spec.json".into()), ..Default::default() };
+        let hw = ServeArgs { hw: Some("vck190".into()), ..base.clone() };
+        assert!(err(hw).contains("--hw conflicts with --cluster"));
+        let part = ServeArgs { partition: true, ..base.clone() };
+        assert!(err(part).contains("--cluster conflicts with --partition"));
+        for a in [
+            ServeArgs { no_links: true, ..base.clone() },
+            ServeArgs { dram_gbps: Some("10".into()), ..base.clone() },
+            ServeArgs { pcie_gbps: Some("10".into()), ..base.clone() },
+        ] {
+            assert!(err(a).contains("conflict with --cluster"));
+        }
+        assert!(err(base).contains("reading cluster spec"));
+    }
+
+    #[test]
+    fn from_args_loads_cluster_spec_and_allows_fixed_point() {
+        let path = std::env::temp_dir()
+            .join(format!("cat_cluster_spec_{}.json", std::process::id()));
+        std::fs::write(&path, r#"{"boards": ["vck5000", "vck5000-limited-64"]}"#).unwrap();
+        let a = ServeArgs {
+            cluster: Some(path.to_str().unwrap().into()),
+            links_fixed_point: true,
+            backends: Some("2".into()),
+            ..Default::default()
+        };
+        let cfg = FleetConfig::from_args(&a).unwrap();
+        std::fs::remove_file(&path).ok();
+        let spec = cfg.cluster.as_ref().unwrap();
+        assert_eq!(spec.boards.len(), 2);
+        assert_eq!(cfg.hw.name, spec.boards[0].name);
+        assert!(cfg.links_fixed_point && !cfg.partition);
+        assert_eq!(cfg.schema(), "cat-serve-v5");
+        assert_eq!(cfg.link_mode(), links::NegotiationMode::FixedPoint);
+    }
 }

@@ -1,0 +1,206 @@
+//! Cluster-serving invariants (`--cluster`, schema `cat-serve-v5`):
+//!
+//! * **conservation/SLO/determinism on a heterogeneous rack** — a
+//!   2-board VCK5000 + Limited-AIE cluster keeps the five-term admission
+//!   conservation, serves every completed request inside its SLO, and
+//!   reproduces its JSON byte for byte from a fixed seed;
+//! * **whole-board crash → survivors absorb** — a scripted `board_crash`
+//!   sheds at most the dead board's in-flight share while the surviving
+//!   board keeps admitting, and per-board availability records the
+//!   outage;
+//! * **1-board cluster ≡ --partition** — a cluster of one board behind
+//!   uncontended network pools serves byte-identically to the same
+//!   config run with `--partition` (modulo the schema tag and the
+//!   cluster/board ledgers themselves).
+
+use std::collections::BTreeSet;
+
+use cat::cluster::{build_fleet, ClusterSpec};
+use cat::config::ModelConfig;
+use cat::serve::{
+    run, serve_fleet, serve_fleet_on, FaultEvent, FaultKind, FaultPolicy, FaultSchedule,
+    FleetConfig, FleetReport, Session,
+};
+use cat::util::json::Json;
+
+const MS: u64 = 1_000_000;
+
+fn spec_of(src: &str) -> ClusterSpec {
+    ClusterSpec::from_json(&Json::parse(src).unwrap()).unwrap()
+}
+
+fn two_board_cfg() -> FleetConfig {
+    let spec = spec_of(r#"{"boards": ["vck5000", "vck5000-limited-64"]}"#);
+    let mut cfg = FleetConfig::new(ModelConfig::bert_base(), spec.boards[0].clone());
+    cfg.rps = 1000.0;
+    cfg.slo_ms = 80.0;
+    cfg.n_requests = 160;
+    cfg.max_backends = 3;
+    cfg.explore_budget = Some(64);
+    cfg.seed = 7;
+    cfg.cluster = Some(spec);
+    cfg
+}
+
+/// Five-term conservation + SLO compliance + id accounting, the same
+/// contract single-board fault runs honor.
+fn check_invariants(r: &FleetReport, cfg: &FleetConfig, label: &str) {
+    let a = &r.admission;
+    assert_eq!(a.submitted, cfg.n_requests, "{label}: submitted");
+    assert!(a.accounted(), "{label}: stats leak requests: {a:?}");
+    assert_eq!(
+        a.submitted,
+        a.completed + a.shed_slo + a.shed_capacity + a.shed_fault + a.shed_retry,
+        "{label}: five-term conservation: {a:?}"
+    );
+    let mut seen = BTreeSet::new();
+    for resp in &r.responses {
+        assert!(seen.insert(resp.id), "{label}: duplicate response id {}", resp.id);
+    }
+    for s in &r.shed {
+        assert!(seen.insert(s.id), "{label}: id {} both served and shed", s.id);
+    }
+    assert_eq!(seen.len(), cfg.n_requests, "{label}: lost request ids");
+    let slo_ns = cfg.slo_ns();
+    for resp in &r.responses {
+        assert!(
+            resp.latency_ns() <= slo_ns,
+            "{label}: req {} violated the SLO: {} ns > {slo_ns} ns",
+            resp.id,
+            resp.latency_ns()
+        );
+    }
+    assert_eq!(r.slo_violations, 0, "{label}: report disagrees on violations");
+}
+
+#[test]
+fn heterogeneous_cluster_conserves_meets_slo_and_reproduces() {
+    let cfg = two_board_cfg();
+    assert_eq!(cfg.schema(), "cat-serve-v5");
+    let r = serve_fleet(&cfg).unwrap();
+    check_invariants(&r, &cfg, "2-board");
+    assert!(r.admission.completed > 0, "a 3-member rack must serve something");
+
+    // the ledger names both SKUs and places every member on exactly one
+    let cb = r.cluster.as_ref().expect("cluster runs carry the ledger");
+    assert_eq!(cb.boards.len(), 2);
+    assert_eq!(r.hw, "vck5000+vck5000-limited-64");
+    assert_eq!(cb.members.len(), r.n_backends);
+    assert_eq!(cb.boards.iter().map(|b| b.members.len()).sum::<usize>(), r.n_backends);
+    let usage = cb.board_usage(&r);
+    for (j, u) in usage.iter().enumerate() {
+        assert!((0.0..=1.0).contains(&u.utilization), "board {j} utilization");
+        assert_eq!(u.availability, 1.0, "board {j}: fault-free run must be fully available");
+        assert!(u.energy_j > 0.0, "board {j} burns at least its static floor");
+    }
+    assert_eq!(usage.iter().map(|u| u.admitted).sum::<usize>(), r.admission.completed);
+
+    // schema gate + byte determinism, through both the consolidated
+    // entry point and the wrapper it feeds
+    let json = r.to_json().to_string();
+    assert!(json.contains(r#""schema":"cat-serve-v5""#), "schema tag");
+    assert!(json.contains(r#""cluster":{"#), "cluster block");
+    let again = run(&cfg, Session::new()).unwrap();
+    assert_eq!(json, again.to_json().to_string(), "same seed, same bytes");
+}
+
+#[test]
+fn board_crash_sheds_only_its_share_and_survivors_keep_admitting() {
+    let mut cfg = two_board_cfg();
+    let crash_at = 40 * MS;
+    cfg.faults = Some(FaultPolicy::Schedule(FaultSchedule {
+        events: vec![FaultEvent {
+            at_ns: crash_at,
+            kind: FaultKind::BoardCrash { board: 0, down_ns: 10_000 * MS },
+        }],
+    }));
+    let fleet = build_fleet(&cfg, cfg.cluster.as_ref().unwrap()).unwrap();
+    let cb = fleet.cluster.clone().unwrap();
+    let r = serve_fleet_on(&cfg, &fleet).unwrap();
+    check_invariants(&r, &cfg, "board-crash");
+
+    // the dead board can only orphan what it had in flight: admission
+    // bounds every member at queue_cap, so the fault-shed total is
+    // capped by the crashed board's share
+    let a = &r.admission;
+    let crashed = cb.boards[0].members.len();
+    assert!(
+        a.shed_fault + a.shed_retry <= crashed * cfg.queue_cap,
+        "shed {}+{} exceeds board 0's in-flight bound ({crashed} × {})",
+        a.shed_fault,
+        a.shed_retry,
+        cfg.queue_cap
+    );
+
+    // survivors keep admitting after the crash — completions with
+    // arrivals past the instant, all served by board-1 members
+    let survivors: BTreeSet<usize> = cb.boards[1].members.iter().copied().collect();
+    let after: Vec<_> = r.responses.iter().filter(|x| x.arrival_ns > crash_at).collect();
+    assert!(!after.is_empty(), "the surviving board must keep completing work");
+    for resp in &after {
+        assert!(
+            survivors.contains(&resp.backend),
+            "req {} served by dead board member {}",
+            resp.id,
+            resp.backend
+        );
+    }
+
+    // the outage lands in the per-board availability rollup
+    let usage = r.cluster.as_ref().unwrap().board_usage(&r);
+    assert!(usage[0].availability < 1.0, "board 0 was down");
+    assert_eq!(usage[1].availability, 1.0, "board 1 never faulted");
+    let f = r.faults.as_ref().expect("fault runs carry the faults block");
+    assert_eq!(f.timeline.len(), crashed, "one expanded crash per board-0 member");
+    for (e, applied) in &f.timeline {
+        assert!(*applied, "the crash fires inside the horizon");
+        assert_eq!(e.at_ns, crash_at);
+        assert!(matches!(e.kind, FaultKind::Crash { .. }), "expanded to member crashes");
+    }
+}
+
+#[test]
+fn one_board_cluster_is_byte_identical_to_the_partition_run() {
+    let model = ModelConfig::bert_base();
+    // network pools far wider than any board's appetite: the net stretch
+    // is exactly 1, so members deploy identically to --partition
+    let spec = spec_of(r#"{"boards": ["vck5000"], "nic_gbps": 1000, "switch_gbps": 1000}"#);
+    let mut part = FleetConfig::new(model, spec.boards[0].clone());
+    part.rps = 1200.0;
+    part.slo_ms = 80.0;
+    part.n_requests = 160;
+    part.max_backends = 2;
+    part.explore_budget = Some(64);
+    part.seed = 11;
+    part.partition = true;
+    let mut clus = part.clone();
+    clus.partition = false;
+    clus.cluster = Some(spec);
+    assert_eq!(part.schema(), "cat-serve-v3");
+    assert_eq!(clus.schema(), "cat-serve-v5");
+
+    let a = serve_fleet(&part).unwrap();
+    let b = serve_fleet(&clus).unwrap();
+    // identical serving: the reports differ only in the schema tag and
+    // in which ledger they carry (board vs cluster)
+    let strip = |j: Json| match j {
+        Json::Obj(mut m) => {
+            m.remove("schema");
+            m.remove("board");
+            m.remove("cluster");
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    assert_eq!(
+        strip(a.to_json()).to_string(),
+        strip(b.to_json()).to_string(),
+        "a 1-board cluster must degenerate to the partition run"
+    );
+    // and the net ledger shows the degenerate single-member negotiation
+    let cb = b.cluster.as_ref().unwrap();
+    assert_eq!(cb.net.members[0].stretch, 1.0, "uncontended pools never throttle");
+    for ms in &cb.members {
+        assert_eq!(ms.board, 0);
+    }
+}

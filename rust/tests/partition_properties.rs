@@ -145,7 +145,7 @@ fn one_member_partition_degenerates_to_pr3_single_backend() {
     cfg.n_requests = 200;
     cfg.max_batch = max_batch;
     cfg.seed = 0xD06;
-    let pr3_fleet = Fleet { backends: vec![plain], budget: None };
+    let pr3_fleet = Fleet { backends: vec![plain], budget: None, cluster: None };
     let a = serve_fleet_on(&cfg, &part_fleet).unwrap();
     let b = serve_fleet_on(&cfg, &pr3_fleet).unwrap();
     // identical serving behavior; the partitioned report additionally

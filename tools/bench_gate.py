@@ -57,6 +57,10 @@ import sys
 #       (virtual clock, >= 1 by construction); growth means the
 #       conservative single-pass bound is drifting further from the
 #       calibrated fixed point and over-throttling by more
+#   serve_cluster_reqs_per_sec  (higher) — routing throughput across a
+#       2-board heterogeneous cluster behind shared NIC/switch pools (the
+#       cluster-era admission plane: per-board ledgers, network-throttled
+#       members, board-aware energy rollup)
 GATED_METRICS = (
     ("engine_speedup_mha_batch64", "higher"),
     ("dse_points_per_sec", "higher"),
@@ -65,6 +69,7 @@ GATED_METRICS = (
     ("serve_failover_reqs_per_sec", "higher"),
     ("serve_trace_overhead", "lower"),
     ("serve_contention_pessimism", "lower"),
+    ("serve_cluster_reqs_per_sec", "higher"),
 )
 
 

@@ -28,6 +28,7 @@ def measured(
     failover=150000.0,
     trace_overhead=1.2,
     pessimism=1.05,
+    cluster=120000.0,
     smoke=True,
 ):
     return doc(
@@ -40,6 +41,7 @@ def measured(
             "serve_failover_reqs_per_sec": failover,
             "serve_trace_overhead": trace_overhead,
             "serve_contention_pessimism": pessimism,
+            "serve_cluster_reqs_per_sec": cluster,
             "smoke": smoke,
         },
     )
@@ -195,6 +197,28 @@ class BenchGateTests(unittest.TestCase):
         code, out = gate(measured(), base)
         self.assertEqual(code, 0, out)
         self.assertIn("serve_contention_pessimism", out)
+        self.assertIn("missing from baseline", out)
+
+    def test_cluster_throughput_regression_fails(self):
+        # cluster-era routing throughput is higher-is-better like the
+        # other req/s metrics: a 0.33x drop breaches the 0.5x floor
+        code, out = gate(measured(cluster=40000.0), measured())
+        self.assertEqual(code, 1)
+        self.assertIn("serve_cluster_reqs_per_sec", out)
+        self.assertIn("regression", out)
+
+    def test_cluster_throughput_within_tolerance_passes(self):
+        code, out = gate(measured(cluster=70000.0), measured())
+        self.assertEqual(code, 0, out)  # 0.58x >= 0.5x floor
+
+    def test_cluster_throughput_missing_from_baseline_warns_and_passes(self):
+        # the PR that introduces the cluster bench row predates the
+        # committed baseline — the gate must not fail it
+        base = measured()
+        del base["derived"]["serve_cluster_reqs_per_sec"]
+        code, out = gate(measured(), base)
+        self.assertEqual(code, 0, out)
+        self.assertIn("serve_cluster_reqs_per_sec", out)
         self.assertIn("missing from baseline", out)
 
     def test_mode_mismatch_warns_but_compares(self):
