@@ -377,6 +377,33 @@ fn main() {
          ({serve_trace_overhead:.3}x host-time overhead vs untraced routing)"
     );
 
+    // --- indexed-route rows: the admission plane alone (no batcher, no
+    //     responses — a synthetic fleet driven straight through
+    //     AdmissionIndex::route with its event upkeep).  The 2- vs
+    //     64-backend pair prices how per-request routing cost scales
+    //     with fleet width: the derived `serve_router_scaling`
+    //     (64-backend ÷ 2-backend per-pass median over the SAME request
+    //     count, lower-is-better) gates the index's whole reason to
+    //     exist — cached event-driven bounds must keep wide fleets from
+    //     paying a full per-arrival rescan ---
+    let ir_requests = if smoke { 2_048 } else { 65_536 };
+    let mut ir2_admitted = 0usize;
+    let ir2_med = run_row("serve/indexed_route_2backend", 2, 20, &mut || {
+        ir2_admitted = black_box(indexed_route_pass(2, ir_requests));
+    })
+    .median_ns();
+    let mut ir64_admitted = 0usize;
+    let ir64_med = run_row("serve/indexed_route_64backend", 2, 20, &mut || {
+        ir64_admitted = black_box(indexed_route_pass(64, ir_requests));
+    })
+    .median_ns();
+    let serve_router_scaling = ir64_med / ir2_med.max(1.0);
+    println!(
+        "  serve (indexed): {ir_requests} pure-routing arrivals per pass, {ir2_admitted} \
+         admitted on 2 backends / {ir64_admitted} on 64 ({serve_router_scaling:.2}x \
+         per-request cost at 32x the fleet width)"
+    );
+
     // PJRT hot path (needs artifacts)
     if std::path::Path::new("artifacts/manifest.json").exists() {
         use cat::coordinator::synthetic_request;
@@ -470,6 +497,14 @@ fn main() {
             Json::Num((serve_trace_overhead * 1000.0).round() / 1000.0),
         );
         derived.insert("serve_trace_events".to_string(), Json::Num(traced_events as f64));
+        derived.insert(
+            "serve_router_scaling".to_string(),
+            Json::Num((serve_router_scaling * 1000.0).round() / 1000.0),
+        );
+        derived.insert(
+            "serve_indexed_admitted_64backend".to_string(),
+            Json::Num(ir64_admitted as f64),
+        );
         derived.insert("smoke".to_string(), Json::Bool(smoke));
         // the record's own regenerate command reproduces the mode it was
         // measured in, so a refreshed baseline stays gate-comparable
@@ -483,4 +518,43 @@ fn main() {
         write_json(path, &doc).expect("writing bench json");
         println!("  wrote {path}");
     }
+}
+
+/// One pure-routing pass over a synthetic `n`-backend fleet: arrivals in
+/// 4-deep same-timestamp bursts (the index's batch-admit fast path),
+/// admit → immediate single-rider dispatch → retirement when the virtual
+/// clock passes the bound.  Offered load far exceeds the cheap end's
+/// capacity, so probes walk deep into the cost order on wide fleets —
+/// exactly the regime the index exists for.  No batcher, no riders, no
+/// responses: the timed loop is `AdmissionIndex::route` plus its event
+/// upkeep and nothing else, fully deterministic (u64 virtual clock).
+fn indexed_route_pass(n: usize, requests: usize) -> usize {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    // cheapest first, with enough spread that the cheap end saturates
+    let services: Vec<u64> = (0..n).map(|b| 1_000_000 + 20_000 * b as u64).collect();
+    let mut ix = cat::serve::AdmissionIndex::new(&services, 200_000);
+    let (cap, slo) = (4usize, 2_500_000u64);
+    let mut outstanding: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut now = 0u64;
+    let mut admitted = 0usize;
+    for i in 0..requests {
+        if i % 4 == 0 {
+            now += 60_000;
+            while let Some(&Reverse((done, b))) = outstanding.peek() {
+                if done > now {
+                    break;
+                }
+                ix.note_retired(b, 1);
+                outstanding.pop();
+            }
+        }
+        if let Ok(d) = ix.route(now, now + slo, cap) {
+            ix.note_admitted(d.backend);
+            ix.set_busy_until(d.backend, d.completion_bound_ns);
+            outstanding.push(Reverse((d.completion_bound_ns, d.backend)));
+            admitted += 1;
+        }
+    }
+    admitted
 }

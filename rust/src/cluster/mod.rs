@@ -25,9 +25,14 @@
 //!
 //! The serving loop itself never learns about boards: it routes over
 //! the flattened member list (power-ascending, the router's
-//! cheapest-first contract) and only consults the [`ClusterBudget`]
-//! ledger when a fault forces link renegotiation or the report prints
-//! per-board utilization/availability/energy (schema `cat-serve-v5`).
+//! cheapest-first contract) through the same event-driven
+//! `serve::AdmissionIndex` every fleet shape rides — the flat re-ranked
+//! order IS cost order, so the index's up-list interleaves boards'
+//! members by cost with no cluster-specific routing code — and only
+//! consults the [`ClusterBudget`] ledger when a fault forces link
+//! renegotiation (where a rack-vocabulary `link_degrade` bites the
+//! NIC/switch pools) or the report prints per-board
+//! utilization/availability/energy (schema `cat-serve-v5`).
 
 use std::collections::BTreeMap;
 

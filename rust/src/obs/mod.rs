@@ -13,6 +13,14 @@
 //!   histograms, emitted as the `cat-obs-v1` document
 //!   (`--metrics out.json`).
 //!
+//! Metric names are contracts across implementation swaps: the
+//! `serve.route_scanned` histogram means "admission candidates
+//! considered in cost order, counting skipped-down positions" whether
+//! the linear-scan oracle (`serve::router::route`) or the event-driven
+//! `serve::AdmissionIndex` hot path produced the decision — both count
+//! probes identically, so recorded distributions stay comparable across
+//! versions.
+//!
 //! A few subsystems (stage-sim cache, DES fast-forward coverage,
 //! `par_map` occupancy) count globally because they run under worker
 //! threads with no `Obs` in reach; [`Snapshot`] brackets a traced

@@ -15,9 +15,12 @@
 //!   the window take `factor`× their simulated service time (admission
 //!   prices the stretched worst case, so completed requests still meet
 //!   the SLO);
-//! * **link_degrade** — the shared DRAM/PCIe pools scale down from `at`
-//!   on (partitioned fleets with the link model only): the loop
-//!   re-negotiates every member's grant against the shrunken pools;
+//! * **link_degrade** — the shared link pools scale down from `at` on:
+//!   the board's DRAM/PCIe pools for a partitioned fleet with the link
+//!   model, the rack's switch/NIC pools for a cluster (the spec may use
+//!   either vocabulary — `dram_scale`/`pcie_scale` or the rack aliases
+//!   `switch_scale`/`nic_scale`); the loop re-negotiates every member's
+//!   grant against the shrunken pools and redeploys changed members;
 //! * **board_crash** — every backend on one cluster board dies at once
 //!   (`--cluster` only): expanded into per-member crashes before the
 //!   loop ([`expand_boards`]), so drain/re-admit/renegotiate handle a
@@ -51,7 +54,12 @@ pub enum FaultKind {
     /// Batches dispatched during the window serve `factor`× slower.
     Slowdown { backend: usize, down_ns: u64, factor: f64 },
     /// The shared link pools scale to `dram_scale`/`pcie_scale` of their
-    /// current width from this point on (partition + link model only).
+    /// current width from this point on.  Needs pools to exist: a
+    /// partitioned fleet with the link model (board DRAM/PCIe), or a
+    /// cluster — where the scales bite the rack's net pools instead
+    /// (`dram_scale` scales the switch pool, `pcie_scale` the NIC pool;
+    /// specs may write `switch_scale`/`nic_scale` directly) and every
+    /// board redeploys through the masked renegotiation path.
     LinkDegrade { dram_scale: f64, pcie_scale: f64 },
     /// Every backend on cluster board `board` crashes at once
     /// (`--cluster` only).  Never reaches the serving loop: it is
@@ -183,13 +191,18 @@ impl FaultSchedule {
     ///   {"at_ms": 40, "kind": "crash", "backend": 0, "down_ms": 200},
     ///   {"at_ms": 60, "kind": "stall", "backend": 1, "down_ms": 5},
     ///   {"at_ms": 80, "kind": "slowdown", "backend": 1, "down_ms": 10, "factor": 1.5},
-    ///   {"at_ms": 90, "kind": "link_degrade", "dram_scale": 0.5, "pcie_scale": 1.0}
+    ///   {"at_ms": 90, "kind": "link_degrade", "dram_scale": 0.5, "pcie_scale": 1.0},
+    ///   {"at_ms": 95, "kind": "link_degrade", "switch_scale": 0.5, "nic_scale": 0.75}
     /// ]}
     /// ```
     ///
-    /// A crash without `down_ms` never recovers.  Backend indices are
-    /// checked against the actual fleet later ([`FaultSchedule::validate`],
-    /// the fleet size is unknown at parse time).
+    /// A crash without `down_ms` never recovers.  `link_degrade` accepts
+    /// rack vocabulary as aliases for its two pool slots —
+    /// `switch_scale` for `dram_scale`, `nic_scale` for `pcie_scale` —
+    /// so cluster specs read naturally; giving both names of one slot is
+    /// an error.  Backend indices are checked against the actual fleet
+    /// later ([`FaultSchedule::validate`], the fleet size is unknown at
+    /// parse time).
     pub fn from_json(j: &Json) -> Result<FaultSchedule> {
         let arr = j
             .as_arr()
@@ -245,10 +258,26 @@ impl FaultSchedule {
                     }
                     FaultKind::Slowdown { backend: backend()?, down_ns: down_ns(true)?, factor }
                 }
-                Some("link_degrade") => FaultKind::LinkDegrade {
-                    dram_scale: scale("dram_scale")?,
-                    pcie_scale: scale("pcie_scale")?,
-                },
+                Some("link_degrade") => {
+                    // two vocabularies for the same two pool slots: a
+                    // partitioned board names its memory path
+                    // (dram/pcie); a cluster names the rack fabric the
+                    // net pools map onto (switch -> the dram slot,
+                    // nic -> the pcie slot).  One name per slot.
+                    let aliased = |board: &str, rack: &str| -> Result<f64> {
+                        match (e.get(board).is_some(), e.get(rack).is_some()) {
+                            (true, true) => Err(ctx(format!(
+                                "'{board}' and '{rack}' name the same pool — give exactly one"
+                            ))),
+                            (false, true) => scale(rack),
+                            _ => scale(board),
+                        }
+                    };
+                    FaultKind::LinkDegrade {
+                        dram_scale: aliased("dram_scale", "switch_scale")?,
+                        pcie_scale: aliased("pcie_scale", "nic_scale")?,
+                    }
+                }
                 Some("board_crash") => {
                     let board = e
                         .get("board")
@@ -344,8 +373,9 @@ impl FaultSchedule {
                 FaultKind::LinkDegrade { .. } => {
                     if !has_links {
                         return Err(anyhow!(
-                            "fault event #{i} is a link_degrade, which needs --partition with \
-                             the shared link model enabled (the pools don't exist otherwise)"
+                            "fault event #{i} is a link_degrade, which needs shared link pools: \
+                             --partition with the link model enabled (board DRAM/PCIe) or \
+                             --cluster (rack NIC/switch) — the pools don't exist otherwise"
                         ));
                     }
                 }
@@ -556,6 +586,50 @@ mod tests {
                 .is_err(),
             "degradation cannot widen a pool"
         );
+    }
+
+    #[test]
+    fn rack_aliases_name_the_same_link_pools() {
+        // switch_scale aliases the dram slot, nic_scale the pcie slot —
+        // a cluster spec written in rack vocabulary parses to the exact
+        // same FaultKind a board spec would
+        let rack = parse(
+            r#"[{"at_ms": 1, "kind": "link_degrade", "switch_scale": 0.5, "nic_scale": 0.75}]"#,
+        )
+        .unwrap();
+        assert_eq!(
+            rack.events[0].kind,
+            FaultKind::LinkDegrade { dram_scale: 0.5, pcie_scale: 0.75 }
+        );
+        // vocabularies may mix per slot (one name per slot is the rule)
+        let mixed =
+            parse(r#"[{"at_ms": 1, "kind": "link_degrade", "dram_scale": 0.5, "nic_scale": 1}]"#)
+                .unwrap();
+        assert_eq!(
+            mixed.events[0].kind,
+            FaultKind::LinkDegrade { dram_scale: 0.5, pcie_scale: 1.0 }
+        );
+        // both names of one slot is ambiguous, not a merge
+        let both = parse(
+            r#"[{"at_ms": 1, "kind": "link_degrade",
+                 "dram_scale": 0.5, "switch_scale": 0.5, "nic_scale": 1}]"#,
+        );
+        assert!(both.is_err(), "dram_scale and switch_scale name the same pool");
+        // the (0, 1] range check applies through the aliases too
+        assert!(
+            parse(r#"[{"at_ms": 1, "kind": "link_degrade", "switch_scale": 2, "nic_scale": 1}]"#)
+                .is_err(),
+            "degradation cannot widen the switch pool"
+        );
+        assert!(
+            parse(r#"[{"at_ms": 1, "kind": "link_degrade", "switch_scale": 1, "nic_scale": 0}]"#)
+                .is_err(),
+            "zero-width NIC pool"
+        );
+        // a cluster fleet has rack pools: validate accepts the event
+        // under the cluster shape (and still rejects a pool-less fleet)
+        assert!(rack.validate(2, true, Some(2)).is_ok());
+        assert!(rack.validate(2, false, None).is_err(), "no pools to degrade");
     }
 
     #[test]

@@ -434,6 +434,22 @@ impl Fleet {
         self.backends.is_empty()
     }
 
+    /// Seed the serving loop's event-driven admission plane from this
+    /// fleet: one [`AdmissionIndex`](super::AdmissionIndex) entry per
+    /// member, in fleet order.  Fleet order IS cost order — `select`
+    /// ranks the frontier cheapest-first, partitioned fleets deploy the
+    /// ranked picks in place, and cluster fleets arrive flat re-ranked
+    /// power-ascending across boards ([`crate::cluster::build_fleet`]) —
+    /// so the index's in-order probe reproduces the cheapest-first scan
+    /// for every fleet shape.  `wait_ns` is the resolved staleness
+    /// budget; each member contributes its worst-case service bound
+    /// (renegotiation redeploys update it through
+    /// [`AdmissionIndex::set_max_service`](super::AdmissionIndex::set_max_service)).
+    pub fn admission_seed(&self, wait_ns: u64) -> super::AdmissionIndex {
+        let max_services: Vec<u64> = self.backends.iter().map(|b| b.max_service_ns()).collect();
+        super::AdmissionIndex::new(&max_services, wait_ns)
+    }
+
     /// Largest batch every member's service profile covers — the serving
     /// loop clamps its batch cap to this, so profile lookups can't go out
     /// of range however the fleet was built.

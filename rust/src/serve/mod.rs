@@ -71,7 +71,7 @@ pub use faults::{
 };
 pub use fleet::{Backend, Fleet, FleetBudget};
 pub use links::{LinkDemand, LinkLedger, MemberLink, NegotiationMode};
-pub use router::{route, BackendLoad, RouteDecision};
+pub use router::{route, AdmissionIndex, BackendLoad, RouteDecision};
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -708,6 +708,13 @@ struct ServeLoop<'a> {
     /// in the future relative to it, so staleness math never saturates.
     cursor_ns: u64,
     states: Vec<BackendState>,
+    /// Event-driven admission plane: cached per-backend bounds probed in
+    /// cost order ([`AdmissionIndex`]).  Every mutation of a bound
+    /// ingredient below (`busy_until`, the forming batch's flush
+    /// deadline, down/up/slowdown transitions, renegotiation redeploys)
+    /// is mirrored into it; debug builds cross-check every routing
+    /// decision against the linear-scan [`route`] oracle.
+    index: AdmissionIndex,
     responses: Vec<FleetResponse>,
     stats: AdmissionStats,
     shed: Vec<ShedRecord>,
@@ -776,13 +783,15 @@ impl<'a> ServeLoop<'a> {
             }
         };
         let applied = vec![false; schedule.len()];
+        let wait_ns = wait.as_nanos() as u64;
         ServeLoop {
             cfg,
             fleet,
             epoch: Instant::now(),
-            wait_ns: wait.as_nanos() as u64,
+            wait_ns,
             cursor_ns: 0,
             states,
+            index: fleet.admission_seed(wait_ns),
             responses: Vec::new(),
             stats: AdmissionStats::default(),
             shed: Vec::new(),
@@ -895,7 +904,35 @@ impl<'a> ServeLoop<'a> {
     /// when empty).  Evaluated at the cursor, where deadlines are exact.
     /// A down backend defers its flush to the recovery instant (a stall
     /// freezes the forming batch; a crash leaves the batcher empty).
+    ///
+    /// Event-maintained: the index carries the batch's *natural*
+    /// deadline (`first_enqueue + batch_wait`, updated when a rider
+    /// opens a batch and when a dispatch/flush/crash-drain empties it);
+    /// clamping to the cursor reproduces the batcher's saturating
+    /// staleness math exactly (a post-recovery stale batch flushes *at*
+    /// the cursor, never behind it).  Debug builds re-derive every read
+    /// from the batcher's clock and assert agreement.
     fn flush_deadline(&self, b: usize) -> Option<u64> {
+        let deadline = self.index.flush_deadline(b).map(|natural| {
+            let natural = natural.max(self.cursor_ns);
+            match self.states[b].down_until_ns {
+                Some(end) => natural.max(end),
+                None => natural,
+            }
+        });
+        debug_assert_eq!(
+            deadline,
+            self.flush_deadline_from_batcher(b),
+            "event-maintained flush deadline diverged from the batcher clock (backend {b})"
+        );
+        deadline
+    }
+
+    /// The batcher-clock reference implementation of
+    /// [`ServeLoop::flush_deadline`] — the pre-index derivation, kept so
+    /// debug builds can assert the event-maintained deadline never
+    /// diverges from it.
+    fn flush_deadline_from_batcher(&self, b: usize) -> Option<u64> {
         let natural = self.states[b]
             .batcher
             .time_until_stale(self.at(self.cursor_ns))
@@ -919,8 +956,8 @@ impl<'a> ServeLoop<'a> {
             .schedule
             .get(self.fault_cursor)
             .map(|e| (e.at_ns.max(self.cursor_ns), CLASS_FAULT, self.fault_cursor));
-        let flushes =
-            (0..self.states.len()).filter_map(|b| self.flush_deadline(b).map(|d| (d, CLASS_FLUSH, b)));
+        let flushes = (0..self.states.len())
+            .filter_map(|b| self.flush_deadline(b).map(|d| (d, CLASS_FLUSH, b)));
         recoveries.chain(fault).chain(flushes).min().filter(|&(when, _, _)| when <= limit_ns)
     }
 
@@ -936,6 +973,7 @@ impl<'a> ServeLoop<'a> {
             match class {
                 CLASS_RECOVER => {
                     self.states[idx].down_until_ns = None;
+                    self.index.set_up(idx);
                     if self.tracing() {
                         self.trace_instant("up", Self::tid_backend(idx), when, Vec::new());
                     }
@@ -949,6 +987,7 @@ impl<'a> ServeLoop<'a> {
                 }
                 _ => {
                     if let Some(batch) = self.states[idx].batcher.flush() {
+                        self.index.set_flush_deadline(idx, None);
                         if self.tracing() {
                             let args = vec![("batch".to_string(), Json::Num(batch.len() as f64))];
                             self.trace_instant("flush", Self::tid_backend(idx), when, args);
@@ -997,6 +1036,12 @@ impl<'a> ServeLoop<'a> {
                 st.downs += 1;
                 st.down_windows.push((now_ns, end));
                 self.degraded_windows.push((now_ns, end));
+                // the crash rewrote every bound ingredient at once
+                self.index.note_orphaned(b, orphans.len());
+                self.index.set_busy_until(b, now_ns);
+                self.index.set_flush_deadline(b, None);
+                self.index.clear_slowdown(b);
+                self.index.set_down(b);
                 if self.tracing() {
                     let args = vec![("until_ms".to_string(), Json::Num(end as f64 / 1e6))];
                     self.trace_instant("down", Self::tid_backend(b), now_ns, args);
@@ -1036,7 +1081,14 @@ impl<'a> ServeLoop<'a> {
                 st.down_until_ns = Some(st.down_until_ns.unwrap_or(0).max(end));
                 st.downs += 1;
                 st.down_windows.push((now_ns, end));
+                let busy = st.busy_until_ns;
                 self.degraded_windows.push((now_ns, end));
+                // the stall shifted the busy horizon and dropped the
+                // late batches; the frozen forming batch keeps its
+                // natural deadline (deferral to recovery is read-side)
+                self.index.note_orphaned(b, orphans.len());
+                self.index.set_busy_until(b, busy);
+                self.index.set_down(b);
                 if self.tracing() {
                     let args = vec![("until_ms".to_string(), Json::Num(end as f64 / 1e6))];
                     self.trace_instant("down", Self::tid_backend(b), now_ns, args);
@@ -1056,7 +1108,10 @@ impl<'a> ServeLoop<'a> {
                     st.slow_factor = factor;
                     st.slow_until_ns = end;
                 }
+                let (slow_until, slow_factor) = (st.slow_until_ns, st.slow_factor);
                 self.degraded_windows.push((now_ns, end));
+                // report the *merged* window (harsher-factor-wins)
+                self.index.set_slowdown(b, slow_until, slow_factor);
                 if self.tracing() {
                     let args = vec![
                         ("factor".to_string(), Json::Num(factor)),
@@ -1122,8 +1177,11 @@ impl<'a> ServeLoop<'a> {
                 anyhow!("re-deploying backend {b} at throttle {throttle:.4} after a fault: {e}")
             })?;
             nb.id = base.id;
+            let max_service = nb.max_service_ns();
             self.overrides[b] = Some(nb);
             self.cur_throttle[b] = throttle;
+            // the redeploy repriced the member's worst case
+            self.index.set_max_service(b, max_service);
         }
         if self.tracing() {
             let members_up = stretches.iter().filter(|s| s.is_some()).count();
@@ -1203,8 +1261,11 @@ impl<'a> ServeLoop<'a> {
                 anyhow!("re-deploying backend {b} at throttle {throttle:.4} after a fault: {e}")
             })?;
             nb.id = base.id;
+            let max_service = nb.max_service_ns();
             self.overrides[b] = Some(nb);
             self.cur_throttle[b] = throttle;
+            // the redeploy repriced the member's worst case
+            self.index.set_max_service(b, max_service);
         }
         if self.tracing() {
             let members_up = stretches.iter().filter(|s| s.is_some()).count();
@@ -1241,6 +1302,7 @@ impl<'a> ServeLoop<'a> {
                 let st = &mut self.states[b];
                 st.admitted -= riders.len();
                 st.in_flight -= riders.len();
+                self.index.note_orphaned(b, riders.len());
                 self.requeue(b, riders, now_ns);
                 return;
             }
@@ -1253,6 +1315,7 @@ impl<'a> ServeLoop<'a> {
             ops,
             riders: batch.into_iter().map(|(r, _)| r).collect(),
         });
+        self.index.set_busy_until(b, completion);
         if self.tracing() {
             let args = vec![
                 ("batch".to_string(), Json::Num(size as f64)),
@@ -1274,6 +1337,9 @@ impl<'a> ServeLoop<'a> {
             {
                 let batch = self.states[b].outstanding.pop_front().unwrap();
                 let size = batch.riders.len();
+                // retirement frees queue room but moves no bound
+                // ingredient — the index cache survives it
+                self.index.note_retired(b, size);
                 let st = &mut self.states[b];
                 st.in_flight -= size;
                 st.batches += 1;
@@ -1333,31 +1399,44 @@ impl<'a> ServeLoop<'a> {
     /// re-admission).  Routes against the rider's ORIGINAL deadline —
     /// an orphan gets no fresh SLO budget — and joins the chosen
     /// backend's forming batch.
-    fn admit(&mut self, rider: Rider, now_ns: u64) -> std::result::Result<RouteDecision, ShedReason> {
+    ///
+    /// This is the hot path: instead of rebuilding a [`BackendLoad`]
+    /// snapshot per arrival (the pre-index implementation, retained as
+    /// the [`route`] oracle), it probes the event-maintained
+    /// [`AdmissionIndex`] — cached bounds, up-backends in cost order,
+    /// one bound refresh per backend per virtual timestamp however deep
+    /// the arrival burst.  Debug builds rebuild the snapshot anyway and
+    /// assert the oracle reproduces the decision exactly.
+    fn admit(
+        &mut self,
+        rider: Rider,
+        now_ns: u64,
+    ) -> std::result::Result<RouteDecision, ShedReason> {
         let deadline_ns = rider.arrival_ns.saturating_add(self.cfg.slo_ns());
-        let loads: Vec<BackendLoad> = (0..self.states.len())
-            .map(|b| {
-                let st = &self.states[b];
-                BackendLoad {
-                    busy_until_ns: st.busy_until_ns,
-                    pending: st.batcher.pending_len(),
-                    flush_deadline_ns: self
-                        .flush_deadline(b)
-                        .unwrap_or_else(|| now_ns.saturating_add(self.wait_ns)),
-                    in_flight: st.in_flight,
-                    up: st.down_until_ns.is_none(),
-                    max_service_ns: self.max_service_at(b, now_ns),
-                }
-            })
-            .collect();
-        let decision = route(&loads, now_ns, deadline_ns, self.cfg.queue_cap)?;
+        let decision = self.index.route(now_ns, deadline_ns, self.cfg.queue_cap);
+        #[cfg(debug_assertions)]
+        self.check_route_oracle(now_ns, deadline_ns, &decision);
+        let decision = decision?;
         let b = decision.backend;
         let at = self.at(now_ns);
+        self.index.note_admitted(b);
         let st = &mut self.states[b];
         st.admitted += 1;
         st.in_flight += 1;
-        if let Some(batch) = st.batcher.push(rider, at) {
-            self.dispatch(b, batch, now_ns);
+        let opened_batch = st.batcher.pending_len() == 0;
+        match st.batcher.push(rider, at) {
+            Some(batch) => {
+                // the push emitted (full batch, or zero staleness
+                // budget): the batcher is empty again
+                self.index.set_flush_deadline(b, None);
+                self.dispatch(b, batch, now_ns);
+            }
+            None if opened_batch => {
+                // this rider started the forming batch: its natural
+                // staleness deadline is pinned from here until dispatch
+                self.index.set_flush_deadline(b, Some(now_ns.saturating_add(self.wait_ns)));
+            }
+            None => {}
         }
         if self.obs.is_some() {
             let depth = self.states[b].in_flight as u64;
@@ -1369,6 +1448,57 @@ impl<'a> ServeLoop<'a> {
             }
         }
         Ok(decision)
+    }
+
+    /// Debug-only equivalence proof, run on EVERY admission: rebuild the
+    /// full [`BackendLoad`] snapshot exactly the way the pre-index
+    /// implementation did, route it through the linear-scan oracle, and
+    /// assert the indexed decision (backend, bound, scan count — or the
+    /// shed reason) is identical.  Also asserts the index's per-backend
+    /// mirrors (`in_flight`, `up`, `busy_until`) against the loop state,
+    /// so a missed event surfaces at the first arrival that could
+    /// observe it rather than as a silently different schedule.
+    #[cfg(debug_assertions)]
+    fn check_route_oracle(
+        &self,
+        now_ns: u64,
+        deadline_ns: u64,
+        decision: &std::result::Result<RouteDecision, ShedReason>,
+    ) {
+        let loads: Vec<BackendLoad> = (0..self.states.len())
+            .map(|b| {
+                let st = &self.states[b];
+                let l = BackendLoad {
+                    busy_until_ns: st.busy_until_ns,
+                    pending: st.batcher.pending_len(),
+                    flush_deadline_ns: self
+                        .flush_deadline_from_batcher(b)
+                        .unwrap_or_else(|| now_ns.saturating_add(self.wait_ns)),
+                    in_flight: st.in_flight,
+                    up: st.down_until_ns.is_none(),
+                    max_service_ns: self.max_service_at(b, now_ns),
+                };
+                assert_eq!(l.in_flight, self.index.in_flight(b), "index in_flight mirror (b={b})");
+                assert_eq!(l.up, self.index.is_up(b), "index up mirror (b={b})");
+                assert_eq!(
+                    l.busy_until_ns,
+                    self.index.busy_until_ns(b),
+                    "index busy mirror (b={b})"
+                );
+                l
+            })
+            .collect();
+        match (route(&loads, now_ns, deadline_ns, self.cfg.queue_cap), decision) {
+            (Ok(o), Ok(i)) => assert_eq!(
+                (o.backend, o.completion_bound_ns, o.scanned),
+                (i.backend, i.completion_bound_ns, i.scanned),
+                "indexed admission diverged from the oracle at t={now_ns}"
+            ),
+            (Err(o), Err(i)) => {
+                assert_eq!(o, *i, "indexed shed reason diverged from the oracle at t={now_ns}")
+            }
+            (o, i) => panic!("oracle {o:?} vs indexed {i:?} at t={now_ns}"),
+        }
     }
 
     /// Re-admit riders orphaned off `source` by a fault: oldest deadline

@@ -44,6 +44,25 @@
 //! `max_service_ns` already reflects the member's board share and the
 //! `admission ⇒ compliance` argument carries over unchanged to
 //! co-resident backends.
+//!
+//! # Two implementations, one contract
+//!
+//! [`route`] is the **linear-scan oracle**: it rebuilds nothing, trusts a
+//! caller-assembled [`BackendLoad`] snapshot, and scans every backend per
+//! request.  [`AdmissionIndex`] is the **event-driven hot path** the
+//! serving loop actually runs: per-backend admission bounds are *cached*
+//! and invalidated only by the events that change their ingredients
+//! (batch dispatch, staleness flush, fault down/up/slowdown transitions,
+//! link-renegotiation redeploys), up-backends are kept in a
+//! cheapest-first probe list, and arrivals landing at the same virtual
+//! timestamp reuse one bound refresh.  The two must agree decision for
+//! decision — in debug builds the serving loop cross-checks every
+//! admission against the oracle, and a cached bound that disagrees with
+//! its recomputed ingredients panics (`rust/tests/router_index.rs`
+//! replays randomized faulted/partitioned/cluster traffic through both).
+//! `RouteDecision::scanned` keeps its meaning on both paths:
+//! candidates considered in cost order, counting skipped-down positions,
+//! exactly what the `serve.route_scanned` histogram has always reported.
 
 use super::admission::ShedReason;
 
@@ -79,7 +98,10 @@ pub struct RouteDecision {
     pub completion_bound_ns: u64,
     /// How many backends the scan considered before this one admitted
     /// (1 = first choice took it).  Routing effort, surfaced as the
-    /// `serve.route_scanned` histogram by the observability layer.
+    /// `serve.route_scanned` histogram by the observability layer; the
+    /// indexed path counts identically (candidates in cost order,
+    /// including skipped-down positions), so the histogram keeps meaning
+    /// probes-considered regardless of which implementation routed.
     pub scanned: usize,
 }
 
@@ -89,6 +111,10 @@ pub struct RouteDecision {
 /// `Err` is the shed reason: `Fault` when every backend is down,
 /// `Capacity` when every *up* queue was full, `Slo` when room existed
 /// but no completion bound fit `deadline_ns`.
+///
+/// This is the reference implementation — the serving loop routes
+/// through [`AdmissionIndex::route`] and (in debug builds) asserts it
+/// agrees with this scan on every arrival.
 pub fn route(
     loads: &[BackendLoad],
     now_ns: u64,
@@ -124,6 +150,288 @@ pub fn route(
     } else {
         ShedReason::Capacity
     })
+}
+
+/// One backend's event-maintained admission state inside the
+/// [`AdmissionIndex`].  The cached bound is the routing-time
+/// `max(busy_until, flush_deadline) + effective_max_service` — valid
+/// until an event dirties an ingredient, the probe timestamp moves while
+/// the batcher is empty (an empty batcher's flush deadline tracks `now`),
+/// or the probe crosses the slowdown-window edge (the stretch expires
+/// passively, without an event).
+#[derive(Debug, Clone)]
+struct IndexEntry {
+    busy_until_ns: u64,
+    /// Natural staleness deadline of the forming batch
+    /// (`first_enqueue + batch_wait`); `None` while the batcher is empty.
+    /// Down-time deferral is the serving loop's read-side concern — down
+    /// backends are never probed here.
+    flush_deadline_ns: Option<u64>,
+    in_flight: usize,
+    up: bool,
+    /// Base (unstretched) worst case of the *live* deployment — updated
+    /// when a link renegotiation redeploys the member.
+    max_service_ns: u64,
+    slow_until_ns: u64,
+    slow_factor: f64,
+    cached_bound_ns: u64,
+    cached_at_ns: u64,
+    cache_valid: bool,
+}
+
+impl IndexEntry {
+    /// Recompute the admission bound from the ingredients at `now_ns` —
+    /// term for term the expression [`route`] evaluates.
+    fn bound_at(&self, wait_ns: u64, now_ns: u64) -> u64 {
+        let flush = self.flush_deadline_ns.unwrap_or_else(|| now_ns.saturating_add(wait_ns));
+        let ms = if now_ns < self.slow_until_ns {
+            (self.max_service_ns as f64 * self.slow_factor).ceil() as u64
+        } else {
+            self.max_service_ns
+        };
+        self.busy_until_ns.max(flush).saturating_add(ms)
+    }
+
+    /// Whether the cached bound is still exact at `now_ns`: nothing
+    /// dirtied it, and either the probe timestamp is unchanged (the
+    /// same-burst reuse) or every ingredient is time-invariant — a
+    /// forming batch pins the flush term, and `now` sits on the same
+    /// side of the slowdown edge as when the bound was computed.
+    fn cache_usable(&self, now_ns: u64) -> bool {
+        self.cache_valid
+            && (self.cached_at_ns == now_ns
+                || (self.flush_deadline_ns.is_some()
+                    && (self.cached_at_ns < self.slow_until_ns) == (now_ns < self.slow_until_ns)))
+    }
+
+    fn invalidate(&mut self) {
+        self.cache_valid = false;
+    }
+}
+
+/// Event-driven admission plane: the indexed replacement for rebuilding
+/// a [`BackendLoad`] snapshot per arrival.
+///
+/// * **Cheapest-first structure** — fleet positions *are* the cost order
+///   ([`Fleet::ranked`](super::Fleet) sorts by power at build time, and a
+///   recovering backend rejoins at its old position), so the index keeps
+///   the up-backends as a sorted position list and probes it in order.
+/// * **Cached bounds** — each entry caches its admission bound and the
+///   instant it was computed; only the events that change an ingredient
+///   invalidate it (dispatch moves `busy_until`, a push/flush moves the
+///   flush deadline, fault transitions and renegotiation redeploys move
+///   health/stretch/service).  Batch completion only frees queue room,
+///   so retirement deliberately does *not* invalidate.
+/// * **Burst batching** — arrivals at the same virtual timestamp hit the
+///   `cached_at == now` fast path: one bound refresh per backend per
+///   timestamp, however deep the burst.
+///
+/// The owner must mirror every state mutation through the event methods;
+/// in debug builds a cache hit re-derives the bound and asserts equality,
+/// so a *missed* invalidation is unrepresentable rather than silently
+/// conservative (see `stale_cache_trips_the_debug_invariant`).
+pub struct AdmissionIndex {
+    entries: Vec<IndexEntry>,
+    /// Up backends, ascending position == ascending cost.
+    up_list: Vec<usize>,
+    wait_ns: u64,
+}
+
+impl AdmissionIndex {
+    /// One entry per backend, in fleet (cost) order, all up and idle.
+    /// `max_services[b]` is member `b`'s worst-case service bound;
+    /// `wait_ns` is the resolved staleness budget (an empty batcher
+    /// flushes no later than `now + wait_ns`).
+    pub fn new(max_services: &[u64], wait_ns: u64) -> AdmissionIndex {
+        AdmissionIndex {
+            entries: max_services
+                .iter()
+                .map(|&ms| IndexEntry {
+                    busy_until_ns: 0,
+                    flush_deadline_ns: None,
+                    in_flight: 0,
+                    up: true,
+                    max_service_ns: ms,
+                    slow_until_ns: 0,
+                    slow_factor: 1.0,
+                    cached_bound_ns: 0,
+                    cached_at_ns: 0,
+                    cache_valid: false,
+                })
+                .collect(),
+            up_list: (0..max_services.len()).collect(),
+            wait_ns,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The event-maintained natural flush deadline (`None` = empty
+    /// batcher).  The serving loop's event pump reads this instead of
+    /// re-deriving staleness from the batcher's clock.
+    pub fn flush_deadline(&self, b: usize) -> Option<u64> {
+        self.entries[b].flush_deadline_ns
+    }
+
+    pub fn in_flight(&self, b: usize) -> usize {
+        self.entries[b].in_flight
+    }
+
+    pub fn is_up(&self, b: usize) -> bool {
+        self.entries[b].up
+    }
+
+    pub fn busy_until_ns(&self, b: usize) -> u64 {
+        self.entries[b].busy_until_ns
+    }
+
+    /// Route one arrival against the cached bounds: probe the up-list in
+    /// cost order, admit the first backend with queue room whose bound
+    /// fits `deadline_ns`.  Decisions, shed reasons, bounds, and
+    /// `scanned` are identical to [`route`] over an equivalent snapshot.
+    pub fn route(
+        &mut self,
+        now_ns: u64,
+        deadline_ns: u64,
+        queue_cap: usize,
+    ) -> Result<RouteDecision, ShedReason> {
+        let mut any_room = false;
+        for &b in &self.up_list {
+            let e = &mut self.entries[b];
+            if e.in_flight >= queue_cap {
+                continue;
+            }
+            any_room = true;
+            debug_assert!(
+                e.flush_deadline_ns.map_or(true, |f| f >= now_ns),
+                "stale batch not flushed before routing"
+            );
+            let bound = if e.cache_usable(now_ns) {
+                // a stale cached bound must be unrepresentable, not
+                // silently conservative: every debug-mode cache hit is
+                // re-derived and compared
+                debug_assert_eq!(
+                    e.cached_bound_ns,
+                    e.bound_at(self.wait_ns, now_ns),
+                    "cached admission bound diverged from its ingredients (missed invalidation?)"
+                );
+                e.cached_bound_ns
+            } else {
+                let fresh = e.bound_at(self.wait_ns, now_ns);
+                e.cached_bound_ns = fresh;
+                e.cached_at_ns = now_ns;
+                e.cache_valid = true;
+                fresh
+            };
+            if bound <= deadline_ns {
+                return Ok(RouteDecision { backend: b, completion_bound_ns: bound, scanned: b + 1 });
+            }
+        }
+        Err(if self.up_list.is_empty() {
+            ShedReason::Fault
+        } else if any_room {
+            ShedReason::Slo
+        } else {
+            ShedReason::Capacity
+        })
+    }
+
+    /// An admitted rider joined backend `b`'s forming batch.  Queue room
+    /// only — the flush-deadline move is reported separately by
+    /// [`AdmissionIndex::set_flush_deadline`].
+    pub fn note_admitted(&mut self, b: usize) {
+        self.entries[b].in_flight += 1;
+    }
+
+    /// `k` riders retired off backend `b` (batch completion).  Frees
+    /// queue room; the bound's ingredients are untouched, so the cache
+    /// deliberately survives.
+    pub fn note_retired(&mut self, b: usize, k: usize) {
+        self.entries[b].in_flight -= k;
+    }
+
+    /// `k` riders orphaned off backend `b` (crash drain, stall
+    /// late-batch drop, fault-mode dispatch orphaning).  Frees queue
+    /// room like retirement.
+    pub fn note_orphaned(&mut self, b: usize, k: usize) {
+        self.entries[b].in_flight -= k;
+    }
+
+    /// Batch dispatch (or a crash/stall rewriting the busy horizon).
+    pub fn set_busy_until(&mut self, b: usize, busy_until_ns: u64) {
+        let e = &mut self.entries[b];
+        e.busy_until_ns = busy_until_ns;
+        e.invalidate();
+    }
+
+    /// The forming batch's natural staleness deadline moved: `Some` when
+    /// a rider started a fresh batch, `None` when a flush (staleness,
+    /// full batch, crash drain) emptied the batcher.
+    pub fn set_flush_deadline(&mut self, b: usize, deadline_ns: Option<u64>) {
+        let e = &mut self.entries[b];
+        e.flush_deadline_ns = deadline_ns;
+        e.invalidate();
+    }
+
+    /// Crash/stall transition: backend `b` leaves the admission order.
+    pub fn set_down(&mut self, b: usize) {
+        let e = &mut self.entries[b];
+        e.up = false;
+        e.invalidate();
+        if let Ok(i) = self.up_list.binary_search(&b) {
+            self.up_list.remove(i);
+        }
+    }
+
+    /// Recovery: backend `b` rejoins the cheapest-first order at its old
+    /// position.
+    pub fn set_up(&mut self, b: usize) {
+        let e = &mut self.entries[b];
+        e.up = true;
+        e.invalidate();
+        if let Err(i) = self.up_list.binary_search(&b) {
+            self.up_list.insert(i, b);
+        }
+    }
+
+    /// Slowdown window transition (the serving loop reports the merged
+    /// window, harsher-factor-wins semantics included).  The passive
+    /// *expiry* of the window needs no event: the cache is timestamp-
+    /// aware and recomputes when a probe crosses `slow_until_ns`.
+    pub fn set_slowdown(&mut self, b: usize, slow_until_ns: u64, slow_factor: f64) {
+        let e = &mut self.entries[b];
+        e.slow_until_ns = slow_until_ns;
+        e.slow_factor = slow_factor;
+        e.invalidate();
+    }
+
+    /// A crash cleared the slowdown window with the rest of the state.
+    pub fn clear_slowdown(&mut self, b: usize) {
+        self.set_slowdown(b, 0, 1.0);
+    }
+
+    /// A link renegotiation redeployed member `b`: its worst-case
+    /// service bound now reflects the new throttle.
+    pub fn set_max_service(&mut self, b: usize, max_service_ns: u64) {
+        let e = &mut self.entries[b];
+        e.max_service_ns = max_service_ns;
+        e.invalidate();
+    }
+
+    /// Test-only back door: rewrite `b`'s busy horizon WITHOUT
+    /// invalidating the cached bound — simulates a missed invalidation
+    /// event so tests can prove the debug invariant makes a stale cache
+    /// unrepresentable.  Never call outside tests.
+    #[doc(hidden)]
+    pub fn corrupt_busy_until_for_test(&mut self, b: usize, busy_until_ns: u64) {
+        self.entries[b].busy_until_ns = busy_until_ns;
+    }
 }
 
 #[cfg(test)]
@@ -183,5 +491,144 @@ mod tests {
         let loads = [load(900, 0, true, 90)];
         assert!(route(&loads, 950, 1_000, 8).is_ok());
         assert_eq!(route(&loads, 950, 989, 8).unwrap_err(), ShedReason::Slo);
+    }
+
+    // --- the indexed path against the oracle ---
+
+    /// Mirror an index state as the oracle's snapshot at `now`.
+    fn snapshot(ix: &AdmissionIndex, now: u64, wait: u64) -> Vec<BackendLoad> {
+        (0..ix.len())
+            .map(|b| BackendLoad {
+                busy_until_ns: ix.busy_until_ns(b),
+                pending: 0,
+                flush_deadline_ns: ix
+                    .flush_deadline(b)
+                    .unwrap_or_else(|| now.saturating_add(wait)),
+                in_flight: ix.in_flight(b),
+                up: ix.is_up(b),
+                max_service_ns: ix.entries[b].bound_effective_service(now),
+            })
+            .collect()
+    }
+
+    impl IndexEntry {
+        /// Effective (slowdown-stretched) service, for test snapshots.
+        fn bound_effective_service(&self, now_ns: u64) -> u64 {
+            if now_ns < self.slow_until_ns {
+                (self.max_service_ns as f64 * self.slow_factor).ceil() as u64
+            } else {
+                self.max_service_ns
+            }
+        }
+    }
+
+    fn assert_agree(ix: &mut AdmissionIndex, now: u64, deadline: u64, cap: usize) {
+        let loads = snapshot(ix, now, ix.wait_ns);
+        let oracle = route(&loads, now, deadline, cap);
+        match (oracle, ix.route(now, deadline, cap)) {
+            (Ok(o), Ok(i)) => assert_eq!(
+                (o.backend, o.completion_bound_ns, o.scanned),
+                (i.backend, i.completion_bound_ns, i.scanned),
+                "indexed decision diverged at now={now}"
+            ),
+            (Err(o), Err(i)) => assert_eq!(o, i, "shed reason diverged at now={now}"),
+            (o, i) => panic!("oracle {o:?} vs indexed {i:?} at now={now}"),
+        }
+    }
+
+    #[test]
+    fn index_agrees_with_oracle_through_an_event_script() {
+        let mut ix = AdmissionIndex::new(&[40, 90, 250], 100);
+        let cap = 4;
+        // idle fleet: cheapest wins, burst reuses the cached bound
+        assert_agree(&mut ix, 0, 1_000, cap);
+        assert_agree(&mut ix, 0, 1_000, cap);
+        // admit onto 0 and open a forming batch; the cached bound now
+        // survives across timestamps (flush term pinned)
+        ix.note_admitted(0);
+        ix.set_flush_deadline(0, Some(100));
+        assert_agree(&mut ix, 10, 150, cap);
+        assert_agree(&mut ix, 40, 180, cap);
+        // dispatch: busy moves, flush clears
+        ix.set_busy_until(0, 140);
+        ix.set_flush_deadline(0, None);
+        assert_agree(&mut ix, 100, 260, cap);
+        // crash 0, stall-shift 1's horizon, probe mid-outage
+        ix.note_orphaned(0, 1);
+        ix.set_busy_until(0, 100);
+        ix.set_down(0);
+        ix.set_busy_until(1, 400);
+        assert_agree(&mut ix, 110, 600, cap);
+        // slowdown on 2 with a forming batch pinning its flush term: the
+        // stretched bound caches across timestamps, and a probe that
+        // crosses the slowdown edge recomputes at base service even
+        // though the expiry fires no event
+        ix.set_slowdown(2, 300, 2.5);
+        ix.note_admitted(2);
+        ix.set_flush_deadline(2, Some(400));
+        assert_agree(&mut ix, 120, 480, cap); // 1 infeasible -> probes 2 stretched -> Slo
+        assert_agree(&mut ix, 120, 480, cap); // same-timestamp reuse of the cached bound
+        assert_agree(&mut ix, 350, 530, cap); // crossed the slow edge -> recompute at base
+        // staleness pump fires 2's forming batch at its deadline
+        ix.set_busy_until(2, 650);
+        ix.set_flush_deadline(2, None);
+        // recovery rejoins at the old (cheapest) position
+        ix.set_up(0);
+        assert_agree(&mut ix, 400, 800, cap);
+        // renegotiation redeploy moves the service bound
+        ix.set_max_service(1, 55);
+        assert_agree(&mut ix, 420, 800, cap);
+        // saturate everything: capacity vs slo vs fault reasons
+        for b in 0..3 {
+            for _ in 0..cap {
+                ix.note_admitted(b);
+            }
+        }
+        assert_agree(&mut ix, 500, 10_000, cap); // all full -> Capacity
+        ix.note_retired(2, cap);
+        assert_agree(&mut ix, 500, 1, cap); // room, hopeless deadline -> Slo
+        ix.set_down(0);
+        ix.set_down(1);
+        ix.set_down(2);
+        assert_agree(&mut ix, 600, 10_000, cap); // everyone down -> Fault
+    }
+
+    #[test]
+    fn index_scanned_counts_skipped_down_positions() {
+        let mut ix = AdmissionIndex::new(&[10, 10, 10], 50);
+        ix.set_down(0);
+        let d = ix.route(0, 1_000, 8).unwrap();
+        assert_eq!(d.backend, 1);
+        assert_eq!(d.scanned, 2, "scanned keeps meaning probes-considered in cost order");
+    }
+
+    #[test]
+    fn burst_at_one_timestamp_refreshes_each_bound_once() {
+        let mut ix = AdmissionIndex::new(&[10, 20], 50);
+        let first = ix.route(100, 1_000, 8).unwrap();
+        assert!(ix.entries[0].cache_valid && ix.entries[0].cached_at_ns == 100);
+        // the rest of the burst reuses the cached bound verbatim
+        for _ in 0..4 {
+            let again = ix.route(100, 1_000, 8).unwrap();
+            assert_eq!(again.completion_bound_ns, first.completion_bound_ns);
+        }
+        // an empty batcher's bound tracks now: a later probe recomputes
+        let later = ix.route(200, 1_000, 8).unwrap();
+        assert_eq!(later.completion_bound_ns, first.completion_bound_ns + 100);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "missed invalidation")]
+    fn stale_cache_trips_the_debug_invariant() {
+        let mut ix = AdmissionIndex::new(&[10], 50);
+        // open a forming batch so the cached bound survives across
+        // timestamps, then mutate an ingredient behind the cache's back
+        ix.note_admitted(0);
+        ix.set_flush_deadline(0, Some(120));
+        ix.route(100, 1_000, 8).unwrap();
+        ix.corrupt_busy_until_for_test(0, 5_000);
+        // the cache still claims validity — the debug recompute must trip
+        let _ = ix.route(110, 10_000, 8);
     }
 }

@@ -8,6 +8,11 @@
 //!   sheds at most the dead board's in-flight share while the surviving
 //!   board keeps admitting, and per-board availability records the
 //!   outage;
+//! * **rack link_degrade → every board rethrottles** — a fault spec
+//!   written in rack vocabulary (`nic_scale`/`switch_scale`) shrinks the
+//!   cluster NIC pool mid-run; the loop renegotiates once at the event
+//!   instant, no member's stretch relaxes, at least one tightens, and
+//!   availability stays 1.0 (link faults down nobody);
 //! * **1-board cluster ≡ --partition** — a cluster of one board behind
 //!   uncontended network pools serves byte-identically to the same
 //!   config run with `--partition` (modulo the schema tag and the
@@ -157,6 +162,78 @@ fn board_crash_sheds_only_its_share_and_survivors_keep_admitting() {
         assert_eq!(e.at_ns, crash_at);
         assert!(matches!(e.kind, FaultKind::Crash { .. }), "expanded to member crashes");
     }
+}
+
+#[test]
+fn rack_link_degrade_renegotiates_the_net_pools_and_rethrottles_members() {
+    // size the NIC pool from the boards' actual host-I/O appetite so the
+    // baseline is mildly contended and shrinking the pool must bite
+    let base = two_board_cfg();
+    let probe = build_fleet(&base, base.cluster.as_ref().unwrap()).unwrap();
+    let host_gbps: f64 = probe
+        .cluster
+        .as_ref()
+        .unwrap()
+        .boards
+        .iter()
+        .flat_map(|bl| bl.budget.links.as_ref().unwrap().members.iter())
+        .map(|m| m.demand.pcie_gbps)
+        .sum();
+    assert!(host_gbps > 0.0, "members must demand host I/O");
+    let mut cfg = base;
+    cfg.cluster = Some(spec_of(&format!(
+        r#"{{"boards": ["vck5000", "vck5000-limited-64"], "nic_gbps": {}, "switch_gbps": 1000}}"#,
+        0.6 * host_gbps
+    )));
+    // the fault spec speaks rack vocabulary: nic_scale/switch_scale are
+    // the cluster aliases for the two shared link-pool slots
+    cfg.faults = Some(FaultPolicy::Schedule(
+        FaultSchedule::from_json(
+            &Json::parse(
+                r#"[{"at_ms": 30, "kind": "link_degrade", "nic_scale": 0.5, "switch_scale": 1}]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap(),
+    ));
+    let fleet = build_fleet(&cfg, cfg.cluster.as_ref().unwrap()).unwrap();
+    let cb = fleet.cluster.clone().unwrap();
+    let r = serve_fleet_on(&cfg, &fleet).unwrap();
+    check_invariants(&r, &cfg, "rack-degrade");
+    assert!(r.admission.completed > 0, "a degraded rack still serves");
+
+    // exactly one renegotiation, at the fault instant, with every member
+    // still up: a halved NIC pool can only tighten stretches, and at
+    // least one board's grant must actually shrink
+    let f = r.faults.as_ref().expect("fault runs carry the faults block");
+    assert_eq!(f.timeline.len(), 1, "one link event in the schedule");
+    assert!(f.timeline[0].1, "the degrade fires inside the horizon");
+    assert!(matches!(f.timeline[0].0.kind, FaultKind::LinkDegrade { .. }));
+    assert_eq!(f.renegotiations.len(), 1, "one link event, one renegotiation");
+    let (at, stretches) = &f.renegotiations[0];
+    assert_eq!(*at, 30 * MS);
+    assert_eq!(stretches.len(), r.n_backends);
+    let mut tightened = 0;
+    for (g, s) in stretches.iter().enumerate() {
+        let s = s.expect("no member is down during a pure link fault");
+        let deployed = 1.0 / cb.members[g].throttle;
+        assert!(
+            s >= deployed - 1e-9,
+            "member {g}: renegotiated stretch {s} relaxed below deployed {deployed}"
+        );
+        if s > deployed + 1e-9 {
+            tightened += 1;
+        }
+    }
+    assert!(tightened >= 1, "halving an oversubscribed NIC pool must throttle someone");
+
+    // nobody went down, and the degraded era reproduces byte for byte
+    let usage = r.cluster.as_ref().unwrap().board_usage(&r);
+    for (j, u) in usage.iter().enumerate() {
+        assert_eq!(u.availability, 1.0, "board {j}: link faults down no members");
+    }
+    let again = serve_fleet_on(&cfg, &fleet).unwrap();
+    assert_eq!(r.to_json().to_string(), again.to_json().to_string(), "same seed, same bytes");
 }
 
 #[test]

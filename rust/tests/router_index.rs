@@ -1,0 +1,382 @@
+//! Equivalence oracle for the indexed admission plane.
+//!
+//! The serving loop routes through [`AdmissionIndex`] (event-maintained
+//! cached bounds, cheapest-first probe order); `router::route` is
+//! retained as the linear-scan reference.  Two layers of proof here:
+//!
+//! * **randomized event scripts** — a seeded generator drives an
+//!   [`AdmissionIndex`] and a plain mirror state through thousands of
+//!   admission/dispatch/retire/crash/stall/slowdown/recovery/redeploy
+//!   events, probing both routers after every step (including repeated
+//!   probes at one virtual timestamp, the burst fast path) and asserting
+//!   identical decisions, bounds, scan counts, and shed reasons;
+//! * **whole-loop replays** — faulted, partitioned, and cluster serve
+//!   runs per seed.  Under `cargo test` (debug assertions on) the loop
+//!   itself cross-checks EVERY admission against the oracle and every
+//!   flush-deadline read against the batcher clock, so these runs are
+//!   per-arrival equivalence proofs; the tests additionally pin byte
+//!   determinism of the run JSON and the admission invariants, so the
+//!   indexed plane provably changes no observable output.
+
+use std::collections::BTreeSet;
+
+use cat::config::{HardwareConfig, ModelConfig};
+use cat::serve::{
+    route, serve_fleet, AdmissionIndex, BackendLoad, FaultPolicy, FleetConfig, FleetReport,
+    ShedReason,
+};
+
+const MS: u64 = 1_000_000;
+
+/// Tiny deterministic generator (xorshift64*) — no external deps, fixed
+/// streams per seed.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// Plain mirror of one backend's admission state — the "recompute
+/// everything" representation the oracle snapshots from.
+#[derive(Clone)]
+struct Mirror {
+    busy: u64,
+    flush: Option<u64>,
+    in_flight: usize,
+    up: bool,
+    base_service: u64,
+    slow_until: u64,
+    slow_factor: f64,
+}
+
+fn snapshot(mirrors: &[Mirror], now: u64, wait: u64) -> Vec<BackendLoad> {
+    mirrors
+        .iter()
+        .map(|m| BackendLoad {
+            busy_until_ns: m.busy,
+            pending: 0,
+            flush_deadline_ns: m.flush.unwrap_or_else(|| now.saturating_add(wait)),
+            in_flight: m.in_flight,
+            up: m.up,
+            max_service_ns: if now < m.slow_until {
+                (m.base_service as f64 * m.slow_factor).ceil() as u64
+            } else {
+                m.base_service
+            },
+        })
+        .collect()
+}
+
+fn assert_agree(
+    ix: &mut AdmissionIndex,
+    mirrors: &[Mirror],
+    now: u64,
+    deadline: u64,
+    cap: usize,
+    wait: u64,
+    label: &str,
+) {
+    let loads = snapshot(mirrors, now, wait);
+    let oracle = route(&loads, now, deadline, cap);
+    let indexed = ix.route(now, deadline, cap);
+    match (oracle, indexed) {
+        (Ok(o), Ok(i)) => assert_eq!(
+            (o.backend, o.completion_bound_ns, o.scanned),
+            (i.backend, i.completion_bound_ns, i.scanned),
+            "{label}: decision diverged at now={now} deadline={deadline}"
+        ),
+        (Err(o), Err(i)) => {
+            assert_eq!(o, i, "{label}: shed reason diverged at now={now} deadline={deadline}")
+        }
+        (o, i) => panic!("{label}: oracle {o:?} vs indexed {i:?} at now={now}"),
+    }
+}
+
+/// Fire every pending flush whose deadline passed on an up backend —
+/// the serving loop's pump guarantee that routing never sees a stale
+/// forming batch.  Down backends keep theirs (deferral to recovery).
+fn pump(ix: &mut AdmissionIndex, mirrors: &mut [Mirror], now: u64, rng: &mut Rng) {
+    for (b, m) in mirrors.iter_mut().enumerate() {
+        if m.up {
+            if let Some(f) = m.flush {
+                if f < now {
+                    let service = 1 + rng.below(3 * MS);
+                    m.busy = m.busy.max(f).saturating_add(service);
+                    m.flush = None;
+                    ix.set_busy_until(b, m.busy);
+                    ix.set_flush_deadline(b, None);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn randomized_event_scripts_agree_with_the_linear_scan_oracle() {
+    for seed in [3, 11, 0xFEED] {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(7) as usize; // 2..=8 backends
+        let wait = (1 + rng.below(10)) * MS / 10;
+        let services: Vec<u64> = (0..n).map(|_| (5 + rng.below(40)) * MS / 10).collect();
+        let mut ix = AdmissionIndex::new(&services, wait);
+        let mut mirrors: Vec<Mirror> = services
+            .iter()
+            .map(|&s| Mirror {
+                busy: 0,
+                flush: None,
+                in_flight: 0,
+                up: true,
+                base_service: s,
+                slow_until: 0,
+                slow_factor: 1.0,
+            })
+            .collect();
+        let cap = 2 + rng.below(6) as usize;
+        let mut now = 0u64;
+        for step in 0..600 {
+            // ~1 step in 4 keeps the timestamp (same-burst fast path)
+            if rng.below(4) != 0 {
+                now += rng.below(2 * wait + 1);
+            }
+            pump(&mut ix, &mut mirrors, now, &mut rng);
+            let b = rng.below(n as u64) as usize;
+            let m = &mut mirrors[b];
+            match rng.below(9) {
+                0 => {
+                    // admission: queue room + (maybe) opening a batch
+                    m.in_flight += 1;
+                    ix.note_admitted(b);
+                    if m.up && m.flush.is_none() {
+                        m.flush = Some(now.saturating_add(wait));
+                        ix.set_flush_deadline(b, Some(now.saturating_add(wait)));
+                    }
+                }
+                1 => {
+                    // dispatch: busy moves, forming batch clears
+                    let service = 1 + rng.below(4 * MS);
+                    m.busy = m.busy.max(now).saturating_add(service);
+                    m.flush = None;
+                    ix.set_busy_until(b, m.busy);
+                    ix.set_flush_deadline(b, None);
+                }
+                2 => {
+                    // retirement frees room without touching the bound
+                    if m.in_flight > 0 {
+                        let k = 1 + rng.below(m.in_flight as u64) as usize;
+                        m.in_flight -= k;
+                        ix.note_retired(b, k);
+                    }
+                }
+                3 => {
+                    // crash: lose everything, leave the rotation
+                    let orphans = m.in_flight;
+                    m.in_flight = 0;
+                    m.busy = now;
+                    m.flush = None;
+                    m.slow_until = 0;
+                    m.slow_factor = 1.0;
+                    m.up = false;
+                    ix.note_orphaned(b, orphans);
+                    ix.set_busy_until(b, now);
+                    ix.set_flush_deadline(b, None);
+                    ix.clear_slowdown(b);
+                    ix.set_down(b);
+                }
+                4 => {
+                    // stall: horizon shifts, forming batch freezes
+                    if m.busy > now {
+                        m.busy = m.busy.saturating_add(rng.below(5 * MS));
+                        ix.set_busy_until(b, m.busy);
+                    }
+                    m.up = false;
+                    ix.set_down(b);
+                }
+                5 => {
+                    // recovery: rejoin at the old position; a frozen
+                    // batch whose deadline passed flushes AT recovery
+                    if !m.up {
+                        m.up = true;
+                        ix.set_up(b);
+                        if m.flush.is_some_and(|f| f < now) {
+                            let service = 1 + rng.below(3 * MS);
+                            m.busy = m.busy.max(now).saturating_add(service);
+                            m.flush = None;
+                            ix.set_busy_until(b, m.busy);
+                            ix.set_flush_deadline(b, None);
+                        }
+                    }
+                }
+                6 => {
+                    // slowdown window (merged, harsher factor wins)
+                    let end = now + rng.below(20 * MS);
+                    let factor = 1.0 + rng.below(30) as f64 / 10.0;
+                    if now < m.slow_until {
+                        m.slow_factor = m.slow_factor.max(factor);
+                        m.slow_until = m.slow_until.max(end);
+                    } else {
+                        m.slow_factor = factor;
+                        m.slow_until = end;
+                    }
+                    ix.set_slowdown(b, m.slow_until, m.slow_factor);
+                }
+                7 => {
+                    // renegotiation redeploy repriced the worst case
+                    m.base_service = (5 + rng.below(40)) * MS / 10;
+                    ix.set_max_service(b, m.base_service);
+                }
+                _ => {} // quiet step: probe-only
+            }
+            // getter mirrors stay exact
+            assert_eq!(ix.in_flight(b), mirrors[b].in_flight, "in_flight mirror (seed {seed})");
+            assert_eq!(ix.is_up(b), mirrors[b].up, "up mirror (seed {seed})");
+            assert_eq!(ix.busy_until_ns(b), mirrors[b].busy, "busy mirror (seed {seed})");
+            assert_eq!(ix.flush_deadline(b), mirrors[b].flush, "flush mirror (seed {seed})");
+            // probe repeatedly at the same instant: bursts must reuse the
+            // cached bounds and still agree with the recomputing oracle
+            let label = format!("seed {seed} step {step}");
+            for _ in 0..3 {
+                let deadline = now + rng.below(40 * MS);
+                assert_agree(&mut ix, &mirrors, now, deadline, cap, wait, &label);
+            }
+        }
+    }
+}
+
+/// Conservation + SLO + unique-id accounting shared by the replay tests
+/// (the same contract the serve/fault/cluster property suites pin).
+fn check_replay(r: &FleetReport, cfg: &FleetConfig, label: &str) {
+    let a = &r.admission;
+    assert_eq!(a.submitted, cfg.n_requests, "{label}: submitted");
+    assert!(a.accounted(), "{label}: stats leak requests: {a:?}");
+    let mut seen = BTreeSet::new();
+    for resp in &r.responses {
+        assert!(seen.insert(resp.id), "{label}: duplicate response id {}", resp.id);
+    }
+    for s in &r.shed {
+        assert!(seen.insert(s.id), "{label}: id {} both served and shed", s.id);
+    }
+    assert_eq!(seen.len(), cfg.n_requests, "{label}: lost request ids");
+    let slo_ns = cfg.slo_ns();
+    for resp in &r.responses {
+        assert!(resp.latency_ns() <= slo_ns, "{label}: req {} violated the SLO", resp.id);
+    }
+}
+
+/// Run one config twice; in debug builds every arrival inside is an
+/// indexed-vs-oracle assertion, and the two runs must serialize byte
+/// for byte.
+fn replay(mut cfg: FleetConfig, seed: u64, label: &str) {
+    cfg.seed = seed;
+    let r = serve_fleet(&cfg).unwrap();
+    check_replay(&r, &cfg, label);
+    let again = serve_fleet(&cfg).unwrap();
+    assert_eq!(
+        r.to_json().to_string(),
+        again.to_json().to_string(),
+        "{label}: serve JSON must be byte-identical per seed"
+    );
+}
+
+fn base_cfg() -> FleetConfig {
+    let mut cfg = FleetConfig::new(ModelConfig::bert_base(), HardwareConfig::vck5000());
+    cfg.rps = 1200.0;
+    cfg.slo_ms = 80.0;
+    cfg.n_requests = 160;
+    cfg.max_backends = 3;
+    cfg.explore_budget = Some(64);
+    cfg
+}
+
+#[test]
+fn faulted_replays_route_identically_per_seed() {
+    for seed in [1, 42] {
+        let mut cfg = base_cfg();
+        // random crash/stall/slowdown pressure straddling the run
+        cfg.faults = Some(FaultPolicy::Random { mtbf_s: 0.04, mttr_s: 0.02 });
+        replay(cfg, seed, "faulted");
+    }
+}
+
+#[test]
+fn partitioned_replays_route_identically_per_seed() {
+    for seed in [2, 99] {
+        let mut cfg = base_cfg();
+        cfg.partition = true;
+        replay(cfg, seed, "partitioned");
+    }
+    // and partitioned + faults: renegotiation redeploys hit the index
+    let mut cfg = base_cfg();
+    cfg.partition = true;
+    cfg.faults = Some(FaultPolicy::Random { mtbf_s: 0.04, mttr_s: 0.02 });
+    replay(cfg, 7, "partitioned+faults");
+}
+
+#[test]
+fn cluster_replays_route_identically_per_seed() {
+    use cat::cluster::ClusterSpec;
+    use cat::util::json::Json;
+    let src = r#"{"boards": ["vck5000", "vck5000-limited-64"]}"#;
+    let spec = ClusterSpec::from_json(&Json::parse(src).unwrap()).unwrap();
+    for seed in [5, 23] {
+        let mut cfg = FleetConfig::new(ModelConfig::bert_base(), spec.boards[0].clone());
+        cfg.rps = 1000.0;
+        cfg.slo_ms = 80.0;
+        cfg.n_requests = 160;
+        cfg.max_backends = 3;
+        cfg.explore_budget = Some(64);
+        cfg.cluster = Some(spec.clone());
+        replay(cfg, seed, "cluster");
+    }
+}
+
+/// The indexed path never admits a request the oracle would shed (and
+/// vice versa) even at a saturating deadline boundary: sweep deadlines
+/// across the admission edge on a half-degraded index.
+#[test]
+fn deadline_boundary_sweep_agrees() {
+    let services = [2 * MS, 3 * MS, 5 * MS];
+    let wait = MS / 2;
+    let mut ix = AdmissionIndex::new(&services, wait);
+    let mut mirrors: Vec<Mirror> = services
+        .iter()
+        .map(|&s| Mirror {
+            busy: 0,
+            flush: None,
+            in_flight: 0,
+            up: true,
+            base_service: s,
+            slow_until: 0,
+            slow_factor: 1.0,
+        })
+        .collect();
+    // degrade: 0 busy deep, 1 slowed, 2 idle
+    mirrors[0].busy = 10 * MS;
+    ix.set_busy_until(0, 10 * MS);
+    mirrors[1].slow_until = 20 * MS;
+    mirrors[1].slow_factor = 2.0;
+    ix.set_slowdown(1, 20 * MS, 2.0);
+    let now = 4 * MS;
+    for deadline in (0..30).map(|k| now + k * MS / 2) {
+        assert_agree(&mut ix, &mirrors, now, deadline, 4, wait, "boundary sweep");
+    }
+    assert_eq!(
+        ix.route(now, now, 4).unwrap_err(),
+        ShedReason::Slo,
+        "room exists but nothing fits a zero-slack deadline"
+    );
+}

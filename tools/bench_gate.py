@@ -61,6 +61,11 @@ import sys
 #       2-board heterogeneous cluster behind shared NIC/switch pools (the
 #       cluster-era admission plane: per-board ledgers, network-throttled
 #       members, board-aware energy rollup)
+#   serve_router_scaling        (lower)  — indexed-route 64-backend /
+#       2-backend per-pass median over the same request count (pure
+#       routing, no batcher); growth means per-request admission cost is
+#       creeping back toward a linear rescan as the fleet widens, i.e.
+#       the event-driven admission index is losing its edge
 GATED_METRICS = (
     ("engine_speedup_mha_batch64", "higher"),
     ("dse_points_per_sec", "higher"),
@@ -70,6 +75,7 @@ GATED_METRICS = (
     ("serve_trace_overhead", "lower"),
     ("serve_contention_pessimism", "lower"),
     ("serve_cluster_reqs_per_sec", "higher"),
+    ("serve_router_scaling", "lower"),
 )
 
 

@@ -29,6 +29,7 @@ def measured(
     trace_overhead=1.2,
     pessimism=1.05,
     cluster=120000.0,
+    router_scaling=4.0,
     smoke=True,
 ):
     return doc(
@@ -42,6 +43,7 @@ def measured(
             "serve_trace_overhead": trace_overhead,
             "serve_contention_pessimism": pessimism,
             "serve_cluster_reqs_per_sec": cluster,
+            "serve_router_scaling": router_scaling,
             "smoke": smoke,
         },
     )
@@ -219,6 +221,29 @@ class BenchGateTests(unittest.TestCase):
         code, out = gate(measured(), base)
         self.assertEqual(code, 0, out)
         self.assertIn("serve_cluster_reqs_per_sec", out)
+        self.assertIn("missing from baseline", out)
+
+    def test_router_scaling_growth_fails_lower_is_better(self):
+        # indexed-route 64-backend / 2-backend per-request cost ratio:
+        # growth beyond tolerance means per-arrival admission cost is
+        # creeping back toward a linear rescan as the fleet widens
+        code, out = gate(measured(router_scaling=7.0), measured(router_scaling=4.0))
+        self.assertEqual(code, 1)
+        self.assertIn("serve_router_scaling", out)
+        self.assertIn("regression", out)
+
+    def test_router_scaling_within_tolerance_passes(self):
+        code, out = gate(measured(router_scaling=5.5), measured(router_scaling=4.0))
+        self.assertEqual(code, 0, out)  # 1.375x growth < 1.5x ceiling
+
+    def test_router_scaling_missing_from_baseline_warns_and_passes(self):
+        # the PR that introduces the indexed-route bench rows predates
+        # the committed baseline — the gate must not fail it
+        base = measured()
+        del base["derived"]["serve_router_scaling"]
+        code, out = gate(measured(), base)
+        self.assertEqual(code, 0, out)
+        self.assertIn("serve_router_scaling", out)
         self.assertIn("missing from baseline", out)
 
     def test_mode_mismatch_warns_but_compares(self):
